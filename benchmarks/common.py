@@ -1,0 +1,79 @@
+"""Shared benchmark machinery: cached policy runs + CSV helpers.
+
+Every figure pulls from one memoized outcome store, so e.g. Fig 4/6/7 reuse
+the same simulated optimizations (the paper does the same: one experiment,
+several views).  Cache key = (dataset, job, policy, la, refit, b, n_runs).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import Settings, metrics, optimize
+from repro.core.space import latin_hypercube_indices
+from repro.core.lookahead import make_selector
+from repro.jobs import cherrypick_jobs, scout_jobs, tensorflow_jobs
+
+CACHE = pathlib.Path("results/benchmarks/cache")
+OUT = pathlib.Path("results/benchmarks")
+
+POLICY_SET = [("rnd", 0), ("bo", 0), ("la0", 0), ("lynceus", 1),
+              ("lynceus", 2)]
+
+
+def datasets():
+    return {"tensorflow": tensorflow_jobs(0), "scout": scout_jobs(0),
+            "cherrypick": cherrypick_jobs(0)}
+
+
+def _key(ds, job, policy, la, b, n_runs, refit):
+    return f"{ds}__{job}__{policy}{la}__b{b}__r{n_runs}__{refit}"
+
+
+def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
+               refit="frozen", seed0=0, quiet=False):
+    """Cached multi-run optimization; identical i-th bootstraps per policy."""
+    CACHE.mkdir(parents=True, exist_ok=True)
+    f = CACHE / (_key(ds_name, job.name, policy, la, b, n_runs, refit)
+                 + ".json")
+    if f.exists():
+        return json.loads(f.read_text())
+    s = Settings(policy=policy, la=la, k_gh=3, refit=refit)
+    selector = None
+    if policy != "rnd":
+        selector = make_selector(job.space, job.unit_price, job.t_max, s)
+    outs = []
+    for r in range(n_runs):
+        rng = np.random.default_rng(7777 + r)        # shared across policies
+        boot = latin_hypercube_indices(job.space, job.bootstrap_size(), rng)
+        o = optimize(job, s, budget_b=b, seed=7777 + r, bootstrap=boot,
+                     selector=selector)
+        outs.append({"cno": o.cno, "nex": o.nex, "spent": o.spent,
+                     "found": o.found_optimum,
+                     "select_s": o.select_seconds,
+                     "trajectory": list(o.trajectory)})
+        if not quiet:
+            print(f"    {ds_name}/{job.name} {policy}{la} b={b} "
+                  f"run {r + 1}/{n_runs} cno={o.cno:.3f}", flush=True)
+    f.write_text(json.dumps(outs))
+    return outs
+
+
+def cno_stats_d(outs):
+    c = np.array([o["cno"] for o in outs])
+    return {"mean": float(c.mean()), "p50": float(np.percentile(c, 50)),
+            "p90": float(np.percentile(c, 90)),
+            "p95": float(np.percentile(c, 95)), "std": float(c.std()),
+            "hit": float(np.mean([o["found"] for o in outs]))}
+
+
+def write_json(name, payload):
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def csv_line(*fields):
+    print(",".join(str(f) for f in fields), flush=True)

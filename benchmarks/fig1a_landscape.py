@@ -1,0 +1,17 @@
+"""Fig 1a: cost landscape of the TF jobs (spread, near-optimal density)."""
+
+from benchmarks.common import csv_line, datasets, write_json
+
+
+def main(n_runs=0, quick=False):
+    out = {}
+    for job in datasets()["tensorflow"]:
+        s = job.summary()
+        out[job.name] = s
+        csv_line("fig1a", job.name, "cost_spread_orders",
+                 round(s["cost_spread_orders"], 3))
+        csv_line("fig1a", job.name, "within_2x_frac",
+                 round(s["within_2x_frac"], 4))
+        csv_line("fig1a", job.name, "feasible_frac",
+                 round(s["feasible_frac"], 3))
+    write_json("fig1a", out)

@@ -1,0 +1,39 @@
+"""Fig 1b: CDF of the cost reached by IDEAL disjoint optimization.
+
+For every reference cloud config c-dagger: pick the best hyper-params on
+c-dagger (oracle), then the best cloud config for those hyper-params
+(oracle).  The paper's point: even this idealized two-phase split misses
+the joint optimum most of the time.
+"""
+
+import numpy as np
+
+from benchmarks.common import csv_line, datasets, write_json
+
+
+def main(n_runs=0, quick=False):
+    out = {}
+    for job in datasets()["tensorflow"]:
+        raw = job.space.points_raw
+        cost = np.where(job.feasible, job.cost, np.inf)
+        hp = [tuple(r) for r in raw[:, :3]]          # lr, bs, sync
+        cloud = [tuple(r) for r in raw[:, 3:]]       # vm type, vcpus
+        cnos = []
+        for cdag in sorted(set(cloud)):
+            on_c = [i for i in range(len(raw)) if cloud[i] == cdag]
+            if not np.isfinite(cost[on_c]).any():
+                continue
+            best_hp = hp[on_c[int(np.argmin(cost[on_c]))]]
+            with_hp = [i for i in range(len(raw)) if hp[i] == best_hp]
+            final = with_hp[int(np.argmin(cost[with_hp]))]
+            cnos.append(float(job.cost[final] / job.optimum_cost))
+        cnos = np.array(cnos)
+        out[job.name] = {"p50": float(np.percentile(cnos, 50)),
+                         "p90": float(np.percentile(cnos, 90)),
+                         "hit_rate": float((cnos <= 1.0 + 1e-9).mean()),
+                         "cdf": sorted(cnos.tolist())}
+        csv_line("fig1b", job.name, "p50", round(out[job.name]["p50"], 3))
+        csv_line("fig1b", job.name, "p90", round(out[job.name]["p90"], 3))
+        csv_line("fig1b", job.name, "joint_opt_found_frac",
+                 round(out[job.name]["hit_rate"], 3))
+    write_json("fig1b", out)

@@ -1,0 +1,24 @@
+"""Fig 4: CNO CDFs of Lynceus vs BO vs RND on the TensorFlow jobs."""
+
+from benchmarks.common import (cno_stats_d, csv_line, datasets, run_policy,
+                               write_json)
+
+
+def main(n_runs=20, quick=False):
+    out = {}
+    for job in datasets()["tensorflow"]:
+        row = {}
+        for policy, la in [("rnd", 0), ("bo", 0), ("lynceus", 2)]:
+            outs = run_policy("tensorflow", job, policy, la, n_runs=n_runs,
+                              quiet=True)
+            st = cno_stats_d(outs)
+            row[f"{policy}{la}"] = dict(
+                st, cdf=sorted(o["cno"] for o in outs))
+            csv_line("fig4", job.name, f"{policy}{la}_meanCNO",
+                     round(st["mean"], 3))
+            csv_line("fig4", job.name, f"{policy}{la}_p95CNO",
+                     round(st["p95"], 3))
+            csv_line("fig4", job.name, f"{policy}{la}_hit",
+                     round(st["hit"], 3))
+        out[job.name] = row
+    write_json("fig4", out)

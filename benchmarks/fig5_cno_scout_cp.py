@@ -1,0 +1,26 @@
+"""Fig 5: mean/p50/p90 CNO on the Scout and CherryPick datasets."""
+
+import numpy as np
+
+from benchmarks.common import cno_stats_d, csv_line, datasets, run_policy, \
+    write_json
+
+
+def main(n_runs=20, quick=False):
+    out = {}
+    nj = 4 if quick else None
+    for ds in ("scout", "cherrypick"):
+        jobs = datasets()[ds][:nj]
+        for policy, la in [("rnd", 0), ("bo", 0), ("lynceus", 2)]:
+            stats = [cno_stats_d(run_policy(ds, j, policy, la,
+                                            n_runs=n_runs, quiet=True))
+                     for j in jobs]
+            agg = {k: float(np.mean([s[k] for s in stats]))
+                   for k in ("mean", "p50", "p90")}
+            agg["std_across_jobs"] = float(np.std([s["mean"] for s in stats]))
+            out[f"{ds}_{policy}{la}"] = agg
+            csv_line("fig5", ds, f"{policy}{la}_meanCNO",
+                     round(agg["mean"], 3))
+            csv_line("fig5", ds, f"{policy}{la}_p90CNO",
+                     round(agg["p90"], 3))
+    write_json("fig5", out)

@@ -1,0 +1,19 @@
+"""Fig 6: lookahead ablation LA in {0,1,2} on the TF jobs."""
+
+from benchmarks.common import cno_stats_d, csv_line, datasets, run_policy, \
+    write_json
+
+
+def main(n_runs=20, quick=False):
+    out = {}
+    for job in datasets()["tensorflow"]:
+        row = {}
+        for policy, la in [("la0", 0), ("lynceus", 1), ("lynceus", 2)]:
+            st = cno_stats_d(run_policy("tensorflow", job, policy, la,
+                                        n_runs=n_runs, quiet=True))
+            row[f"LA{la}" if policy != "la0" else "LA0"] = st
+            tag = "LA0" if policy == "la0" else f"LA{la}"
+            csv_line("fig6", job.name, f"{tag}_meanCNO", round(st["mean"], 3))
+            csv_line("fig6", job.name, f"{tag}_p95CNO", round(st["p95"], 3))
+        out[job.name] = row
+    write_json("fig6", out)

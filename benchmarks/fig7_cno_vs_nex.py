@@ -1,0 +1,29 @@
+"""Fig 7: p90 of best-so-far CNO as a function of explorations performed."""
+
+import numpy as np
+
+from benchmarks.common import csv_line, datasets, run_policy, write_json
+
+
+def main(n_runs=20, quick=False):
+    job = datasets()["tensorflow"][0]                # CNN, as in the paper
+    out = {}
+    for policy, la in [("bo", 0), ("la0", 0), ("lynceus", 1),
+                       ("lynceus", 2)]:
+        outs = run_policy("tensorflow", job, policy, la, n_runs=n_runs,
+                          quiet=True)
+        max_len = max(len(o["trajectory"]) for o in outs)
+        curves = np.full((len(outs), max_len), np.nan)
+        for i, o in enumerate(outs):
+            t = o["trajectory"]
+            curves[i, :len(t)] = t
+            curves[i, len(t):] = t[-1]               # hold final value
+        p90 = np.nanpercentile(curves, 90, axis=0)
+        tag = "LA0" if policy == "la0" else (
+            "BO" if policy == "bo" else f"LA{la}")
+        out[tag] = {"p90_curve": p90.tolist(),
+                    "mean_nex": float(np.mean([o["nex"] for o in outs]))}
+        csv_line("fig7", tag, "p90CNO_at_30", round(float(p90[min(29, max_len - 1)]), 3))
+        csv_line("fig7", tag, "final_p90CNO", round(float(p90[-1]), 3))
+        csv_line("fig7", tag, "mean_nex", round(out[tag]["mean_nex"], 1))
+    write_json("fig7", out)

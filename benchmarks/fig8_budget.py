@@ -1,0 +1,22 @@
+"""Fig 8: p90 CNO vs available budget b in {1, 3, 5} (Lynceus vs BO)."""
+
+import numpy as np
+
+from benchmarks.common import cno_stats_d, csv_line, datasets, run_policy, \
+    write_json
+
+
+def main(n_runs=20, quick=False):
+    out = {}
+    budgets = [1.0, 3.0] if quick else [1.0, 3.0, 5.0]
+    for b in budgets:
+        for policy, la in [("bo", 0), ("lynceus", 2)]:
+            p90s = []
+            for job in datasets()["tensorflow"]:
+                st = cno_stats_d(run_policy("tensorflow", job, policy, la,
+                                            b=b, n_runs=n_runs, quiet=True))
+                p90s.append(st["p90"])
+            out[f"b{b}_{policy}"] = float(np.mean(p90s))
+            csv_line("fig8", f"b={b}", f"{policy}_p90CNO",
+                     round(out[f"b{b}_{policy}"], 3))
+    write_json("fig8", out)

@@ -1,0 +1,24 @@
+"""Fig 9: mean NEX vs budget — Lynceus explores more at parity of spend."""
+
+import numpy as np
+
+from benchmarks.common import csv_line, datasets, run_policy, write_json
+
+
+def main(n_runs=20, quick=False):
+    out = {}
+    budgets = [1.0, 3.0] if quick else [1.0, 3.0, 5.0]
+    for b in budgets:
+        for policy, la in [("bo", 0), ("lynceus", 2)]:
+            nexs = []
+            for job in datasets()["tensorflow"]:
+                outs = run_policy("tensorflow", job, policy, la, b=b,
+                                  n_runs=n_runs, quiet=True)
+                nexs.append(np.mean([o["nex"] for o in outs]))
+            out[f"b{b}_{policy}"] = float(np.mean(nexs))
+            csv_line("fig9", f"b={b}", f"{policy}_meanNEX",
+                     round(out[f"b{b}_{policy}"], 1))
+    for b in budgets:
+        r = out[f"b{b}_lynceus"] / out[f"b{b}_bo"]
+        csv_line("fig9", f"b={b}", "lynceus_over_bo_NEX", round(r, 2))
+    write_json("fig9", out)

@@ -1,0 +1,69 @@
+"""Kernel microbench: oracle wall-time on CPU + analytic FLOPs/bytes.
+
+interpret-mode Pallas timing is not meaningful (Python-loop emulation), so
+on CPU we report the jnp-oracle timing plus each kernel's analytic
+arithmetic intensity — the quantity that determines its TPU roofline side.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_line, write_json
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+def _timeit(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main(n_runs=0, quick=False):
+    rng = np.random.default_rng(0)
+    out = {}
+    # flash attention: B=1 H=8 S=T=1024 D=128
+    b, h, s, d = 1, 8, (512 if quick else 1024), 128
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    fn = jax.jit(lambda *a: attention_ref(*a))
+    dt = _timeit(fn, q, k, v)
+    flops = 4 * b * h * s * s * d
+    csv_line("kernels", "flash_attention", "oracle_ms", round(dt * 1e3, 2))
+    csv_line("kernels", "flash_attention", "arith_intensity",
+             round(flops / (4 * b * h * s * d * 3 + b * h * s * s * 4), 1))
+    out["flash_attention"] = dt
+
+    # decode attention: B=4 H=8 T=32768 D=128
+    t_len = 4096 if quick else 32768
+    q1 = jnp.asarray(rng.normal(size=(4, 8, d)), jnp.float32)
+    k1 = jnp.asarray(rng.normal(size=(4, 8, t_len, d)), jnp.float32)
+    v1 = jnp.asarray(rng.normal(size=(4, 8, t_len, d)), jnp.float32)
+    fn = jax.jit(lambda *a: decode_attention_ref(*a, t_len - 1))
+    dt = _timeit(fn, q1, k1, v1)
+    csv_line("kernels", "decode_attention", "oracle_ms", round(dt * 1e3, 2))
+    csv_line("kernels", "decode_attention", "arith_intensity",
+             round((4 * 4 * 8 * t_len * d) / (2 * 4 * 8 * t_len * d * 4), 2))
+    out["decode_attention"] = dt
+
+    # ssm scan: B=2 L=2048 H=8 N=64 P=64
+    l = 512 if quick else 2048
+    kk = jnp.asarray(rng.normal(size=(2, l, 8, 64)) * 0.3, jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(2, l, 8, 64)), jnp.float32)
+    qq = jnp.asarray(rng.normal(size=(2, l, 8, 64)) * 0.3, jnp.float32)
+    ld = -jnp.asarray(rng.uniform(0.01, 0.5, (2, l, 8)), jnp.float32)
+    g = jnp.asarray(rng.uniform(0, 1, (2, l, 8)), jnp.float32)
+    fn = jax.jit(lambda *a: ssm_scan_ref(*a))
+    dt = _timeit(fn, kk, vv, qq, ld, g)
+    csv_line("kernels", "ssm_scan", "oracle_ms", round(dt * 1e3, 2))
+    out["ssm_scan"] = dt
+    write_json("kernels_bench", out)

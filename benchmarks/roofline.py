@@ -1,0 +1,38 @@
+"""Roofline table: aggregate the dry-run sweep artifacts (§Roofline)."""
+
+import json
+import pathlib
+
+from benchmarks.common import csv_line, write_json
+
+
+def main(n_runs=0, quick=False, dryrun_dir="results/dryrun"):
+    rows = []
+    d = pathlib.Path(dryrun_dir)
+    if not d.exists():
+        csv_line("roofline", "status", "no dry-run artifacts yet")
+        return
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        if "skipped" in r:
+            rows.append({"cell": f.stem, "skipped": r["skipped"]})
+            csv_line("roofline", f.stem, "skipped", r["skipped"][:40])
+            continue
+        if "error" in r:
+            rows.append({"cell": f.stem, "error": True})
+            csv_line("roofline", f.stem, "ERROR", "see json")
+            continue
+        t = r["roofline"]
+        rows.append({
+            "cell": f.stem, "bound": t["bound"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "step_s": t["step_s"],
+            "mfu_upper_bound": r.get("mfu_upper_bound"),
+            "model_flops_ratio": r.get("model_flops_ratio"),
+            "compile_s": r.get("compile_s"),
+        })
+        csv_line("roofline", f.stem, "bound", t["bound"])
+        csv_line("roofline", f.stem, "step_s", f"{t['step_s']:.4g}")
+        csv_line("roofline", f.stem, "mfu_ub",
+                 f"{r.get('mfu_upper_bound', 0):.4f}")
+    write_json("roofline", rows)

@@ -1,0 +1,58 @@
+"""Benchmark harness: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--runs N] [--quick] [--only fig4,...]
+
+Prints ``bench,key,value`` CSV lines; full artifacts land in
+results/benchmarks/*.json.  Figures share one cached outcome store
+(benchmarks.common), mirroring the paper's one-experiment-many-views layout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (fig1a_landscape, fig1b_disjoint, fig4_cno_tf,
+                        fig5_cno_scout_cp, fig6_la_ablation, fig7_cno_vs_nex,
+                        fig8_budget, fig9_nex, table3_latency, roofline,
+                        kernels_bench)
+
+SECTIONS = {
+    "fig1a": fig1a_landscape.main,
+    "fig1b": fig1b_disjoint.main,
+    "fig4": fig4_cno_tf.main,
+    "fig5": fig5_cno_scout_cp.main,
+    "fig6": fig6_la_ablation.main,
+    "fig7": fig7_cno_vs_nex.main,
+    "fig8": fig8_budget.main,
+    "fig9": fig9_nex.main,
+    "table3": table3_latency.main,
+    "roofline": roofline.main,
+    "kernels": kernels_bench.main,
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=20)
+    ap.add_argument("--quick", action="store_true",
+                    help="5 runs / reduced sweeps (CI smoke)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    n_runs = 5 if args.quick else args.runs
+    only = args.only.split(",") if args.only else list(SECTIONS)
+    for name in only:
+        t0 = time.time()
+        print(f"== {name} ==", flush=True)
+        try:
+            SECTIONS[name](n_runs=n_runs, quick=args.quick)
+        except Exception as e:  # keep the harness going; report at the end
+            import traceback
+            traceback.print_exc()
+            print(f"bench,{name},ERROR,{type(e).__name__}", flush=True)
+        print(f"bench,{name},seconds,{time.time() - t0:.1f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

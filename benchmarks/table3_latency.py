@@ -1,0 +1,55 @@
+"""Table 3: average time to compute the next configuration (TF-size space).
+
+Paper (Java/Weka, 8 cores): BO/LA0 0.006/0.006 s, LA1 0.4 s, LA2 1.23 s.
+Ours: jit-compiled, whole-frontier-batched JAX — reported for both the
+paper-faithful 'exact' per-state refits and the frozen-structure fast path.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_line, datasets, write_json
+from repro.core import Settings, make_selector
+from repro.core.space import latin_hypercube_indices
+
+
+def _measure(job, settings, reps=3):
+    sel = make_selector(job.space, job.unit_price, job.t_max, settings)
+    m = job.space.n_points
+    y = np.zeros(m, np.float32)
+    mask = np.zeros(m, bool)
+    rng = np.random.default_rng(0)
+    for i in latin_hypercube_indices(job.space, job.bootstrap_size(), rng):
+        y[i] = job.cost[i]
+        mask[i] = True
+    key = jax.random.PRNGKey(0)
+    idx, _, _ = sel(key, y, mask, job.budget(3.0))      # compile
+    jax.block_until_ready(idx)
+    t0 = time.perf_counter()
+    for r in range(reps):
+        idx, _, _ = sel(jax.random.fold_in(key, r), y, mask, job.budget(3.0))
+    jax.block_until_ready(idx)
+    return (time.perf_counter() - t0) / reps
+
+
+def main(n_runs=0, quick=False):
+    job = datasets()["tensorflow"][0]
+    out = {}
+    grid = [("bo", 0, "frozen"), ("la0", 0, "frozen"),
+            ("lynceus", 1, "frozen"), ("lynceus", 2, "frozen"),
+            ("lynceus", 1, "exact")]
+    if not quick:
+        grid.append(("lynceus", 2, "exact"))
+    for policy, la, refit in grid:
+        s = Settings(policy=policy, la=la, k_gh=3, refit=refit)
+        dt = _measure(job, s, reps=2 if refit == "exact" else 5)
+        tag = ("BO" if policy == "bo" else
+               "LA0" if policy == "la0" else f"LA{la}") + f"_{refit}"
+        out[tag] = dt
+        csv_line("table3", tag, "seconds_per_next", round(dt, 4))
+    paper = {"BO": 0.006, "LA0": 0.006, "LA1": 0.4, "LA2": 1.23}
+    for k, v in paper.items():
+        csv_line("table3", f"paper_{k}", "seconds_per_next", v)
+    write_json("table3", out)

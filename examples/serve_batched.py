@@ -1,0 +1,37 @@
+"""Batched serving example: prefill + greedy decode with ring KV caches.
+
+Serves a reduced Mixtral-family MoE model (sliding-window attention, so the
+KV cache is a rolling ring buffer) for a batch of 4 requests, decoding past
+the window to exercise cache rollover.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import generate
+from repro.data.pipeline import make_batch
+from repro.models import RuntimeFlags, build_model
+import jax.numpy as jnp
+
+
+def main():
+    cfg = get_smoke_config("mixtral-8x22b")          # window=16 smoke config
+    model = build_model(cfg)
+    flags = RuntimeFlags(attn_impl="naive", loss_chunks=1,
+                         compute_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0), jnp.float32)
+    prompt_len, gen = 24, 40                         # decode far past window
+    batch = make_batch(cfg, "serve", 4, prompt_len, seed=0, step=0)
+    batch = {"tokens": jnp.asarray(batch["tokens"])}
+    toks, tps = generate(model, params, flags, batch, prompt_len, gen,
+                         cache_len=prompt_len + gen)
+    print(f"arch={cfg.name} window={cfg.window} batch=4 "
+          f"generated={toks.shape[1]} tokens/seq at {tps:.0f} tok/s")
+    print("sample:", toks[0, :12].tolist())
+    assert bool(jnp.isfinite(jnp.asarray(tps)))
+
+
+if __name__ == "__main__":
+    main()

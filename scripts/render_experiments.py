@@ -1,0 +1,87 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from sweep artifacts.
+
+  PYTHONPATH=src python scripts/render_experiments.py results/dryrun
+"""
+
+import json
+import pathlib
+import sys
+
+from repro.configs import ARCHS
+from repro.launch.specs import SHAPES
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def main(d="results/dryrun"):
+    d = pathlib.Path(d)
+    print("### §Dry-run — all 40 cells x {single 16x16, multi 2x16x16}\n")
+    print("| arch | shape | mesh | status | compile | args/dev | temp/dev |"
+          " collectives |")
+    print("|---|---|---|---|---|---|---|---|")
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                f = d / f"{arch}__{shape}__{mesh}.json"
+                if not f.exists():
+                    print(f"| {arch} | {shape} | {mesh} | PENDING | | | | |")
+                    continue
+                r = json.loads(f.read_text())
+                if "skipped" in r:
+                    print(f"| {arch} | {shape} | {mesh} | skip: "
+                          f"{r['skipped'][:48]} | | | | |")
+                    continue
+                if "error" in r:
+                    print(f"| {arch} | {shape} | {mesh} | **ERROR** | | | | |")
+                    continue
+                rows.append(r)
+                cc = r.get("collectives", {}).get("counts", {})
+                cstr = " ".join(f"{k.split('-')[0][:2]}{k.split('-')[1][:3] if '-' in k else ''}:{v}"
+                                for k, v in sorted(cc.items()))
+                print(f"| {arch} | {shape} | {mesh} | ok | "
+                      f"{r['compile_s']:.0f}s | "
+                      f"{fmt_bytes(r.get('argument_size_in_bytes'))} | "
+                      f"{fmt_bytes(r.get('temp_size_in_bytes'))} | {cstr} |")
+
+    print("\n### §Roofline — per-cell terms (single-pod; seconds/step/chip)\n")
+    print("| arch | shape | compute | memory | collective | bound | "
+          "6ND/HLO | MFU-UB | what moves the bound |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    hint = {
+        ("collective",): "shard expert/weight gathers better (EP/TP), "
+                         "overlap or shrink FSDP all-gathers",
+        ("memory",): "microbatch + remat to cut activation traffic; shard "
+                     "replicated tensors (heads/cache) over free axes",
+        ("compute",): "already compute-bound: raise useful-flops ratio "
+                      "(less remat recompute, tighter capacity factor)",
+    }
+    for r in rows:
+        if r["mesh"] != "single":
+            continue
+        t = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} | "
+              f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+              f"**{t['bound']}** | {r.get('model_flops_ratio', 0):.2f} | "
+              f"{r.get('mfu_upper_bound', 0):.3f} | "
+              f"{hint[(t['bound'],)][:70]} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

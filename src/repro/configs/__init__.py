@@ -1,0 +1,33 @@
+"""Assigned-architecture configs: one module per arch + registry.
+
+``get_config(arch_id)`` returns the full published config;
+``get_smoke_config(arch_id)`` returns a reduced same-family config for
+CPU smoke tests (few layers, narrow widths, tiny vocab/experts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCHS = [
+    "gemma-2b", "deepseek-7b", "granite-3-2b", "gemma2-9b", "xlstm-125m",
+    "hubert-xlarge", "deepseek-v3-671b", "mixtral-8x22b", "zamba2-7b",
+    "qwen2-vl-2b",
+]
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get_config(arch: str):
+    if arch not in _MOD:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    return importlib.import_module(f"repro.configs.{_MOD[arch]}").CONFIG
+
+
+def get_smoke_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{_MOD[arch]}")
+    return mod.smoke()
+
+
+__all__ = ["ARCHS", "get_config", "get_smoke_config"]

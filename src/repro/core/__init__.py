@@ -1,0 +1,23 @@
+"""Lynceus core: budget-aware, long-sighted Bayesian optimization in JAX.
+
+The paper's primary contribution.  Layout:
+
+* ``space``       — discrete configuration spaces + Latin-Hypercube bootstrap
+* ``trees``       — fixed-shape bagged regression-tree surrogate (vmap-able)
+* ``acquisition`` — EI / constrained EI / budget filter / Gauss-Hermite
+* ``lookahead``   — NextConfig/ExplorePaths (Algs. 1-2) as one jitted program
+* ``optimizer``   — the optimization loop + BO / LA0 / RND baselines
+* ``metrics``     — CNO / NEX aggregation
+* ``extensions``  — §4.4: multiple constraints, setup costs
+"""
+
+from repro.core.space import DiscreteSpace, latin_hypercube_indices
+from repro.core.lookahead import Settings, select_next, make_selector
+from repro.core.optimizer import Outcome, optimize, run_many
+from repro.core import acquisition, metrics, trees
+
+__all__ = [
+    "DiscreteSpace", "latin_hypercube_indices", "Settings", "select_next",
+    "make_selector", "Outcome", "optimize", "run_many", "acquisition",
+    "metrics", "trees",
+]

@@ -1,0 +1,292 @@
+"""Paper §4.4 extensions: multiple constraints and setup costs.
+
+These are optional features layered on the core engine; the paper describes
+them but does not evaluate them, so they get functional implementations,
+unit tests, and an example (examples/multi_constraint.py) rather than
+benchmark treatment.
+
+Multiple constraints
+--------------------
+``EI_c(x) = EI(x) · Π_i P(m_i(x) <= t_i)`` with one independently-fit forest
+per constraint metric.  The exploration-path speculation keeps branching on
+*cost* only (K nodes); speculating the full ``K^(I+1)`` Cartesian product
+(paper's sketch) is exposed via ``cartesian_gh`` for I as small as the
+example uses, with weight-product pruning of negligible branches.
+
+Setup costs
+-----------
+``setup_cost(χ, x)`` is added to the spend of every (simulated or real) run,
+making path order matter: Lynceus will prefer paths that re-use the deployed
+cluster.  The default model charges a per-VM boot fee when the VM type
+changes and a delta fee when only the count grows (paper's example).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import TYPE_CHECKING, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acquisition as acq
+from repro.core import trees
+from repro.core.space import DiscreteSpace, latin_hypercube_indices
+
+if TYPE_CHECKING:  # avoid the core <-> jobs import cycle at runtime
+    from repro.jobs.tables import JobTable
+
+__all__ = [
+    "ConstrainedJob", "multi_constraint_probs", "cartesian_gh",
+    "default_setup_cost", "optimize_with_setup_costs",
+    "optimize_multi_constraint",
+]
+
+
+# --------------------------------------------------------------------------- #
+# Multiple constraints
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ConstrainedJob:
+    """A job table plus extra constraint metrics ``m_i(x) <= t_i``."""
+
+    job: JobTable
+    metrics: dict[str, np.ndarray]      # name -> [M] measured metric values
+    thresholds: dict[str, float]        # name -> t_i
+
+    @property
+    def feasible(self) -> np.ndarray:
+        ok = self.job.feasible.copy()
+        for name, vals in self.metrics.items():
+            ok &= vals <= self.thresholds[name]
+        return ok
+
+    @property
+    def optimum_index(self) -> int:
+        c = np.where(self.feasible, self.job.cost, np.inf)
+        if not np.isfinite(c).any():
+            raise ValueError("no feasible config under joint constraints")
+        return int(c.argmin())
+
+    def cno(self, index: int) -> float:
+        return float(self.job.cost[index] / self.job.cost[self.optimum_index])
+
+
+def multi_constraint_probs(key, metric_obs: Sequence[np.ndarray], mask,
+                           thresholds_t: Sequence[float], space: DiscreteSpace,
+                           *, n_trees: int = 10, depth: int = 4) -> jnp.ndarray:
+    """Π_i P(m_i <= t_i) over the whole space, one forest per metric."""
+    points = jnp.asarray(space.points)
+    left = trees.make_left_table(space.points, space.thresholds)
+    thr = jnp.asarray(space.thresholds)
+    prob = jnp.ones(space.n_points)
+    for i, (obs, t_i) in enumerate(zip(metric_obs, thresholds_t)):
+        k = jax.random.fold_in(key, i)
+        floor = 1e-6 + 0.01 * float(np.std(np.asarray(obs)[np.asarray(mask)]) or 1.0)
+        mu, sigma = trees.fit_predict_mu_sigma(
+            k, jnp.asarray(obs, jnp.float32), jnp.asarray(mask), points, left,
+            thr, jnp.float32(floor), n_trees=n_trees, depth=depth)
+        prob = prob * acq.prob_leq(mu, sigma, t_i)
+    return prob
+
+
+def cartesian_gh(mus: Sequence[float], sigmas: Sequence[float], k: int,
+                 prune: float = 1e-3) -> tuple[np.ndarray, np.ndarray]:
+    """K^(I+1) Gauss-Hermite product expansion with weight pruning.
+
+    Returns (values [P, I+1], weights [P]) where branches whose joint weight
+    is below ``prune`` (relative) are dropped and the rest renormalized —
+    the paper's 'numerical methods can prune unnecessary pairs'.
+    """
+    xi, w = acq.gauss_hermite(k)
+    vals, wts = [], []
+    for combo in itertools.product(range(k), repeat=len(mus)):
+        weight = float(np.prod([w[c] for c in combo]))
+        vals.append([m + np.sqrt(2.0) * s * xi[c]
+                     for m, s, c in zip(mus, sigmas, combo)])
+        wts.append(weight)
+    vals = np.asarray(vals)
+    wts = np.asarray(wts)
+    keep = wts >= prune * wts.max()
+    vals, wts = vals[keep], wts[keep]
+    return vals, wts / wts.sum()
+
+
+def optimize_multi_constraint(cjob: ConstrainedJob, *, budget_b: float = 3.0,
+                              seed: int = 0, n_trees: int = 10,
+                              depth: int = 4) -> dict:
+    """Greedy EI_c/E[cost] loop with the product-of-probabilities acquisition.
+
+    The cost model speculates as usual; constraint forests are refit each
+    step.  Returns the recommendation and its joint-constraint CNO.
+    """
+    job = cjob.job
+    rng = np.random.default_rng(seed)
+    space = job.space
+    n_boot = job.bootstrap_size()
+    boot = latin_hypercube_indices(space, n_boot, rng)
+    cost = job.cost
+
+    m = space.n_points
+    y = np.zeros(m, np.float32)
+    mask = np.zeros(m, bool)
+    metric_obs = {k: np.zeros(m, np.float32) for k in cjob.metrics}
+    beta = job.budget(budget_b)
+    explored: list[int] = []
+
+    def run(i: int):
+        nonlocal beta
+        y[i] = cost[i]
+        for k in metric_obs:
+            metric_obs[k][i] = cjob.metrics[k][i]
+        mask[i] = True
+        explored.append(i)
+        beta -= cost[i]
+
+    for i in boot:
+        run(int(i))
+
+    points = jnp.asarray(space.points)
+    left = trees.make_left_table(space.points, space.thresholds)
+    thr = jnp.asarray(space.thresholds)
+    key = jax.random.PRNGKey(seed)
+    names = list(cjob.metrics)
+    while True:
+        key, k_cost, k_con = jax.random.split(key, 3)
+        obs_y = y[mask]
+        floor = 1e-6 + 0.01 * float(obs_y.std() if obs_y.size else 1.0)
+        mu, sigma = trees.fit_predict_mu_sigma(
+            k_cost, jnp.asarray(y), jnp.asarray(mask), points, left, thr,
+            jnp.float32(floor), n_trees=n_trees, depth=depth)
+        # time constraint through the cost model + extra metric constraints
+        p_time = acq.constraint_prob(mu, sigma, jnp.asarray(job.unit_price,
+                                     jnp.float32), job.t_max)
+        p_rest = multi_constraint_probs(
+            k_con, [metric_obs[k] for k in names], mask,
+            [cjob.thresholds[k] for k in names], space,
+            n_trees=n_trees, depth=depth)
+        feas_obs = mask & (job.runtime <= job.t_max)
+        for k in names:
+            feas_obs &= ~mask | (cjob.metrics[k] <= cjob.thresholds[k])
+        best = float(np.min(np.where(feas_obs & mask, cost, np.inf)))
+        ystar = best if np.isfinite(best) else float(
+            np.max(np.where(mask, cost, -np.inf)) + 3 * float(jnp.max(sigma)))
+        ei = acq.expected_improvement(mu, sigma, ystar)
+        eic = ei * p_time * p_rest
+        gamma = (~mask) & np.asarray(acq.budget_ok(mu, sigma, beta))
+        if not gamma.any():
+            break
+        score = np.where(gamma, np.asarray(eic) / np.maximum(np.asarray(mu), 1e-9),
+                         -np.inf)
+        nxt = int(score.argmax())
+        if cost[nxt] > beta:
+            break
+        run(nxt)
+
+    arr = np.array(explored)
+    feas = cjob.feasible[arr]
+    sub = arr[feas] if feas.any() else arr
+    rec = int(sub[cost[sub].argmin()])
+    return {"recommended": rec, "cno": cjob.cno(rec), "nex": len(explored),
+            "explored": explored}
+
+
+# --------------------------------------------------------------------------- #
+# Setup costs
+# --------------------------------------------------------------------------- #
+def default_setup_cost(space: DiscreteSpace, *, vm_type_dim: str = "vm_type",
+                       n_dim: str = "cluster_vcpus", boot_fee: float = 0.002
+                       ) -> Callable[[int | None, int], float]:
+    """Paper §4.4 example model: booting new/changed VMs costs money.
+
+    Charged per raw unit of the cluster-size dimension: a type change
+    re-boots everything; growing the cluster boots only the delta; shrinking
+    or re-using is free.
+    """
+    names = list(space.names)
+    ti = names.index(vm_type_dim)
+    ni = names.index(n_dim)
+    raw = space.points_raw
+
+    def setup(prev: int | None, nxt: int) -> float:
+        if prev is None:
+            return boot_fee * float(raw[nxt, ni])
+        if raw[prev, ti] != raw[nxt, ti]:
+            return boot_fee * float(raw[nxt, ni])
+        delta = float(raw[nxt, ni]) - float(raw[prev, ni])
+        return boot_fee * max(delta, 0.0)
+
+    return setup
+
+
+def optimize_with_setup_costs(job: JobTable, settings, *, setup_cost,
+                              budget_b: float = 3.0, seed: int = 0) -> dict:
+    """Greedy cost-aware loop where each step's spend includes setup(χ, x).
+
+    The acquisition denominator becomes ``E[cost(x)] + setup(χ, x)`` (Alg. 2
+    lines 3/19 amendment), so config order matters; the budget is likewise
+    debited for setup.  Returns outcome dict with total setup spend.
+    """
+    from repro.core import lookahead  # local import to avoid cycle
+
+    rng = np.random.default_rng(seed)
+    space = job.space
+    boot = latin_hypercube_indices(space, job.bootstrap_size(), rng)
+    cost = job.cost
+    m = space.n_points
+    y = np.zeros(m, np.float32)
+    mask = np.zeros(m, bool)
+    beta = job.budget(budget_b)
+    chi: int | None = None
+    explored: list[int] = []
+    setup_spent = 0.0
+
+    def run(i: int):
+        nonlocal beta, chi, setup_spent
+        fee = setup_cost(chi, i)
+        y[i] = cost[i]
+        mask[i] = True
+        explored.append(i)
+        beta -= cost[i] + fee
+        setup_spent += fee
+        chi = i
+
+    for i in boot:
+        run(int(i))
+
+    points = jnp.asarray(space.points)
+    left = trees.make_left_table(space.points, space.thresholds)
+    thr = jnp.asarray(space.thresholds)
+    key = jax.random.PRNGKey(seed)
+    u = jnp.asarray(job.unit_price, jnp.float32)
+    while True:
+        key, sub = jax.random.split(key)
+        obs_y = y[mask]
+        floor = 1e-6 + 0.01 * float(obs_y.std() if obs_y.size else 1.0)
+        mu, sigma = trees.fit_predict_mu_sigma(
+            sub, jnp.asarray(y), jnp.asarray(mask), points, left, thr,
+            jnp.float32(floor), n_trees=settings.n_trees, depth=settings.depth)
+        feas_obs = mask & (job.runtime <= job.t_max)
+        best = float(np.min(np.where(feas_obs, cost, np.inf)))
+        ystar = best if np.isfinite(best) else float(
+            np.max(np.where(mask, cost, -np.inf)) + 3 * float(jnp.max(sigma)))
+        eic = np.asarray(acq.ei_constrained(mu, sigma, ystar, u, job.t_max))
+        fees = np.array([setup_cost(chi, i) for i in range(m)])
+        tot = np.asarray(mu) + fees
+        gamma = (~mask) & np.asarray(acq.budget_ok(mu, sigma, beta - fees))
+        if not gamma.any():
+            break
+        score = np.where(gamma, eic / np.maximum(tot, 1e-9), -np.inf)
+        nxt = int(score.argmax())
+        if cost[nxt] + fees[nxt] > beta:
+            break
+        run(nxt)
+
+    arr = np.array(explored)
+    feas = job.feasible[arr]
+    sub_arr = arr[feas] if feas.any() else arr
+    rec = int(sub_arr[cost[sub_arr].argmin()])
+    return {"recommended": rec, "cno": job.cno(rec), "nex": len(explored),
+            "setup_spent": setup_spent, "explored": explored}

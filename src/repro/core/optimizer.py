@@ -1,0 +1,228 @@
+"""The Lynceus optimization loop (paper Alg. 1) and its baselines.
+
+``optimize`` drives one full optimization of a :class:`~repro.jobs.tables.
+JobTable` (the paper's simulation substrate): LHS bootstrap, then iterate
+``select_next → run(config) → update state`` until the budget filter comes
+back empty.  The recommendation is the cheapest *feasible* config tried
+(Alg. 1 line 12).
+
+Policies
+--------
+* ``lynceus`` — the paper's budget-aware, long-sighted selector (LA ≥ 1);
+* ``la0``     — cost-normalized greedy `argmax EI_c/E[cost]` (paper's LA = 0);
+* ``bo``      — CherryPick-style greedy `argmax EI_c`, cost-unaware but
+  budget-terminated (runs until the *spent* budget would be exceeded);
+* ``rnd``     — uniform random exploration under the same budget.
+
+All policies consume the budget identically (bootstrap included), so CNO/NEX
+comparisons are at parity of spend — exactly the paper's methodology (§5.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Callable
+
+import jax
+import numpy as np
+
+from repro.core import lookahead
+from repro.core.space import latin_hypercube_indices
+
+if TYPE_CHECKING:  # avoid the core <-> jobs import cycle at runtime
+    from repro.jobs.tables import JobTable
+
+__all__ = ["Outcome", "optimize", "run_many"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Outcome:
+    """Result of one optimization run."""
+
+    job: str
+    policy: str
+    recommended: int            # config index recommended at the end
+    cno: float                  # cost(recommended) / cost(optimum)
+    nex: int                    # number of explorations (bootstrap included)
+    spent: float                # total profiling spend ($)
+    budget: float               # the budget B it ran under
+    found_optimum: bool
+    explored: tuple[int, ...]   # exploration order (config indices)
+    select_seconds: float       # mean wall-time of next-config selection
+    trajectory: tuple[float, ...]  # best feasible CNO after each exploration
+
+
+def _recommend(job: JobTable, explored: list[int]) -> int:
+    """Cheapest feasible explored config; cheapest explored if none feasible."""
+    arr = np.array(explored, dtype=int)
+    cost = job.cost[arr]
+    feas = job.feasible[arr]
+    if feas.any():
+        return int(arr[feas][cost[feas].argmin()])
+    return int(arr[cost.argmin()])
+
+
+def _trajectory_point(job: JobTable, explored: list[int]) -> float:
+    return job.cno(_recommend(job, explored))
+
+
+def optimize(job: JobTable, settings: lookahead.Settings, *, budget_b: float = 3.0,
+             seed: int = 0, bootstrap: np.ndarray | None = None,
+             selector: Callable | None = None) -> Outcome:
+    """Run one optimization of ``job`` under policy ``settings.policy``.
+
+    Args:
+      job: fully profiled job table (the simulator looks costs up).
+      settings: selector knobs; ``settings.policy`` picks the algorithm.
+      budget_b: the paper's ``b`` multiplier — B = N·m̃·b.
+      seed: drives LHS bootstrap, bootstrap resampling and RND.
+      bootstrap: optional explicit bootstrap indices (paper: all optimizers
+        share the same i-th bootstrap for fairness — pass the same array).
+      selector: pre-built ``make_selector`` closure to reuse compiled code
+        across runs on the same space.
+    """
+    rng = np.random.default_rng(seed)
+    n_boot = job.bootstrap_size()
+    budget = job.budget(budget_b)
+    cost = job.cost
+
+    if bootstrap is None:
+        bootstrap = latin_hypercube_indices(job.space, n_boot, rng)
+
+    m = job.space.n_points
+    y = np.zeros(m, dtype=np.float32)
+    mask = np.zeros(m, dtype=bool)
+    explored: list[int] = []
+    beta = budget
+    trajectory: list[float] = []
+
+    def run_config(i: int) -> None:
+        nonlocal beta
+        y[i] = cost[i]
+        mask[i] = True
+        explored.append(int(i))
+        beta -= cost[i]
+        trajectory.append(_trajectory_point(job, explored))
+
+    for i in bootstrap:                       # Alg. 1 lines 6-8
+        run_config(int(i))
+
+    select_times: list[float] = []
+    if settings.policy == "rnd":
+        # Random exploration at parity of budget: keep drawing affordable,
+        # untested configs (true-cost check — RND has no model).
+        while True:
+            free = np.where(~mask & (cost <= beta))[0]
+            if free.size == 0:
+                break
+            run_config(int(rng.choice(free)))
+    else:
+        sel = selector or lookahead.make_selector(
+            job.space, job.unit_price, job.t_max, settings)
+        key = jax.random.PRNGKey(seed)
+        while True:
+            key, sub = jax.random.split(key)
+            t0 = time.perf_counter()
+            idx, valid, _ = sel(sub, y, mask, max(beta, 0.0))
+            idx = int(idx)
+            valid = bool(valid)
+            select_times.append(time.perf_counter() - t0)
+            if not valid:                     # Gamma empty -> stop (line 11)
+                break
+            if settings.policy == "bo" and cost[idx] > beta:
+                # Cost-unaware greedy BO stops when its pick is unaffordable
+                # (CherryPick terminates on budget depletion in our harness).
+                break
+            run_config(idx)
+            if beta <= 0:
+                break
+
+    rec = _recommend(job, explored)
+    return Outcome(
+        job=job.name, policy=settings.policy, recommended=rec,
+        cno=job.cno(rec), nex=len(explored), spent=float(budget - beta),
+        budget=float(budget), found_optimum=(rec == job.optimum_index),
+        explored=tuple(explored),
+        select_seconds=float(np.mean(select_times)) if select_times else 0.0,
+        trajectory=tuple(trajectory))
+
+
+def optimize_live(evaluator, space, unit_price, t_max: float,
+                  settings: lookahead.Settings, *, budget: float,
+                  n_bootstrap: int | None = None, seed: int = 0,
+                  log=None) -> dict:
+    """Sequential optimization against a LIVE evaluator (no precomputed table).
+
+    This is the framework-integration path (launch/autotune.py): each "run"
+    of a configuration actually profiles it (a dry-run compile + roofline
+    estimate, or a timed real step) and charges its cost against the budget.
+
+    Args:
+      evaluator: f(index) -> (runtime_seconds, cost_dollars) for config i.
+      unit_price: [M] $/h while a config runs (for the EI_c constraint).
+      t_max: runtime SLO in the same units as evaluator's runtime.
+      budget: total profiling budget in cost units.
+    Returns dict with explored, costs, runtimes, recommended, trajectory.
+    """
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    m = space.n_points
+    n_boot = n_bootstrap or max(int(np.ceil(0.03 * m)), space.n_dims)
+    y = np.zeros(m, np.float32)
+    runtimes = np.zeros(m, np.float32)
+    mask = np.zeros(m, bool)
+    explored: list[int] = []
+    beta = budget
+
+    def run_config(i: int):
+        nonlocal beta
+        t, c = evaluator(int(i))
+        y[i] = c
+        runtimes[i] = t
+        mask[i] = True
+        explored.append(int(i))
+        beta -= c
+        if log:
+            log(f"[tune] cfg {i}: runtime {t:.4f}s cost {c:.4f} "
+                f"beta {beta:.3f}")
+
+    for i in latin_hypercube_indices(space, n_boot, rng):
+        run_config(i)
+
+    sel = lookahead.make_selector(space, unit_price, t_max, settings)
+    key = jax.random.PRNGKey(seed)
+    while beta > 0:
+        key, sub = jax.random.split(key)
+        idx, valid, _ = sel(sub, y, mask, max(beta, 0.0))
+        if not bool(valid):
+            break
+        run_config(int(idx))
+
+    arr = np.array(explored)
+    feas = runtimes[arr] <= t_max
+    sub_arr = arr[feas] if feas.any() else arr
+    rec = int(sub_arr[y[sub_arr].argmin()])
+    return {"recommended": rec, "explored": explored,
+            "costs": y[arr].tolist(), "runtimes": runtimes[arr].tolist(),
+            "spent": float(budget - beta), "budget": budget,
+            "best_runtime": float(runtimes[rec]), "best_cost": float(y[rec])}
+
+
+def run_many(job: JobTable, settings: lookahead.Settings, *, n_runs: int = 100,
+             budget_b: float = 3.0, seed: int = 0) -> list[Outcome]:
+    """Paper methodology: ≥100 runs, each with a different bootstrap; all
+    policies see the same i-th bootstrap (pass the same seed across policies).
+    """
+    selector = None
+    if settings.policy != "rnd":
+        selector = lookahead.make_selector(
+            job.space, job.unit_price, job.t_max, settings)
+    outs = []
+    for r in range(n_runs):
+        rng = np.random.default_rng(seed * 100003 + r)
+        boot = latin_hypercube_indices(job.space, job.bootstrap_size(), rng)
+        outs.append(optimize(job, settings, budget_b=budget_b,
+                             seed=seed * 100003 + r, bootstrap=boot,
+                             selector=selector))
+    return outs

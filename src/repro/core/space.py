@@ -1,0 +1,142 @@
+"""Discrete configuration spaces for Lynceus.
+
+A configuration space is a finite set of points over F mixed-type dimensions
+(VM type, cluster size, hyper-parameters, ...).  Lynceus only ever evaluates
+members of this set, so we materialize the whole grid as an ``[M, F]`` float
+matrix (categoricals are ordinal-encoded; trees are invariant to monotone
+encodings).  Features are normalized to [0, 1] per dimension so that the
+tree-split threshold grids are shared, fixed-shape arrays — the property that
+lets the whole fit/predict path be jit-compiled once and reused for every
+speculative lookahead state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Mapping, Sequence
+
+import numpy as np
+
+__all__ = ["DiscreteSpace", "latin_hypercube_indices"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DiscreteSpace:
+    """A finite configuration space.
+
+    Attributes:
+      names: per-dimension feature names, length F.
+      points_raw: ``[M, F]`` raw (un-normalized) feature values.
+      points: ``[M, F]`` features normalized to [0, 1] per dimension.
+      thresholds: ``[F, T]`` normalized candidate split thresholds (midpoints
+        of consecutive unique values), right-padded with ``+inf`` so every
+        feature column has the same static width T.
+    """
+
+    names: tuple[str, ...]
+    points_raw: np.ndarray
+    points: np.ndarray
+    thresholds: np.ndarray
+
+    @property
+    def n_points(self) -> int:
+        return int(self.points.shape[0])
+
+    @property
+    def n_dims(self) -> int:
+        return int(self.points.shape[1])
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_points(cls, names: Sequence[str], points_raw: np.ndarray,
+                    max_thresholds: int | None = None) -> "DiscreteSpace":
+        points_raw = np.asarray(points_raw, dtype=np.float64)
+        if points_raw.ndim != 2:
+            raise ValueError(f"points must be [M, F], got {points_raw.shape}")
+        m, f = points_raw.shape
+        if len(names) != f:
+            raise ValueError("len(names) != n_dims")
+        # Per-dim [0, 1] normalization (constant dims map to 0.5).
+        lo = points_raw.min(axis=0)
+        hi = points_raw.max(axis=0)
+        span = np.where(hi > lo, hi - lo, 1.0)
+        points = (points_raw - lo) / span
+        points = np.where(hi > lo, points, 0.5)
+
+        # Candidate thresholds: midpoints between consecutive unique values.
+        per_dim: list[np.ndarray] = []
+        for d in range(f):
+            uniq = np.unique(points[:, d])
+            mids = (uniq[1:] + uniq[:-1]) / 2.0 if uniq.size > 1 else np.zeros((0,))
+            per_dim.append(mids)
+        width = max(1, max(t.size for t in per_dim))
+        if max_thresholds is not None and width > max_thresholds:
+            # Subsample evenly to bound the static threshold width.
+            per_dim = [
+                t if t.size <= max_thresholds
+                else t[np.linspace(0, t.size - 1, max_thresholds).round().astype(int)]
+                for t in per_dim
+            ]
+            width = max_thresholds
+        thr = np.full((f, width), np.inf)
+        for d, t in enumerate(per_dim):
+            thr[d, : t.size] = t
+        return cls(tuple(names), points_raw,
+                   points.astype(np.float32), thr.astype(np.float32))
+
+    @classmethod
+    def from_grid(cls, dims: Mapping[str, Sequence[float]],
+                  valid=None, max_thresholds: int | None = None) -> "DiscreteSpace":
+        """Cartesian product of per-dimension value lists.
+
+        Args:
+          dims: ordered mapping name -> values.
+          valid: optional predicate ``f(dict[name, value]) -> bool`` used to
+            drop invalid combinations (e.g. Scout's per-size cluster caps).
+        """
+        names = tuple(dims.keys())
+        combos = []
+        for vals in itertools.product(*dims.values()):
+            if valid is None or valid(dict(zip(names, vals))):
+                combos.append(vals)
+        return cls.from_points(names, np.array(combos, dtype=np.float64),
+                               max_thresholds=max_thresholds)
+
+    # ------------------------------------------------------------------ #
+    def row_of(self, raw_values: Sequence[float]) -> int:
+        """Index of an exact raw-value point (raises if absent)."""
+        hit = np.where((self.points_raw == np.asarray(raw_values)).all(axis=1))[0]
+        if hit.size == 0:
+            raise KeyError(f"point {raw_values} not in space")
+        return int(hit[0])
+
+
+def latin_hypercube_indices(space: DiscreteSpace, n: int,
+                            rng: np.random.Generator) -> np.ndarray:
+    """Latin-Hypercube bootstrap sample of ``n`` distinct config indices.
+
+    Classic LHS over the unit cube [McKay et al. 1979], snapped to the nearest
+    grid point per dimension, then greedily de-duplicated with uniform random
+    replacements — the standard discrete-space adaptation (paper §4.3 fn. 3).
+    """
+    m, f = space.points.shape
+    n = min(n, m)
+    # Stratified samples per dimension, independently permuted (LHS).
+    u = (rng.permuted(np.tile(np.arange(n), (f, 1)), axis=1).T + rng.random((n, f))) / n
+    # Snap each LHS point to the nearest grid point (L2 in normalized coords).
+    d2 = ((u[:, None, :] - space.points[None, :, :]) ** 2).sum(-1)
+    idx = d2.argmin(axis=1)
+    # De-duplicate: replace collisions with uniform draws from the unused set.
+    chosen: list[int] = []
+    used = np.zeros(m, dtype=bool)
+    for i in idx:
+        if not used[i]:
+            chosen.append(int(i))
+            used[i] = True
+    while len(chosen) < n:
+        free = np.where(~used)[0]
+        pick = int(rng.choice(free))
+        chosen.append(pick)
+        used[pick] = True
+    return np.array(chosen, dtype=np.int32)

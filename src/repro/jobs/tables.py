@@ -1,0 +1,116 @@
+"""Job cost tables: the simulation substrate of the paper's evaluation.
+
+The paper evaluates via *simulation*: every job was profiled once on every
+configuration, producing a table ⟨config → (runtime, unit price)⟩; optimizers
+then "run" a config by looking up its measured cost (§5.2).  ``JobTable``
+is that object, plus the derived quantities the optimizers need.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core.space import DiscreteSpace
+
+__all__ = ["JobTable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class JobTable:
+    """A fully profiled job.
+
+    Attributes:
+      name: job identifier (e.g. ``tf-cnn``).
+      space: the discrete configuration space (M points).
+      runtime: ``[M]`` measured job runtime in hours.
+      unit_price: ``[M]`` $/hour of the rented cluster while the job runs.
+      t_max: the runtime constraint (hours).
+    """
+
+    name: str
+    space: DiscreteSpace
+    runtime: np.ndarray
+    unit_price: np.ndarray
+    t_max: float
+
+    @property
+    def cost(self) -> np.ndarray:
+        """C(x) = T(x) · U(x) — the optimization objective ($)."""
+        return self.runtime * self.unit_price
+
+    @property
+    def feasible(self) -> np.ndarray:
+        return self.runtime <= self.t_max
+
+    @property
+    def optimum_cost(self) -> float:
+        c = self.cost[self.feasible]
+        if c.size == 0:
+            raise ValueError(f"job {self.name} has no feasible config")
+        return float(c.min())
+
+    @property
+    def optimum_index(self) -> int:
+        c = np.where(self.feasible, self.cost, np.inf)
+        return int(c.argmin())
+
+    @property
+    def mean_cost(self) -> float:
+        """m̃ — average cost of running the job on any config (budget unit)."""
+        return float(self.cost.mean())
+
+    def bootstrap_size(self) -> int:
+        """N = max(3% of |space|, n_dims) — paper §5.2 default."""
+        return max(int(np.ceil(0.03 * self.space.n_points)), self.space.n_dims)
+
+    def budget(self, b: float) -> float:
+        """B = N · m̃ · b (paper §5.2)."""
+        return self.bootstrap_size() * self.mean_cost * b
+
+    # ------------------------------------------------------------------ #
+    def cno(self, index: int) -> float:
+        """Cost-normalized-to-optimal of a recommended config."""
+        return float(self.cost[index] / self.optimum_cost)
+
+    def summary(self) -> dict:
+        c = self.cost
+        near2 = float((np.where(self.feasible, c, np.inf)
+                       <= 2.0 * self.optimum_cost).sum())
+        return {
+            "name": self.name,
+            "n_configs": int(c.size),
+            "n_dims": self.space.n_dims,
+            "feasible_frac": float(self.feasible.mean()),
+            "cost_spread_orders": float(np.log10(c.max() / c.min())),
+            "within_2x_of_opt": near2,
+            "within_2x_frac": near2 / c.size,
+            "optimum_cost": self.optimum_cost,
+        }
+
+    # ------------------------------------------------------------------ #
+    def save(self, path: str | pathlib.Path) -> None:
+        path = pathlib.Path(path)
+        path.write_text(json.dumps({
+            "name": self.name,
+            "names": list(self.space.names),
+            "points_raw": self.space.points_raw.tolist(),
+            "runtime": self.runtime.tolist(),
+            "unit_price": self.unit_price.tolist(),
+            "t_max": self.t_max,
+        }))
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "JobTable":
+        d = json.loads(pathlib.Path(path).read_text())
+        return cls(
+            name=d["name"],
+            space=DiscreteSpace.from_points(d["names"],
+                                            np.asarray(d["points_raw"])),
+            runtime=np.asarray(d["runtime"]),
+            unit_price=np.asarray(d["unit_price"]),
+            t_max=float(d["t_max"]),
+        )

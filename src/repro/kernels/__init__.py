@@ -1,0 +1,17 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+  flash_attention  — train/prefill attention (causal/window/softcap, GQA)
+  decode_attention — single-token attention over long ring KV caches
+  ssm_scan         — chunked SSD / gated linear recurrence (Mamba2, mLSTM)
+  tree_predict     — Lynceus forest mu/sigma via one-hot-matmul descent
+  gh_ei            — fused constrained-EI + Gauss-Hermite expansion
+"""
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.tree_predict.ops import tree_predict
+from repro.kernels.gh_ei.ops import gh_ei
+
+__all__ = ["flash_attention", "decode_attention", "ssm_scan", "tree_predict",
+           "gh_ei"]

@@ -1,0 +1,106 @@
+"""Decode attention Pallas kernel: one query token vs. a long (ring) KV cache.
+
+The decode_32k / long_500k cells are HBM-bandwidth bound: the whole KV cache
+is streamed once per token.  Grid = (batch*kv_heads, kv_blocks); all G query
+heads sharing a KV head ride along as a [G, D] tile resident in VMEM, so the
+kernel's HBM traffic is exactly one pass over K and V (plus O(G·D) per
+block) — the roofline minimum.
+
+Ring-cache semantics match ``repro.models.attention``: absolute key
+positions are derived in-kernel from the scalar write position ``pos``
+(slot i holds pos - ((pos - i) mod T)), masking empty and future slots and
+an optional sliding window.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_call"]
+
+_NEG = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale, window, bk, n_kv, t_len):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0].astype(jnp.float32)                      # [G, D]
+    k = k_ref[0].astype(jnp.float32)                      # [bk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    slot = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)[0]
+    k_pos = pos - jnp.mod(pos - slot, t_len)              # ring positions
+    ok = (k_pos >= 0) & (k_pos <= pos)
+    if window is not None:
+        ok &= k_pos > pos - window
+    s = jnp.where(ok[None, :], s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(j == n_kv - 1)
+    def _fin():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_call(q, k, v, pos, *, scale=None, window=None, bk=1024,
+                          interpret=False):
+    """q [B,H,D]; k,v [B,KH,T,D] ring caches; pos scalar int32 -> [B,H,D]."""
+    b, h, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = d ** -0.5 if scale is None else scale
+    bk = min(bk, t)
+    if t % bk:
+        raise ValueError(f"cache len {t} must divide block {bk}")
+    nk = t // bk
+
+    kernel = functools.partial(_kernel, scale=scale, window=window, bk=bk,
+                               n_kv=nk, t_len=t)
+    qs = q.reshape(b * kh, g, d)
+    ks = k.reshape(b * kh, t, d)
+    vs = v.reshape(b * kh, t, d)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kh, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, d), lambda bh, j: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, j: (bh, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda bh, j: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qs, ks, vs)
+    return out.reshape(b, h, d)

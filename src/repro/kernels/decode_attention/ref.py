@@ -1,0 +1,28 @@
+"""Oracle for decode attention over a ring cache (pure jnp)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEG = -0.7 * float(np.finfo(np.float32).max)
+
+
+def decode_attention_ref(q, k, v, pos, *, scale=None, window=None):
+    """q [B,H,D]; k,v [B,KH,T,D]; pos scalar -> [B,H,D]."""
+    b, h, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    scale = d ** -0.5 if scale is None else scale
+    rep = h // kh
+    k = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    v = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32), k) * scale
+    slot = jnp.arange(t)
+    k_pos = pos - jnp.mod(pos - slot, t)
+    ok = (k_pos >= 0) & (k_pos <= pos)
+    if window is not None:
+        ok &= k_pos > pos - window
+    s = jnp.where(ok[None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", p, v).astype(q.dtype)

@@ -1,0 +1,128 @@
+"""Flash attention Pallas TPU kernel (online softmax, BlockSpec-tiled VMEM).
+
+Grid = (batch*q_heads, q_blocks, kv_blocks); the kv dimension is innermost,
+so the f32 accumulator / running-max / denominator live in VMEM scratch and
+persist across kv iterations of one (bh, qi) cell.  GQA reads the shared
+KV head via index-map arithmetic — repeated K/V never materializes in HBM.
+Causal + sliding-window masking skips fully-masked kv blocks with pl.when;
+logit softcap (Gemma2) applied in-kernel.
+
+Block sizes default to (128, 512) — q-block x kv-block tiles fit VMEM for
+head_dim <= 256: (128 + 2*512)*256*2B + 128*512*4B scores ~ 0.6 MiB, well
+under the ~16 MiB v5e budget, and both matmul dims are 128-aligned for the
+MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_call"]
+
+_NEG = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale, causal, window, softcap, bq, bk, n_kv):
+    j = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Block-level skip: whole kv block after the last causal q row, or
+    # before the sliding window of the first q row.
+    first_q = qi * bq
+    last_q = qi * bq + bq - 1
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (j * bk <= last_q)
+    if window is not None:
+        run = run & (j * bk + bk - 1 > first_q - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window is not None:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, _NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(j == n_kv - 1)
+    def _fin():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_call(q, k, v, *, scale=None, causal=True, window=None,
+                         softcap=None, bq=128, bk=512, interpret=False):
+    """q [B,H,S,D]; k,v [B,KH,T,D] -> [B,H,S,D]."""
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = d ** -0.5 if scale is None else scale
+    bq = min(bq, s)
+    bk = min(bk, t)
+    if s % bq or t % bk:
+        raise ValueError(f"seq {s}/{t} must divide blocks {bq}/{bk}")
+    nq = s // bq
+    nk = t // bk
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, softcap=softcap, bq=bq, bk=bk,
+                               n_kv=nk)
+    qs = q.reshape(b * h, s, d)
+    ks = k.reshape(b * kh, t, d)
+    vs = v.reshape(b * kh, t, d)
+
+    def kv_map(bh, i, j):
+        # query head bh = batch*h + head ; its kv row = batch*kh + head//g
+        return ((bh // h) * kh + (bh % h) // g, j, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qs, ks, vs)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,28 @@
+"""jit'd public wrapper: picks the Pallas kernel on TPU, oracle elsewhere."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_call
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "softcap", "bq", "bk", "force"))
+def flash_attention(q, k, v, *, scale=None, causal=True, window=None,
+                    softcap=None, bq=128, bk=512, force: str | None = None):
+    """Dispatch: 'pallas' | 'interpret' | 'ref' | None (auto by backend)."""
+    mode = force
+    if mode is None:
+        mode = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if mode == "ref":
+        return attention_ref(q, k, v, scale=scale, causal=causal,
+                             window=window, softcap=softcap)
+    return flash_attention_call(q, k, v, scale=scale, causal=causal,
+                                window=window, softcap=softcap, bq=bq, bk=bk,
+                                interpret=(mode == "interpret"))

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive masked softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEG = -0.7 * float(np.finfo(np.float32).max)
+
+
+def attention_ref(q, k, v, *, scale=None, causal=True, window=None,
+                  softcap=None):
+    """q [B,H,S,D]; k,v [B,KH,T,D] -> [B,H,S,D] (f32 math)."""
+    b, h, s, d = q.shape
+    kh, t = k.shape[1], k.shape[2]
+    scale = d ** -0.5 if scale is None else scale
+    rep = h // kh
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    sc = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        sc = softcap * jnp.tanh(sc / softcap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    sc = jnp.where(ok[None, None], sc, _NEG)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

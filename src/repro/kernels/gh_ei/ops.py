@@ -1,0 +1,24 @@
+"""jit'd wrapper for the fused acquisition kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.gh_ei.kernel import gh_ei_call
+from repro.kernels.gh_ei.ref import gh_ei_ref
+
+__all__ = ["gh_ei"]
+
+
+@functools.partial(jax.jit, static_argnames=("conf", "bm", "force"))
+def gh_ei(mu, sigma, u, y_star, t_max, beta, xi, *, conf=0.99, bm=512,
+          force: str | None = None):
+    mode = force
+    if mode is None:
+        mode = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if mode == "ref":
+        return gh_ei_ref(mu, sigma, u, y_star, t_max, beta, xi, conf=conf)
+    return gh_ei_call(mu, sigma, u, y_star, t_max, beta, xi, conf=conf,
+                      bm=bm, interpret=(mode == "interpret"))

@@ -1,0 +1,15 @@
+"""Oracle: the acquisition math from repro.core.acquisition."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import acquisition as acq
+
+
+def gh_ei_ref(mu, sigma, u, y_star, t_max, beta, xi, *, conf=0.99):
+    eic = acq.ei_constrained(mu, sigma, y_star, u, t_max)
+    ok = acq.budget_ok(mu, sigma, beta, conf)
+    nodes = (mu[None, :] + np.sqrt(2.0) * sigma[None, :] * xi[:, None])
+    return eic.astype(jnp.float32), ok, nodes.astype(jnp.float32)

@@ -1,0 +1,98 @@
+"""Chunked SSD / gated-linear-recurrence Pallas kernel (Mamba2, mLSTM).
+
+Grid = (batch*heads, chunks); the [N, P] SSM state lives in f32 VMEM
+scratch and is carried across the (sequential, innermost) chunk dimension.
+Per chunk the kernel does the three SSD contractions on the MXU:
+
+  intra:  (Q Kᵀ ∘ decay-mask ∘ gate) V                  [c,N]x[N,c]x[c,P]
+  carry:  y += exp(cum) · (Q S_prev)                     [c,N]x[N,P]
+  update: S  = exp(total)·S_prev + (w_in·K)ᵀ V           [N,c]x[c,P]
+
+which is exactly ``repro.models.ssm.chunked_linear_scan`` (the oracle) with
+the inter-chunk lax.scan replaced by scratch-state recurrence.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssm_scan_call"]
+
+
+def _kernel(k_ref, v_ref, q_ref, ld_ref, g_ref, y_ref, s_ref,
+            *, chunk, n, p):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    kb = k_ref[0].astype(jnp.float32)                 # [c, N]
+    vb = v_ref[0].astype(jnp.float32)                 # [c, P]
+    qb = q_ref[0].astype(jnp.float32)                 # [c, N]
+    ld = ld_ref[0].astype(jnp.float32)                # [c]
+    g = g_ref[0].astype(jnp.float32)                  # [c]
+
+    cum = jnp.cumsum(ld)                              # [c]
+    total = cum[chunk - 1]
+    # intra-chunk: att[i,j] = (q_i.k_j) * exp(cum_i - cum_j) * g_j, i >= j
+    att = jax.lax.dot_general(qb, kb, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    i_ix = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_ix = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = cum[:, None] - cum[None, :]
+    mask = i_ix >= j_ix
+    att = jnp.where(mask, att * jnp.exp(jnp.where(mask, seg, 0.0))
+                    * g[None, :], 0.0)
+    y = jax.lax.dot_general(att, vb, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: y_i += exp(cum_i) * q_i . S_prev
+    s_prev = s_ref[...]                               # [N, P]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        qb, s_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+    # state update: S = exp(total)*S_prev + sum_j exp(total-cum_j) g_j k_j v_j^T
+    w_in = jnp.exp(total - cum) * g                   # [c]
+    kw = kb * w_in[:, None]                           # [c, N]
+    s_new = jax.lax.dot_general(kw, vb, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    s_ref[...] = s_prev * jnp.exp(total) + s_new
+
+
+def ssm_scan_call(k, v, q, log_decay, gate, *, chunk=256, interpret=False):
+    """k/q [B,L,H,N]; v [B,L,H,P]; log_decay/gate [B,L,H] -> y [B,L,H,P]."""
+    b, l, h, n = k.shape
+    p = v.shape[-1]
+    chunk = min(chunk, l)
+    if l % chunk:
+        raise ValueError(f"seq {l} must divide chunk {chunk}")
+    nc = l // chunk
+
+    tr = lambda a: a.transpose(0, 2, 1, 3).reshape(b * h, l, a.shape[-1])
+    ks, vs, qs = tr(k), tr(v), tr(q)
+    lds = log_decay.transpose(0, 2, 1).reshape(b * h, l)
+    gs = gate.transpose(0, 2, 1).reshape(b * h, l)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n=n, p=p)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, p), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, c: (bh, c)),
+            pl.BlockSpec((1, chunk), lambda bh, c: (bh, c)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda bh, c: (bh, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, l, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(ks, vs, qs, lds, gs)
+    return y.reshape(b, h, l, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the SSD scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm_scan.kernel import ssm_scan_call
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+__all__ = ["ssm_scan"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "force"))
+def ssm_scan(k, v, q, log_decay, gate, *, chunk=256, force: str | None = None):
+    mode = force
+    if mode is None:
+        mode = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if mode == "ref":
+        return ssm_scan_ref(k, v, q, log_decay, gate, chunk=chunk)
+    return ssm_scan_call(k, v, q, log_decay, gate, chunk=chunk,
+                         interpret=(mode == "interpret"))

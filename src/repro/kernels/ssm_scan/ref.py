@@ -1,0 +1,10 @@
+"""Oracle: the pure-jnp chunked linear scan from the model substrate."""
+
+from __future__ import annotations
+
+from repro.models.ssm import chunked_linear_scan
+
+
+def ssm_scan_ref(k, v, q, log_decay, gate, *, chunk=256):
+    y, _ = chunked_linear_scan(k, v, q, log_decay, gate, chunk=chunk)
+    return y

@@ -1,0 +1,104 @@
+"""Bagged-forest inference Pallas kernel — Lynceus' inner loop on TPU.
+
+The paper's next() step evaluates the tree ensemble's mu/sigma over *every*
+unexplored configuration for every speculative lookahead state (Table 3's
+cost).  Per-point tree descent is a chain of gathers (``x[feat[node]]``) —
+hostile to the TPU vector unit.  The TPU-native re-think (DESIGN.md §3):
+
+* feature select becomes a dense one-hot matmul: ``vals = X_blk @ OneHot``
+  where OneHot[f, (l,w)] = (feat[l,w] == f) is built per tree from iota
+  compares — an [bm, F] x [F, D*W] MXU matmul yielding every (level, node)
+  candidate value for the whole point block at once;
+* traversal is branch-free index arithmetic: the current node id selects
+  its column via an iota==pos mask (VPU select), doubling per level;
+* leaves reduce with a final one-hot mask.
+
+Trees are the complete-binary [B_trees, D, W] arrays fit by
+``repro.core.trees``; outputs are ensemble mu and sigma per point.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tree_predict_call"]
+
+
+def _kernel(x_ref, feat_ref, thr_ref, leaf_ref, mu_ref, sig_ref,
+            *, n_trees, depth, width, n_feat, bm, sigma_floor):
+    x = x_ref[...]                                       # [bm, F]
+    acc = jnp.zeros((bm,), jnp.float32)
+    acc2 = jnp.zeros((bm,), jnp.float32)
+    for b in range(n_trees):                             # static unroll
+        pos = jnp.zeros((bm,), jnp.int32)
+        for l in range(depth):
+            feat_l = feat_ref[b, l]                      # [W] int32
+            thr_l = thr_ref[b, l]                        # [W] f32
+            # one-hot feature select: [bm, F] @ [F, W] -> candidate values
+            onehot = (jax.lax.broadcasted_iota(jnp.int32, (n_feat, width), 0)
+                      == feat_l[None, :]).astype(jnp.float32)
+            vals = jax.lax.dot_general(x, onehot, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+            sel = (jax.lax.broadcasted_iota(jnp.int32, (bm, width), 1)
+                   == pos[:, None] % width)
+            val = jnp.sum(jnp.where(sel, vals, 0.0), axis=1)
+            th = jnp.sum(jnp.where(sel, thr_l[None, :], 0.0), axis=1)
+            # +inf threshold => degenerate node: everything goes left
+            inf_mask = jnp.sum(jnp.where(sel, jnp.isinf(thr_l)[None, :],
+                                         False), axis=1) > 0
+            right = (val > th) & ~inf_mask
+            pos = 2 * pos + right.astype(jnp.int32)
+        n_leaves = 2 ** depth
+        leaf_b = leaf_ref[b]                             # [n_leaves]
+        lsel = (jax.lax.broadcasted_iota(jnp.int32, (bm, n_leaves), 1)
+                == pos[:, None]).astype(jnp.float32)
+        pred = jax.lax.dot_general(lsel, leaf_b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        acc += pred
+        acc2 += pred * pred
+    mu = acc / n_trees
+    var = jnp.maximum(acc2 / n_trees - mu * mu, 0.0)
+    mu_ref[...] = mu
+    sig_ref[...] = jnp.maximum(jnp.sqrt(var), sigma_floor)
+
+
+def tree_predict_call(x, feat, thr, leaf, *, sigma_floor=1e-6, bm=256,
+                      interpret=False):
+    """x [M,F]; feat/thr [B,D,W]; leaf [B, 2^D] -> (mu [M], sigma [M]).
+
+    Positions at level l only use node ids < 2^l <= W; the pos % width in the
+    kernel keeps indexing in-bounds at every level.
+    """
+    m, f = x.shape
+    n_trees, depth, width = feat.shape
+    bm = min(bm, m)
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    mp = m + pad
+
+    kernel = functools.partial(_kernel, n_trees=n_trees, depth=depth,
+                               width=width, n_feat=f, bm=bm,
+                               sigma_floor=sigma_floor)
+    mu, sig = pl.pallas_call(
+        kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            # forest params are tiny (B*D*W) — keep whole copies in VMEM
+            pl.BlockSpec((n_trees, depth, width), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_trees, depth, width), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_trees, 2 ** depth), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((bm,), lambda i: (i,)),
+                   pl.BlockSpec((bm,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((mp,), jnp.float32),
+                   jax.ShapeDtypeStruct((mp,), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), feat, thr, leaf)
+    return mu[:m], sig[:m]

@@ -1,0 +1,27 @@
+"""Oracle: plain gather-based tree descent (mirrors repro.core.trees)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_predict_ref(x, feat, thr, leaf, *, sigma_floor=1e-6):
+    """x [M,F]; feat/thr [B,D,W]; leaf [B,2^D] -> (mu, sigma)."""
+    m = x.shape[0]
+
+    def one(feat_b, thr_b, leaf_b):
+        pos = jnp.zeros((m,), jnp.int32)
+        for l in range(feat.shape[1]):
+            w = feat.shape[2]
+            f_l = feat_b[l][jnp.clip(pos, 0, w - 1) % w]
+            t_l = thr_b[l][jnp.clip(pos, 0, w - 1) % w]
+            v = jnp.take_along_axis(x, f_l[:, None], axis=1)[:, 0]
+            right = (v > t_l) & ~jnp.isinf(t_l)
+            pos = 2 * pos + right.astype(jnp.int32)
+        return leaf_b[pos]
+
+    preds = jax.vmap(one)(feat, thr, leaf)       # [B, M]
+    mu = preds.mean(axis=0)
+    sigma = jnp.maximum(preds.std(axis=0), sigma_floor)
+    return mu, sigma

@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first init, and the production meshes need 512
+placeholder host devices.  Never import this module from tests/benches
+(they must see 1 device); run it as a subprocess:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+      --shape train_4k --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --sweep --mesh both
+
+Each cell writes ``<out>/<arch>__<shape>__<mesh>.json`` with
+memory_analysis / cost_analysis / parsed collective stats / roofline terms.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh, mesh_devices
+from repro.launch.specs import (SHAPES, decode_input_specs,
+                                prefill_input_specs, runnable_cells,
+                                skip_reason, train_input_specs)
+from repro.models import RuntimeFlags, build_model
+from repro.optim.adamw import AdamWConfig
+from repro.shard.api import activation_ctx, make_rules, sharding_for
+from repro.train.step import (abstract_state, batch_shardings, make_train_step,
+                              state_shardings)
+
+
+def default_flags(kind: str, overrides: dict) -> RuntimeFlags:
+    base = dict(attn_impl="chunked", attn_chunk=1024, loss_chunks=16,
+                scan_layers=True, param_dtype="bfloat16",
+                compute_dtype="bfloat16", moe_impl="gather",
+                analysis_unroll=False)
+    if kind == "train":
+        base.update(remat="full", microbatches=1)
+    else:
+        base.update(remat="none", microbatches=1)
+    base.update(overrides)
+    return RuntimeFlags(**base)
+
+
+# --------------------------------------------------------------------------- #
+# Exact roofline accounting via two-point layer extrapolation
+# --------------------------------------------------------------------------- #
+# XLA's cost_analysis counts a while-loop body ONCE, so the (fast) scanned
+# full-config compile under-reports flops/bytes/collectives.  Per-layer costs
+# are exactly homogeneous within a pattern unit for every assigned arch, so
+# we compile two small *unrolled* clones that differ by pattern units and
+# extrapolate linearly: cost(U) = cost(uB) + (U - uB) * (cost(uB)-cost(uA)).
+def _pattern(cfg):
+    """(unit_layers, fixed_tail_layers, units_total) for reduced clones."""
+    if cfg.family == "hybrid":
+        unit = cfg.attn_every
+        tail = cfg.n_layers % unit
+        return unit, tail, cfg.n_layers // unit
+    if cfg.is_moe and cfg.first_dense_layers:
+        return 1, cfg.first_dense_layers, cfg.n_layers - cfg.first_dense_layers
+    if cfg.alt_window is not None:
+        return 2, 0, cfg.n_layers // 2
+    if cfg.family == "ssm" and cfg.slstm_every:
+        return cfg.slstm_every, 0, cfg.n_layers // cfg.slstm_every
+    return 1, 0, cfg.n_layers
+
+
+def reduced_clone(cfg, units: int):
+    import dataclasses
+    unit, tail, _ = _pattern(cfg)
+    return dataclasses.replace(cfg, n_layers=units * unit + tail)
+
+
+def _specs_shardings(model, mesh, rules):
+    from repro.models.params import ParamSpec
+    specs = model.specs()
+    return jax.tree.map(
+        lambda s: sharding_for(s.shape, s.axes, rules, mesh), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _cache_shardings(model, caches, mesh, rules):
+    axes = model.cache_axes()
+    return jax.tree.map(
+        lambda c, a: sharding_for(c.shape, a, rules, mesh), caches, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, flags_over: dict,
+               rules_over: dict, cfg=None):
+    """Build + lower + compile one cell. Returns (compiled, cfg, meta)."""
+    if cfg is None:
+        cfg = get_config(arch)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(**rules_over)
+    kind = SHAPES[shape]["kind"]
+    seq, gb = SHAPES[shape]["seq"], SHAPES[shape]["batch"]
+    flags = default_flags(kind, flags_over)
+
+    t0 = time.time()
+    if kind == "train":
+        state = abstract_state(model, flags, jnp.bfloat16)
+        st_sh = state_shardings(model, flags, mesh, rules)
+        batch = train_input_specs(cfg, shape)
+        b_sh = batch_shardings(batch, mesh, rules)
+        step = make_train_step(model, flags, AdamWConfig(), mesh, rules)
+        jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                         out_shardings=(st_sh, None), donate_argnums=(0,))
+        lowered = jitted.lower(state, batch)
+    elif kind == "prefill":
+        params = model.abstract(jnp.bfloat16)
+        p_sh = _specs_shardings(model, mesh, rules)
+        batch = prefill_input_specs(cfg, shape)
+        b_sh = batch_shardings(batch, mesh, rules)
+
+        def prefill_step(params, batch):
+            with activation_ctx(mesh, rules):
+                return model.prefill(params, batch, flags, seq)
+
+        jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(params, batch)
+    else:  # decode
+        params = model.abstract(jnp.bfloat16)
+        p_sh = _specs_shardings(model, mesh, rules)
+        caches, tokens, pos = decode_input_specs(model, shape)
+        c_sh = _cache_shardings(model, caches, mesh, rules)
+        tok_sh = sharding_for(tokens.shape, ("batch", None), rules, mesh)
+        pos_sh = sharding_for((), (), rules, mesh)
+
+        def serve_step(params, caches, tokens, pos):
+            with activation_ctx(mesh, rules):
+                logits, new_c = model.decode(params, caches, tokens, pos, flags)
+                return jnp.argmax(logits, axis=-1), new_c
+
+        jitted = jax.jit(serve_step,
+                         in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(1,))
+        lowered = jitted.lower(params, caches, tokens, pos)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    meta = dict(arch=arch, shape=shape, kind=kind, seq=seq, global_batch=gb,
+                mesh="multi" if multi_pod else "single",
+                chips=mesh_devices(mesh), lower_s=t_lower, compile_s=t_compile,
+                flags=flags_over, rules={k: str(v) for k, v in rules_over.items()},
+                n_params=model.n_params(),
+                n_params_active=cfg.active_param_count())
+    return compiled, cfg, meta
+
+
+def analyze(compiled, cfg, meta) -> dict:
+    """memory/cost analysis + collective parse + roofline terms."""
+    out = dict(meta)
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                out[f] = int(v)
+    except Exception as e:                            # pragma: no cover
+        out["memory_analysis_error"] = str(e)
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    out["hlo_flops_per_device"] = flops
+    out["hlo_bytes_per_device"] = bytes_acc
+    try:
+        text = compiled.as_text()
+        stats = rl.parse_collectives(text)
+        out["collectives"] = stats.to_json()
+        wire = stats.wire_bytes_per_device
+    except Exception as e:                            # pragma: no cover
+        out["collective_parse_error"] = str(e)
+        wire = 0.0
+    terms = rl.roofline_terms(flops, bytes_acc, wire)
+    out["roofline"] = terms
+    n_tokens = meta["global_batch"] * (meta["seq"] if meta["kind"] != "decode"
+                                       else 1)
+    mf = rl.model_flops(cfg, n_tokens, meta["kind"])
+    out["model_flops_global"] = mf
+    denom = flops * meta["chips"]
+    out["model_flops_ratio"] = (mf / denom) if denom else 0.0
+    out["mfu_upper_bound"] = (mf / meta["chips"] / rl.HW["peak_flops"]
+                              / terms["step_s"]) if terms["step_s"] else 0.0
+    return out
+
+
+def _clone_stats(arch, shape, multi_pod, flags_over, rules_over, units):
+    """flops/bytes/wire of a reduced-layer clone compiled fully unrolled."""
+    cfg = get_config(arch)
+    clone = reduced_clone(cfg, units)
+    fo = dict(flags_over, analysis_unroll=True)
+    compiled, _, meta = lower_cell(arch, shape, multi_pod, fo, rules_over,
+                                   cfg=clone)
+    ca = compiled.cost_analysis() or {}
+    stats = rl.parse_collectives(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "wire": stats.wire_bytes_per_device,
+            "counts": stats.counts,
+            "compile_s": meta["compile_s"], "units": units}
+
+
+def extrapolated_costs(arch, shape, multi_pod, flags_over, rules_over):
+    """Two-point per-unit extrapolation to the full layer count."""
+    cfg = get_config(arch)
+    _, _, total = _pattern(cfg)
+    ub = min(4, total)
+    ua = max(1, ub // 2)
+    if ua == ub:                                     # tiny model: exact
+        sb = _clone_stats(arch, shape, multi_pod, flags_over, rules_over, ub)
+        return {k: sb[k] for k in ("flops", "bytes", "wire")}, [sb]
+    sa = _clone_stats(arch, shape, multi_pod, flags_over, rules_over, ua)
+    sb = _clone_stats(arch, shape, multi_pod, flags_over, rules_over, ub)
+    out = {}
+    for k in ("flops", "bytes", "wire"):
+        delta = (sb[k] - sa[k]) / (ub - ua)
+        out[k] = sb[k] + (total - ub) * delta
+    return out, [sa, sb]
+
+
+def run_cell(arch, shape, mesh_kind, flags_over, rules_over, out_dir,
+             exact_costs: bool = True):
+    reason = skip_reason(arch, shape)
+    tag = f"{arch}__{shape}__{mesh_kind}"
+    out_path = pathlib.Path(out_dir) / f"{tag}.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    if reason:
+        out_path.write_text(json.dumps(
+            {"arch": arch, "shape": shape, "mesh": mesh_kind,
+             "skipped": reason}, indent=1))
+        print(f"[skip] {tag}: {reason}")
+        return True
+    try:
+        # 1) the deliverable: FULL config lower+compile (scan-over-layers)
+        compiled, cfg, meta = lower_cell(arch, shape, mesh_kind == "multi",
+                                         flags_over, rules_over)
+        result = analyze(compiled, cfg, meta)
+        mem = compiled.memory_analysis()
+        # 2) exact per-device costs via unrolled reduced-clone extrapolation
+        if exact_costs:
+            costs, clones = extrapolated_costs(
+                arch, shape, mesh_kind == "multi", flags_over, rules_over)
+            result["scanned_hlo_flops_per_device"] = result.pop(
+                "hlo_flops_per_device")
+            result["scanned_hlo_bytes_per_device"] = result.pop(
+                "hlo_bytes_per_device")
+            result["hlo_flops_per_device"] = costs["flops"]
+            result["hlo_bytes_per_device"] = costs["bytes"]
+            result["wire_bytes_per_device"] = costs["wire"]
+            result["clone_points"] = clones
+            result["roofline"] = rl.roofline_terms(
+                costs["flops"], costs["bytes"], costs["wire"])
+            denom = costs["flops"] * meta["chips"]
+            result["model_flops_ratio"] = (
+                result["model_flops_global"] / denom if denom else 0.0)
+            result["mfu_upper_bound"] = (
+                result["model_flops_global"] / meta["chips"]
+                / rl.HW["peak_flops"] / result["roofline"]["step_s"]
+                if result["roofline"]["step_s"] else 0.0)
+        print(f"[ok] {tag}: compile {meta['compile_s']:.1f}s "
+              f"flops/dev {result['hlo_flops_per_device']:.3e} "
+              f"bound={result['roofline']['bound']} "
+              f"mfu_ub={result['mfu_upper_bound']:.3f}")
+        print(f"     memory_analysis: {mem}")
+        out_path.write_text(json.dumps(result, indent=1, default=str))
+        return True
+    except Exception:
+        err = traceback.format_exc()
+        out_path.write_text(json.dumps(
+            {"arch": arch, "shape": shape, "mesh": mesh_kind,
+             "error": err[-4000:]}, indent=1))
+        print(f"[FAIL] {tag}\n{err}", file=sys.stderr)
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--flags", default="{}", help="RuntimeFlags overrides JSON")
+    ap.add_argument("--rules", default="{}", help="shard-rule overrides JSON")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run every runnable cell in-process")
+    ap.add_argument("--exact-costs", default="on", choices=["on", "off"],
+                    help="off: skip the unrolled-clone extrapolation "
+                         "(fast relative signal only)")
+    args = ap.parse_args()
+    flags_over = json.loads(args.flags)
+    rules_over = {k: (tuple(v) if isinstance(v, list) else v)
+                  for k, v in json.loads(args.rules).items()}
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    ok = True
+    if args.sweep:
+        # one subprocess per cell: isolates compile-cache memory and lets a
+        # single pathological cell fail without poisoning the rest
+        import subprocess
+        for arch, shape in [(a, s) for a in ARCHS for s in SHAPES]:
+            for m in meshes:
+                tag = f"{arch}__{shape}__{m}"
+                done = pathlib.Path(args.out) / f"{tag}.json"
+                if done.exists() and "error" not in done.read_text()[:200]:
+                    print(f"[cached] {tag}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", m,
+                       "--flags", args.flags, "--rules", args.rules,
+                       "--out", args.out]
+                r = subprocess.run(cmd, timeout=3600)
+                ok &= (r.returncode == 0)
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required without --sweep")
+        for m in meshes:
+            ok &= run_cell(args.arch, args.shape, m, flags_over, rules_over,
+                           args.out, exact_costs=(args.exact_costs == "on"))
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

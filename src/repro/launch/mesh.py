@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The production pod is 16x16 = 256 chips
+(TPU v5e); multi-pod adds a leading 'pod' axis across 2 pods = 512 chips.
+The dry-run runs both on 512 forced host devices (single-pod uses the first
+256).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "mesh_devices"]
+
+
+def make_mesh(shape, axes):
+    """Mesh over the first prod(shape) available devices."""
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)} "
+                           "(dry-run must force host device count first)")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def mesh_devices(mesh) -> int:
+    return math.prod(mesh.devices.shape)

@@ -1,0 +1,142 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+Three terms (EXPERIMENTS.md §Roofline), all in *seconds per step per chip*
+(the post-SPMD HLO module is the per-device program, so its FLOPs/bytes are
+already per-chip):
+
+  compute    = HLO_FLOPs / peak_FLOPs            (197 TF/s bf16, TPU v5e)
+  memory     = HLO_bytes / HBM_bw                (819 GB/s)
+  collective = wire_bytes / ICI_bw               (50 GB/s/link)
+
+``wire_bytes`` is parsed from the optimized HLO text: every collective op's
+result shape and replica-group size n feed the standard ring-algorithm cost
+model (all-gather (n-1)/n x result; all-reduce 2x that; reduce-scatter
+(n-1) x result — its result is the already-scattered shard; all-to-all
+(n-1)/n; collective-permute 1x).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+import numpy as np
+
+__all__ = ["HW", "CollectiveStats", "parse_collectives", "roofline_terms",
+           "model_flops"]
+
+HW = {
+    "peak_flops": 197e12,       # bf16 / chip (TPU v5e)
+    "hbm_bw": 819e9,            # B/s
+    "ici_bw": 50e9,             # B/s / link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes across (possibly tuple) result shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict
+    wire_bytes_per_device: float
+
+    def to_json(self):
+        return {"counts": self.counts, "result_bytes": self.result_bytes,
+                "wire_bytes_per_device": self.wire_bytes_per_device}
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:                                   # iota format [groups, size]<=[N]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m and m.group(1).strip():
+        first = m.group(1).split("}")[0].strip("{} ")
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        if ids:
+            return len(ids)
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int = 2) -> CollectiveStats:
+    counts: dict = {}
+    rbytes: dict = {}
+    wire = 0.0
+    # -start ops carry the shape as a tuple (operand, result); plain ops carry
+    # the result shape directly.  _shape_bytes sums whatever it finds, so for
+    # async pairs take the -start line only (the -done repeats nothing).
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # extract the full instruction line (anchor on the op-kind group:
+        # the leading \s* may have consumed the previous newline)
+        ls = hlo_text.rfind("\n", 0, m.start(2)) + 1
+        le = hlo_text.find("\n", m.start(2))
+        line = hlo_text[ls:le if le != -1 else len(hlo_text)]
+        if "-done" in line.split("(")[0]:
+            continue
+        b = _shape_bytes(shape_str)
+        if "-start" in line.split("(")[0] and shape_str.startswith("("):
+            b = b / 2                       # tuple repeats operand+result
+        n = _group_size(line, default_group)
+        if kind == "all-gather":
+            w = b * (n - 1) / max(n, 1)
+        elif kind == "all-reduce":
+            w = 2.0 * b * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            w = b * (n - 1)
+        elif kind == "all-to-all":
+            w = b * (n - 1) / max(n, 1)
+        else:                               # collective-permute
+            w = b
+        counts[kind] = counts.get(kind, 0) + 1
+        rbytes[kind] = rbytes.get(kind, 0) + b
+        wire += w
+    return CollectiveStats(counts, rbytes, wire)
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float, hw=HW) -> dict:
+    t_c = flops_per_dev / hw["peak_flops"]
+    t_m = bytes_per_dev / hw["hbm_bw"]
+    t_x = wire_bytes_per_dev / hw["ici_bw"]
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    total = max(t_c, t_m, t_x)
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "bound": dom[1], "step_s": total,
+        "roofline_fraction": (t_c / total) if total > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, n_tokens: int, kind: str) -> float:
+    """6·N_active·D (train) or 2·N_active·D (forward-only), global."""
+    n = cfg.active_param_count()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * n_tokens

@@ -1,0 +1,110 @@
+"""Assigned input-shape cells and their ShapeDtypeStruct stand-ins.
+
+Each (arch x shape) cell defines what gets lowered:
+
+  train_4k      seq 4,096  gb 256  -> train_step
+  prefill_32k   seq 32,768 gb 32   -> prefill_step (forward + cache build;
+                                      plain encode for encoder-only archs)
+  decode_32k    1 token, KV cache 32,768, gb 128 -> serve_step (decode)
+  long_500k     1 token, state/cache @ 524,288, gb 1 -> serve_step
+
+Skips (DESIGN.md §5): decode/long for hubert (encoder-only); long_500k only
+for bounded-state archs (xlstm, zamba2, mixtral-SWA).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+__all__ = ["SHAPES", "cell_is_runnable", "skip_reason", "train_input_specs",
+           "prefill_input_specs", "decode_input_specs", "runnable_cells"]
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# Archs with bounded decode state (sub-quadratic long-context) — long_500k
+# runs only for these.
+_LONG_OK = {"xlstm-125m", "zamba2-7b", "mixtral-8x22b"}
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    if arch == "hubert-xlarge" and shape in ("decode_32k", "long_500k"):
+        return "encoder-only: no decode step"
+    if shape == "long_500k" and arch not in _LONG_OK:
+        return ("unbounded full-attention state at 500k (O(L*seq) cache); "
+                "run only for bounded-state archs")
+    return None
+
+
+def cell_is_runnable(arch: str, shape: str) -> bool:
+    return skip_reason(arch, shape) is None
+
+
+def runnable_cells(archs) -> list[tuple[str, str]]:
+    return [(a, s) for a in archs for s in SHAPES if cell_is_runnable(a, s)]
+
+
+# --------------------------------------------------------------------------- #
+# ShapeDtypeStruct builders (weak-type-correct, shardable, no allocation)
+# --------------------------------------------------------------------------- #
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Model-input pytree (tokens/features + targets) as structs."""
+    if cfg.family == "audio":
+        return {"features": _f((batch, seq, cfg.frontend_dim), dtype),
+                "mask": jax.ShapeDtypeStruct((batch, seq), jnp.bool_),
+                "targets": _i32((batch, seq))}
+    out = {"tokens": _i32((batch, seq)), "targets": _i32((batch, seq))}
+    if cfg.family == "vlm":
+        out["vision_embeds"] = _f((batch, cfg.n_vision_tokens, cfg.d_model),
+                                  dtype)
+        out["positions"] = _i32((3, batch, seq))
+    return out
+
+
+def train_input_specs(cfg: ModelConfig, shape: str, dtype=jnp.bfloat16):
+    s = SHAPES[shape]
+    return batch_struct(cfg, s["batch"], s["seq"], dtype)
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: str, dtype=jnp.bfloat16):
+    s = SHAPES[shape]
+    b = batch_struct(cfg, s["batch"], s["seq"], dtype)
+    b.pop("targets", None)
+    if cfg.family == "audio":
+        b.pop("mask", None)
+        b["mask"] = jax.ShapeDtypeStruct((s["batch"], s["seq"]), jnp.bool_)
+    return b
+
+
+def decode_input_specs(model, shape: str, dtype=jnp.bfloat16):
+    """(caches, tokens, pos) structs for serve_step."""
+    s = SHAPES[shape]
+    shapes = model.cache_shapes(s["batch"], s["seq"])
+
+    def to_struct(x):
+        if isinstance(x, tuple) and all(isinstance(i, int) for i in x):
+            return _f(x, dtype)
+        return x
+
+    is_shape = lambda x: (isinstance(x, tuple)
+                          and all(isinstance(i, int) for i in x))
+    caches = jax.tree.map(to_struct, shapes, is_leaf=is_shape)
+    tokens = _i32((s["batch"], 1))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return caches, tokens, pos

@@ -1,0 +1,6 @@
+"""Unified model substrate for the 10 assigned architectures."""
+
+from repro.models.api import Model, build_model
+from repro.models.config import ModelConfig, RuntimeFlags
+
+__all__ = ["Model", "build_model", "ModelConfig", "RuntimeFlags"]

@@ -1,0 +1,143 @@
+"""Attention: grouped-query, causal/sliding-window/softcap, train + decode.
+
+Two implementations behind one interface:
+
+* ``naive``   — materializes the full score matrix; tiny-test oracle.
+* ``chunked`` — ``lax.scan`` over KV blocks with an online softmax (the
+  flash-attention recurrence in pure jnp).  This is what the dry-run lowers:
+  its HLO reads/writes O(S·D) bytes instead of O(S²), so the roofline's
+  memory term reflects a production attention, and it is the reference
+  semantics for the Pallas ``flash_attention`` kernel (kernels/flash_attention).
+
+Caches are ring buffers: slot = position mod cache_len.  Absolute key
+positions are *derived* from the scalar write position (no position array),
+which makes the same code serve full caches (cache_len >= seq) and rolling
+sliding-window caches (cache_len = window), cf. Mixtral long-context decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attend", "cache_slot_positions", "write_kv"]
+
+_NEG = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _mask(q_pos, k_pos, k_valid, *, causal: bool, window):
+    """Additive mask [..., S, T] from absolute positions.
+
+    q_pos [S], k_pos [T], k_valid [T] bool.
+    """
+    ok = k_valid[None, :]
+    if causal:
+        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        ok = ok & (k_pos[None, :] > q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, _NEG)
+
+
+def _scores(qg, k, scale, softcap):
+    """qg [B,S,KH,G,D] x k [B,T,KH,D] -> [B,KH,G,S,T] (f32)."""
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def attend(q, k, v, *, causal: bool = True, window: int | None = None,
+           softcap: float | None = None, scale: float | None = None,
+           q_pos0=0, k_pos=None, k_valid=None, impl: str = "chunked",
+           chunk: int = 1024, unroll: bool = False):
+    """Grouped-query attention.
+
+    Args:
+      q: [B, S, H, D] queries.
+      k, v: [B, T, KH, D] keys/values (H % KH == 0).
+      q_pos0: absolute position of q[:, 0] (scalar, may be traced).
+      k_pos: [T] absolute key positions (defaults to arange(T)).
+      k_valid: [T] bool validity (defaults to all-valid).
+      impl/chunk: 'naive' | 'chunked' online-softmax block size.
+    Returns: [B, S, H, D].
+    """
+    b, s_len, h, d = q.shape
+    t_len, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = d ** -0.5 if scale is None else scale
+    qg = q.reshape(b, s_len, kh, g, d)
+    q_pos = q_pos0 + jnp.arange(s_len)
+    if k_pos is None:
+        k_pos = jnp.arange(t_len)
+    if k_valid is None:
+        k_valid = jnp.ones((t_len,), bool)
+
+    if impl == "naive" or t_len <= chunk:
+        sc = _scores(qg, k, scale, softcap)
+        sc = sc + _mask(q_pos, k_pos, k_valid, causal=causal, window=window)
+        p = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+        return out.reshape(b, s_len, h, d)
+
+    # ---- chunked online softmax -------------------------------------- #
+    n_chunks = -(-t_len // chunk)
+    pad = n_chunks * chunk - t_len
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad))
+        k_valid = jnp.pad(k_valid, (0, pad))        # padded slots invalid
+    kc = k.reshape(b, n_chunks, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(n_chunks, chunk)
+    valc = k_valid.reshape(n_chunks, chunk)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, pb, vb_ok = blk
+        sc = _scores(qg, kb, scale, softcap)
+        sc = sc + _mask(q_pos, pb, vb_ok, causal=causal, window=window)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bskgd", p.astype(vb.dtype), vb)
+        acc = acc * alpha.transpose(0, 3, 1, 2)[..., None].astype(acc.dtype) + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kh, g, s_len), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, s_len), jnp.float32)
+    a0 = jnp.zeros((b, s_len, kh, g, d), v.dtype)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc, valc),
+                                  unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None].astype(acc.dtype)
+    return out.reshape(b, s_len, h, d)
+
+
+# --------------------------------------------------------------------------- #
+# Ring-buffer cache helpers
+# --------------------------------------------------------------------------- #
+def cache_slot_positions(pos, cache_len: int):
+    """Absolute position held by each ring slot after writing position ``pos``.
+
+    slot i holds p_i = pos - ((pos - i) mod cache_len); p_i < 0 means the slot
+    has never been written.  Returns (k_pos [T], k_valid [T]).
+    """
+    i = jnp.arange(cache_len)
+    p = pos - jnp.mod(pos - i, cache_len)
+    return p, p >= 0
+
+
+def write_kv(cache_k, cache_v, k_new, v_new, pos):
+    """Write one token's K/V at ring slot ``pos % cache_len``.
+
+    cache_k/v: [B, T, KH, D]; k_new/v_new: [B, 1, KH, D]; pos scalar.
+    """
+    slot = jnp.mod(pos, cache_k.shape[1])
+    ck = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                      (0, slot, 0, 0))
+    return ck, cv

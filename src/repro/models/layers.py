@@ -1,0 +1,189 @@
+"""Shared neural building blocks: norms, MLPs, rotary embeddings, embeddings.
+
+Everything is functional: ``*_specs`` declares parameters (ParamSpec pytree),
+the paired apply function consumes the materialized (or abstract) params.
+Logical axis names used here:
+
+  embed   — d_model            ffn    — feed-forward hidden
+  heads   — query heads        kv_heads — key/value heads
+  head_dim — per-head features vocab  — vocabulary
+  layers  — stacked-scan layer axis   experts — MoE expert axis
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import spec
+
+__all__ = [
+    "rmsnorm_spec", "rmsnorm", "layernorm_spec", "layernorm",
+    "mlp_specs", "mlp", "rope", "mrope", "embed_specs", "embed", "unembed",
+    "causal_conv1d",
+]
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rmsnorm_spec(d: int, layers: int | None = None):
+    shape, axes = (d,), ("embed",)
+    if layers is not None:
+        shape, axes = (layers, d), ("layers", "embed")
+    return spec(shape, axes, init="zeros")          # Gemma-style (1 + w)
+
+
+def rmsnorm(w, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return ((1.0 + w.astype(jnp.float32)) * x).astype(dt)
+
+
+def layernorm_spec(d: int, layers: int | None = None):
+    shape, axes = (d,), ("embed",)
+    if layers is not None:
+        shape, axes = (layers, d), ("layers", "embed")
+    return {"w": spec(shape, axes, init="zeros"),
+            "b": spec(shape, axes, init="zeros")}
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return ((1.0 + p["w"]) * y + p["b"]).astype(dt)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs (SwiGLU / GeGLU / GELU)
+# --------------------------------------------------------------------------- #
+def mlp_specs(d: int, ff: int, act: str, layers: int | None = None,
+              experts: int | None = None):
+    lead_shape, lead_axes = (), ()
+    if layers is not None:
+        lead_shape, lead_axes = (layers,), ("layers",)
+    if experts is not None:
+        lead_shape, lead_axes = lead_shape + (experts,), lead_axes + ("experts",)
+    gated = act in ("swiglu", "geglu")
+    p = {"up": spec(lead_shape + (d, ff), lead_axes + ("embed", "ffn")),
+         "down": spec(lead_shape + (ff, d), lead_axes + ("ffn", "embed"))}
+    if gated:
+        p["gate"] = spec(lead_shape + (d, ff), lead_axes + ("embed", "ffn"))
+    return p
+
+
+def _act(x, act: str):
+    if act == "swiglu":
+        return jax.nn.silu(x)
+    if act in ("geglu", "gelu"):
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(act)
+
+
+def mlp(p, x, act: str):
+    h = x @ p["up"]
+    if "gate" in p:
+        h = h * _act(x @ p["gate"], act)
+    else:
+        h = _act(h, act)
+    return h @ p["down"]
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embeddings (split-half convention) + M-RoPE
+# --------------------------------------------------------------------------- #
+def _rope_angles(positions, dim: int, theta: float):
+    """positions [...] -> angles [..., dim//2] (f32)."""
+    half = dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freq
+
+
+def _apply_angles(x, ang):
+    """x [..., S, H, D]; ang [..., S, D//2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Standard RoPE. x [B, S, H, D], positions [B, S] (or [S])."""
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    return _apply_angles(x, _rope_angles(positions, x.shape[-1], theta))
+
+
+def mrope(x, positions, sections, theta: float = 10000.0):
+    """Qwen2-VL multimodal RoPE.
+
+    positions: [3, B, S] (temporal, height, width) position ids.
+    sections: rotary-pair counts per section, summing to D//2 — frequency
+    band j takes its position id from the section j falls into.
+    """
+    d = x.shape[-1]
+    ang_all = _rope_angles(positions, d, theta)       # [3, B, S, D/2]
+    sec = np.cumsum((0,) + tuple(sections))
+    if sec[-1] != d // 2:
+        raise ValueError(f"mrope sections {sections} != head_dim/2 {d // 2}")
+    sel = np.zeros(d // 2, dtype=np.int32)
+    for i in range(len(sections)):
+        sel[sec[i]:sec[i + 1]] = i
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1), jnp.asarray(sel)[None, None, :, None],
+        axis=-1)[..., 0]                              # [B, S, D/2]
+    return _apply_angles(x, ang)
+
+
+# --------------------------------------------------------------------------- #
+# Embeddings
+# --------------------------------------------------------------------------- #
+def embed_specs(vocab: int, d: int, tied: bool):
+    p = {"tokens": spec((vocab, d), ("vocab", "embed"), std=1.0)}
+    if not tied:
+        p["unembed"] = spec((d, vocab), ("embed", "vocab"))
+    return p
+
+
+def embed(p, tokens, *, scale: bool, d: int):
+    x = p["tokens"][tokens]
+    if scale:                                        # Gemma convention
+        x = x * jnp.asarray(np.sqrt(d), x.dtype)
+    return x
+
+
+def unembed(p, x, *, softcap: float | None = None):
+    if "unembed" in p:
+        logits = x @ p["unembed"]
+    else:
+        logits = x @ p["tokens"].T                   # tied
+    logits = logits.astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# --------------------------------------------------------------------------- #
+# Causal depthwise conv (Mamba2 / xLSTM front conv)
+# --------------------------------------------------------------------------- #
+def causal_conv1d(w, x, state=None):
+    """Depthwise causal conv. w [C, K]; x [B, L, C]; state [B, K-1, C] | None.
+
+    Returns (y [B, L, C], new_state [B, K-1, C]).
+    """
+    k = w.shape[-1]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)         # [B, L+K-1, C]
+    # y[t] = sum_i w[:, i] * xp[t + i]  (w[:, K-1] multiplies the current token)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[:, i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return y, new_state

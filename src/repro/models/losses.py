@@ -1,0 +1,58 @@
+"""Losses: chunked cross-entropy (bounded logits memory) + router aux."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import unembed
+
+__all__ = ["chunked_ce_from_hidden", "masked_unit_ce"]
+
+
+def _ce_chunk(embed_params, h, targets, mask, softcap):
+    """h [B, C, D] -> (sum nll, count) over valid positions."""
+    logits = unembed(embed_params, h, softcap=softcap)       # f32 [B,C,V]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    return nll.sum(), mask.sum()
+
+
+def chunked_ce_from_hidden(embed_params, hidden, targets, mask=None, *,
+                           softcap=None, n_chunks: int = 8,
+                           unroll: bool = False):
+    """Token-mean cross-entropy, computed in sequence chunks so the [B,S,V]
+    logits tensor never materializes (peak is [B, S/n_chunks, V] f32).
+    """
+    b, s, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    while s % n_chunks:
+        n_chunks -= 1
+    c = s // n_chunks
+    if n_chunks <= 1:
+        tot, cnt = _ce_chunk(embed_params, hidden, targets, mask, softcap)
+        return tot / jnp.maximum(cnt, 1.0)
+
+    hc = hidden.reshape(b, n_chunks, c, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, n_chunks, c).transpose(1, 0, 2)
+    mc = mask.reshape(b, n_chunks, c).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        h, t, m = xs
+        dt, dc = _ce_chunk(embed_params, h, t, m, softcap)
+        return (tot + dt, cnt + dc), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (0.0, 0.0), (hc, tc, mc),
+                                 unroll=n_chunks if unroll else 1)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def masked_unit_ce(embed_params, hidden, targets, mask, *, n_chunks: int = 8,
+                   unroll: bool = False):
+    """HuBERT-style masked-unit prediction: CE only on masked frames."""
+    return chunked_ce_from_hidden(embed_params, hidden, targets, mask,
+                                  n_chunks=n_chunks, unroll=unroll)

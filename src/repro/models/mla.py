@@ -1,0 +1,113 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Train/prefill path materializes per-head K/V from the compressed latent;
+decode keeps only the latent cache (kv_lora + rope_dim per token — 576
+floats for V3 instead of 2·128·128=32768 for vanilla MHA) and *absorbs*
+the up-projections into the query/output transforms, which is the entire
+point of MLA at serving time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import rmsnorm, rmsnorm_spec, rope
+from repro.models.params import spec
+from repro.shard.api import constrain
+
+__all__ = ["mla_specs", "mla_train", "mla_decode", "mla_cache_shape"]
+
+
+def mla_specs(cfg, layers: int):
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.nope_dim + cfg.rope_dim
+    ll = ("layers",)
+    return {
+        "q_down": spec((layers, d, cfg.q_lora), ll + ("embed", "q_lora")),
+        "q_norm": rmsnorm_spec(cfg.q_lora, layers),
+        "q_up": spec((layers, cfg.q_lora, h, qk), ll + ("q_lora", "heads", "head_dim")),
+        "kv_down": spec((layers, d, cfg.kv_lora), ll + ("embed", "q_lora")),
+        "kv_norm": rmsnorm_spec(cfg.kv_lora, layers),
+        "k_rope": spec((layers, d, cfg.rope_dim), ll + ("embed", "head_dim")),
+        "k_up": spec((layers, cfg.kv_lora, h, cfg.nope_dim),
+                     ll + ("kv_lora", "heads", "head_dim")),
+        "v_up": spec((layers, cfg.kv_lora, h, cfg.v_head_dim),
+                     ll + ("kv_lora", "heads", "head_dim")),
+        "out": spec((layers, h, cfg.v_head_dim, d),
+                    ll + ("heads", "head_dim", "embed")),
+    }
+
+
+def _latent(p, x, cfg, positions):
+    """Shared down-projections. Returns (q [B,S,H,qk], c_kv, k_pe)."""
+    qc = rmsnorm(p["q_norm"], x @ p["q_down"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhd->bshd", qc, p["q_up"])
+    q_nope, q_pe = q[..., :cfg.nope_dim], q[..., cfg.nope_dim:]
+    q_pe = rope(q_pe, positions, cfg.rope_theta)
+    c_kv = rmsnorm(p["kv_norm"], x @ p["kv_down"], cfg.norm_eps)
+    k_pe = rope((x @ p["k_rope"])[:, :, None, :], positions,
+                cfg.rope_theta)                       # [B,S,1,rope]
+    return q_nope, q_pe, c_kv, k_pe
+
+
+def mla_train(p, x, cfg, positions, *, impl="chunked", chunk=1024,
+              unroll: bool = False):
+    """Full (non-absorbed) MLA for train/prefill. x [B,S,D] -> [B,S,D]."""
+    b, s, _ = x.shape
+    q_nope, q_pe, c_kv, k_pe = _latent(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["k_up"])
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, p["v_up"])
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_pe, k_nope.shape[:3] + (cfg.rope_dim,))],
+                        axis=-1)
+    q = constrain(q, ("batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("batch", "act_seq", "act_heads", None))
+    scale = (cfg.nope_dim + cfg.rope_dim) ** -0.5
+    # v_head_dim may differ from qk dim: pad v for the shared kernel, crop out.
+    qk = cfg.nope_dim + cfg.rope_dim
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk - cfg.v_head_dim)))
+    o = attn.attend(q, k, v_p, causal=True, scale=scale, impl=impl,
+                    chunk=chunk, unroll=unroll)
+    o = o[..., :cfg.v_head_dim]
+    return jnp.einsum("bshd,hdm->bsm", o, p["out"])
+
+
+def mla_cache_shape(cfg, batch: int, cache_len: int):
+    return {"c_kv": (batch, cache_len, cfg.kv_lora),
+            "k_pe": (batch, cache_len, cfg.rope_dim)}
+
+
+def mla_decode(p, x, cfg, cache, pos):
+    """Absorbed-matrix single-token decode.
+
+    x [B,1,D]; cache dict of c_kv [B,T,R], k_pe [B,T,rope]; pos scalar.
+    score_h(t) = q_nope_h · (W_uk_h c_t) + q_pe_h · k_pe_t
+               = (W_uk_h^T q_nope_h) · c_t + q_pe_h · k_pe_t
+    """
+    positions = jnp.full((x.shape[0], 1), pos)
+    q_nope, q_pe, c_new, kpe_new = _latent(p, x, cfg, positions)
+    t_len = cache["c_kv"].shape[1]
+    slot = jnp.mod(pos, t_len)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+    k_pe = jax.lax.dynamic_update_slice(
+        cache["k_pe"], kpe_new[:, :, 0, :].astype(cache["k_pe"].dtype),
+        (0, slot, 0))
+    # Absorb W_uk into q: q_lat [B,1,H,R]
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, p["k_up"])
+    scale = (cfg.nope_dim + cfg.rope_dim) ** -0.5
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv.astype(q_lat.dtype))
+              + jnp.einsum("bshd,btd->bhst", q_pe, k_pe.astype(q_pe.dtype)))
+    scores = scores.astype(jnp.float32) * scale
+    k_pos, k_valid = attn.cache_slot_positions(pos, t_len)
+    ok = k_valid & (k_pos <= pos)
+    scores = jnp.where(ok[None, None, None, :], scores, attn._NEG)
+    w = jax.nn.softmax(scores, axis=-1)
+    # Attend in latent space, then up-project once: o = (w @ c_kv) W_uv
+    o_lat = jnp.einsum("bhst,btr->bshr", w.astype(c_kv.dtype), c_kv)
+    o = jnp.einsum("bshr,rhd->bshd", o_lat, p["v_up"])
+    y = jnp.einsum("bshd,hdm->bsm", o, p["out"])
+    return y, {"c_kv": c_kv, "k_pe": k_pe}

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts feed-forward with capacity-based gather dispatch.
+
+Design (DESIGN.md §6): tokens are reshaped into ``G`` groups (the data-
+parallel dispatch granularity); within a group each token's top-k experts
+get a slot in a per-(group, expert) capacity buffer.  Dispatch and combine
+are *gathers* driven by an index map — no ``[tokens, experts, capacity]``
+one-hot ever materializes and no extra matmul FLOPs are spent, unlike the
+classic GShard einsum formulation (kept as ``moe_impl='einsum'`` for
+comparison — it is the hillclimb baseline's alternative).
+
+Sharding intent: group dim -> ('pod','data'); expert dim -> 'model' (expert
+parallelism inside the TP axis); the G->E resharding between dispatch and
+expert compute is where the partitioner inserts the all-to-all.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import mlp, mlp_specs, _act
+from repro.models.params import spec
+from repro.shard.api import constrain
+
+__all__ = ["moe_specs", "moe_ffn", "router_aux_loss"]
+
+
+def moe_specs(d: int, cfg, layers: int):
+    p = {"router": spec((layers, d, cfg.n_experts),
+                        ("layers", "embed", "experts"), std=d ** -0.5),
+         "experts": mlp_specs(d, cfg.moe_d_ff, cfg.act, layers=layers,
+                              experts=cfg.n_experts)}
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_specs(d, cfg.n_shared_experts * cfg.moe_d_ff,
+                                cfg.act, layers=layers)
+    return p
+
+
+def _capacity(s_g: int, cfg) -> int:
+    c = int(np.ceil(s_g * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)                    # multiple of 8, >= 8
+
+
+def _route(logits, cfg):
+    """logits [.., E] (f32) -> (expert_idx [.., K], gates [.., K])."""
+    if cfg.router == "sigmoid":                      # DeepSeek-V3 style
+        scores = jax.nn.sigmoid(logits)
+        g, idx = jax.lax.top_k(scores, cfg.top_k)
+        gates = g / jnp.maximum(g.sum(-1, keepdims=True), 1e-9)
+    else:
+        top, idx = jax.lax.top_k(logits, cfg.top_k)
+        gates = jax.nn.softmax(top, axis=-1)
+    return idx, gates
+
+
+def _expert_mlp(pe, xe, act):
+    """xe [G, E, C, D] through per-expert MLP weights [L, E, D, F]."""
+    up = pe["up"]                                    # [E, D, F]
+    h = jnp.einsum("gecd,edf->gecf", xe, up)
+    if "gate" in pe:
+        h = h * _act(jnp.einsum("gecd,edf->gecf", xe, pe["gate"]), act)
+    else:
+        h = _act(h, act)
+    return jnp.einsum("gecf,efd->gecd", h, pe["down"])
+
+
+def moe_ffn(p, x, cfg, *, impl: str = "gather", group_size: int = 2048):
+    """MoE FFN. x [B, S, D]; p = per-layer (pre-sliced) MoE params.
+
+    Returns (y [B, S, D], aux dict with router stats for the aux loss).
+    """
+    b, s, d = x.shape
+    t = b * s
+    s_g = min(group_size, t)
+    while t % s_g:
+        s_g //= 2
+    g = t // s_g
+    xt = x.reshape(g, s_g, d)
+    xt = constrain(xt, ("moe_groups", None, None))
+    logits = (xt @ p["router"]).astype(jnp.float32)       # [G, S_g, E]
+    expert_idx, gates = _route(logits, cfg)                   # [G, S_g, K]
+    e, k, c = cfg.n_experts, cfg.top_k, _capacity(s_g, cfg)
+
+    if impl == "einsum":
+        y = _einsum_moe(p, xt, expert_idx, gates, cfg, c)
+    else:
+        y = _gather_moe(p, xt, expert_idx, gates, cfg, c)
+    y = y.reshape(b, s, d).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], x, cfg.act)
+    aux = {"router_probs": jax.nn.softmax(logits, -1), "expert_idx": expert_idx}
+    return y, aux
+
+
+def _gather_moe(p, xt, expert_idx, gates, cfg, c):
+    g, s_g, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n = s_g * k
+    flat_e = expert_idx.reshape(g, n)                         # [G, N]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # [G, N, E]
+    pos = jnp.cumsum(onehot, axis=1) - 1                      # pos within expert
+    pos_i = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = pos_i < c                                          # capacity drop
+    pos_clip = jnp.where(keep, pos_i, c)                      # c = OOB -> dropped
+
+    # Index map (g, e, c) -> source token row (s_g = zero-pad row sentinel).
+    src = jnp.full((g, e, c), s_g, jnp.int32)
+    g_ix = jnp.broadcast_to(jnp.arange(g)[:, None], (g, n))
+    src = src.at[g_ix, flat_e, pos_clip].set(
+        jnp.broadcast_to(jnp.arange(n)[None, :] // k, (g, n)).astype(jnp.int32),
+        mode="drop")
+
+    x_pad = jnp.concatenate([xt, jnp.zeros((g, 1, d), xt.dtype)], axis=1)
+    xe = jnp.take_along_axis(x_pad[:, :, None, :],
+                             src.reshape(g, e * c)[:, :, None, None], axis=1)
+    xe = xe.reshape(g, e, c, d)
+    xe = constrain(xe, ("moe_dispatch", "experts_act", None, None))
+    ye = _expert_mlp(p["experts"], xe, cfg.act)               # [G, E, C, D]
+    ye = constrain(ye, ("moe_dispatch", "experts_act", None, None))
+
+    # Combine: gather each (token, k) slot's output and mix by gate.
+    ye_flat = ye.reshape(g, e * c, d)
+    slot = flat_e * c + jnp.minimum(pos_clip, c - 1)
+    out = jnp.take_along_axis(ye_flat, slot[..., None], axis=1)   # [G, N, D]
+    w = (gates.reshape(g, n) * keep).astype(out.dtype)
+    return (out * w[..., None]).reshape(g, s_g, k, d).sum(axis=2)
+
+
+def _einsum_moe(p, xt, expert_idx, gates, cfg, c):
+    """GShard-style one-hot einsum dispatch (comparison baseline).
+
+    Note: an experiment that PINNED the dispatch/combine masks group-sharded
+    (EXPERIMENTS.md §Perf ds-v3 iter3) made the EP layout 6x worse — XLA's
+    own sharding propagation finds a better schedule than the manual pins,
+    so the masks are left unconstrained."""
+    g, s_g, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    oh = jax.nn.one_hot(expert_idx, e)                        # [G, S, K, E]
+    pos = jnp.cumsum(oh.reshape(g, s_g * k, e), axis=1).reshape(g, s_g, k, e) - 1
+    keep = (pos < c) & (oh > 0)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, c), c)       # [G, S, K, E, C]
+    dispatch = (oh[..., None] * pos_oh).sum(axis=2)           # [G, S, E, C]
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(xt.dtype), xt)
+    ye = _expert_mlp(p["experts"], xe, cfg.act)
+    combine = (gates[..., None, None] * oh[..., None] * pos_oh).sum(axis=2)
+    return jnp.einsum("gsec,gecd->gsd", combine.astype(ye.dtype), ye)
+
+
+def router_aux_loss(aux, n_experts: int) -> jax.Array:
+    """Switch-style load-balance loss: E * sum_e f_e * P_e."""
+    probs = aux["router_probs"]                               # [G, S, E]
+    idx = aux["expert_idx"]                                   # [G, S, K]
+    f = jax.nn.one_hot(idx, n_experts).mean(axis=(0, 1, 2))   # fraction routed
+    pm = probs.mean(axis=(0, 1))
+    return n_experts * jnp.sum(f * pm)

@@ -1,0 +1,86 @@
+"""Parameter-spec machinery: declare once, use for init / dry-run / sharding.
+
+Models declare their parameters as a pytree of :class:`ParamSpec` (shape +
+logical axis names + initializer).  From that single declaration we derive:
+
+* ``init_params``     — materialized arrays (deterministic per-leaf PRNG);
+* ``abstract_params`` — ``jax.ShapeDtypeStruct`` stand-ins (dry-run: no
+  allocation ever happens for the full-size configs);
+* ``logical_axes``    — the pytree of logical-axis tuples consumed by
+  ``repro.shard.rules`` to produce ``PartitionSpec``/``NamedSharding``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "spec", "init_params", "abstract_params",
+           "logical_axes", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]   # logical axis name per dim (None = no name)
+    init: str = "normal"           # normal | zeros | ones
+    std: float | None = None       # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def spec(shape, axes, init: str = "normal", std: float | None = None) -> ParamSpec:
+    return ParamSpec(tuple(int(s) for s in shape), tuple(axes), init, std)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in(s: ParamSpec) -> int:
+    # Last dim is the output features by convention; everything between the
+    # stacking ('layers'/'experts') axes and the output dim is fan-in.
+    stacked = {"layers", "experts", "groups"}
+    dims = [d for d, a in zip(s.shape[:-1], s.axes[:-1]) if a not in stacked]
+    return int(np.prod(dims)) if dims else 1
+
+
+def init_params(specs, key: jax.Array, dtype=jnp.float32):
+    """Materialize parameters; each leaf gets a path-derived key."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    paths = jax.tree.leaves_with_path(specs, is_leaf=_is_spec)
+
+    arrays = []
+    for (path, s), _ in zip(paths, leaves):
+        if s.init == "zeros":
+            arrays.append(jnp.zeros(s.shape, dtype))
+            continue
+        if s.init == "ones":
+            arrays.append(jnp.ones(s.shape, dtype))
+            continue
+        std = s.std if s.std is not None else _fan_in(s) ** -0.5
+        leaf_key = jax.random.fold_in(key, abs(hash(jax.tree_util.keystr(path))) % (2**31))
+        arrays.append((std * jax.random.normal(leaf_key, s.shape)).astype(dtype))
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(specs, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree — the dry-run stand-in (no allocation)."""
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+                        is_leaf=_is_spec)
+
+
+def logical_axes(specs):
+    """Pytree of logical-axis tuples, mirroring the params pytree."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def count_params(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))

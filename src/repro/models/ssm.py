@@ -1,0 +1,180 @@
+"""Mamba2 (SSD) blocks + the shared chunked linear-recurrence machinery.
+
+The state-space duality scan here is the pure-jnp reference semantics for
+the Pallas ``ssm_scan`` kernel: within a chunk the recurrence is evaluated
+as a (decay-masked) quadratic attention; across chunks a sequential
+``lax.scan`` carries the [heads, head_dim, state] SSM state.  The same
+``chunked_linear_scan`` is reused by the mLSTM (matrix-memory) blocks in
+``repro.models.xlstm`` — both are gated linear recurrences.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import causal_conv1d, rmsnorm, rmsnorm_spec
+from repro.models.params import spec
+from repro.shard.api import constrain
+
+__all__ = ["chunked_linear_scan", "mamba2_specs", "mamba2_block",
+           "mamba2_decode", "mamba2_state_shapes"]
+
+
+def _segsum(log_decay):
+    """Cumulative within-chunk decay matrix.
+
+    log_decay [..., L]; returns S [..., L, L] with
+    S[i, j] = sum_{t=j+1..i} log_decay[t]  for i >= j,  -inf otherwise.
+    """
+    l = log_decay.shape[-1]
+    cum = jnp.cumsum(log_decay, axis=-1)
+    s = cum[..., :, None] - cum[..., None, :]
+    i, j = jnp.meshgrid(jnp.arange(l), jnp.arange(l), indexing="ij")
+    return jnp.where(i >= j, s, -jnp.inf)
+
+
+def chunked_linear_scan(k, v, q, log_decay, gate, *, chunk: int,
+                        initial_state=None, unroll: bool = False):
+    """Gated linear recurrence  S_t = exp(log_decay_t)·S_{t-1} + gate_t·k_t v_tᵀ,
+    y_t = q_t · S_t — evaluated chunk-parallel (SSD / linear attention).
+
+    Shapes: k [B,L,H,N], v [B,L,H,P], q [B,L,H,N], log_decay/gate [B,L,H].
+    Returns (y [B,L,H,P], final_state [B,H,N,P]).
+    """
+    b, l, h, n = k.shape
+    p = v.shape[-1]
+    l_orig = l
+    pad = (-l) % chunk
+    if pad:                        # tail-pad: gate=0, decay=1 (state-neutral)
+        padf = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        k, v, q, log_decay, gate = map(padf, (k, v, q, log_decay, gate))
+        l = l + pad
+    nc = l // chunk
+    r = lambda x: x.reshape((b, nc, chunk) + x.shape[2:])
+    kc, vc, qc = r(k), r(v), r(q)
+    ld = r(log_decay).astype(jnp.float32)            # [B,C,Q,H]
+    g = r(gate).astype(jnp.float32)
+
+    # ---- intra-chunk (quadratic within the chunk) --------------------- #
+    seg = _segsum(ld.transpose(0, 1, 3, 2))          # [B,C,H,Q,Q]
+    decay_m = jnp.exp(seg)
+    att = jnp.einsum("bcihn,bcjhn->bchij", qc, kc)   # [B,C,H,Q,Q]
+    att = att * decay_m * g.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", att.astype(vc.dtype), vc)
+
+    # ---- chunk summaries + sequential inter-chunk scan ----------------- #
+    cum = jnp.cumsum(ld, axis=2)                     # [B,C,Q,H]
+    total = cum[:, :, -1, :]                         # [B,C,H]
+    # state contribution of chunk c: sum_j exp(total - cum_j) g_j k_j v_j^T
+    w_in = jnp.exp(total[:, :, None, :] - cum) * g   # [B,C,Q,H]
+    s_chunk = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp",
+                         w_in, kc.astype(jnp.float32), vc.astype(jnp.float32))
+
+    s0 = (jnp.zeros((b, h, n, p), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s_prev, inp):
+        tot_c, s_c = inp                             # [B,H], [B,H,N,P]
+        s_new = s_prev * jnp.exp(tot_c)[..., None, None] + s_c
+        return s_new, s_prev
+
+    (s_fin, s_prevs) = jax.lax.scan(
+        step, s0, (total.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)),
+        unroll=nc if unroll else 1)
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)       # [B,C,H,N,P]
+
+    # y_inter_i = exp(cum_i) * q_i · S_{prev chunk}
+    w_out = jnp.exp(cum)                             # [B,C,Q,H]
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp",
+                         qc.astype(jnp.float32), s_prevs, w_out)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(b, l, h, p)
+    return y[:, :l_orig], s_fin
+
+
+# --------------------------------------------------------------------------- #
+# Mamba2 block
+# --------------------------------------------------------------------------- #
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh
+
+
+def mamba2_specs(cfg, layers: int):
+    d = cfg.d_model
+    d_in, nh = _dims(cfg)
+    st = cfg.ssm_state
+    ll = ("layers",)
+    conv_ch = d_in + 2 * st
+    return {
+        "in_proj": spec((layers, d, 2 * d_in + 2 * st + nh),
+                        ll + ("embed", "ssm_inner")),
+        "conv": spec((layers, conv_ch, cfg.ssm_conv), ll + ("ssm_inner", "conv"),
+                     std=0.5),
+        "a_log": spec((layers, nh), ll + (None,), init="zeros"),
+        "d_skip": spec((layers, nh), ll + (None,), init="ones"),
+        "dt_bias": spec((layers, nh), ll + (None,), init="zeros"),
+        "norm": rmsnorm_spec(d_in, layers),
+        "out_proj": spec((layers, d_in, d), ll + ("ssm_inner", "embed")),
+    }
+
+
+def _mamba2_inputs(p, x, cfg, conv_state=None):
+    d_in, nh = _dims(cfg)
+    st = cfg.ssm_state
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * st], axis=-1)
+    xbc, new_conv = causal_conv1d(p["conv"], xbc, conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, bm, cm = jnp.split(xbc, [d_in, d_in + st], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,L,nh]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                 # [nh]
+    xs = xs.reshape(xs.shape[:2] + (nh, cfg.ssm_head_dim))
+    return z, xs, bm, cm, dt, a, new_conv
+
+
+def mamba2_block(p, x, cfg, unroll: bool = False):
+    """Train/prefill forward. x [B,L,D] -> ([B,L,D], final state dict)."""
+    b, l, d = x.shape
+    d_in, nh = _dims(cfg)
+    z, xs, bm, cm, dt, a, new_conv = _mamba2_inputs(p, x, cfg)
+    log_decay = dt * a[None, None, :]                 # [B,L,nh]
+    k = jnp.broadcast_to(bm[:, :, None, :], (b, l, nh, cfg.ssm_state))
+    q = jnp.broadcast_to(cm[:, :, None, :], (b, l, nh, cfg.ssm_state))
+    y, s_fin = chunked_linear_scan(k, xs, q, log_decay, dt,
+                                   chunk=min(cfg.ssm_chunk, l), unroll=unroll)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, l, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = constrain(y, ("batch", "act_seq", "act_ffn"))
+    return y @ p["out_proj"], {"conv": new_conv,
+                               "ssm": s_fin.astype(x.dtype)}
+
+
+def mamba2_state_shapes(cfg, batch: int):
+    d_in, nh = _dims(cfg)
+    conv_ch = d_in + 2 * cfg.ssm_state
+    return {"conv": (batch, cfg.ssm_conv - 1, conv_ch),
+            "ssm": (batch, nh, cfg.ssm_state, cfg.ssm_head_dim)}
+
+
+def mamba2_decode(p, x, cfg, state):
+    """Single-token recurrent step. x [B,1,D]; state dict(conv, ssm)."""
+    b = x.shape[0]
+    d_in, nh = _dims(cfg)
+    z, xs, bm, cm, dt, a, new_conv = _mamba2_inputs(
+        p, x, cfg, conv_state=state["conv"])
+    dt1 = dt[:, 0]                                    # [B,nh]
+    decay = jnp.exp(dt1 * a[None, :])                 # [B,nh]
+    # S <- decay·S + dt·B x^T ;  y = C·S  (state [B,nh,N,P])
+    s = state["ssm"].astype(jnp.float32)
+    outer = jnp.einsum("bn,bhp,bh->bhnp", bm[:, 0].astype(jnp.float32),
+                       xs[:, 0].astype(jnp.float32), dt1)
+    s = s * decay[..., None, None] + outer
+    y = jnp.einsum("bn,bhnp->bhp", cm[:, 0].astype(jnp.float32), s)
+    y = y + p["d_skip"][None, :, None] * xs[:, 0].astype(jnp.float32)
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"], {"conv": new_conv, "ssm": s.astype(state["ssm"].dtype)}

@@ -1,0 +1,465 @@
+"""Decoder / encoder transformer assembly for dense, MoE, VLM and audio archs.
+
+Layers are stacked along a leading 'layers' axis and executed with
+``lax.scan`` (compile time independent of depth — essential for the 61-layer
+671B dry-run) or python-unrolled for tiny tests.  Alternating-attention
+architectures (Gemma2 local/global) scan over *pairs* of layers so the scan
+body stays static.  Remat policy wraps the scan body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig, RuntimeFlags
+from repro.models.layers import (embed, embed_specs, mlp, mlp_specs, mrope,
+                                 rmsnorm, rmsnorm_spec, rope, unembed)
+from repro.models.losses import chunked_ce_from_hidden, masked_unit_ce
+from repro.models.params import spec
+from repro.shard.api import constrain
+
+__all__ = ["transformer_specs", "transformer_loss", "transformer_prefill",
+           "transformer_decode", "transformer_cache_shapes",
+           "transformer_cache_axes", "hidden_forward"]
+
+
+# --------------------------------------------------------------------------- #
+# Parameter specs
+# --------------------------------------------------------------------------- #
+def _attn_specs(cfg: ModelConfig, layers: int):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ll = ("layers",)
+    return {
+        "wq": spec((layers, d, h, hd), ll + ("embed", "heads", "head_dim")),
+        "wk": spec((layers, d, kv, hd), ll + ("embed", "kv_heads", "head_dim")),
+        "wv": spec((layers, d, kv, hd), ll + ("embed", "kv_heads", "head_dim")),
+        "wo": spec((layers, h, hd, d), ll + ("heads", "head_dim", "embed")),
+    }
+
+
+def _layer_specs(cfg: ModelConfig, layers: int, moe: bool):
+    d = cfg.d_model
+    s = {"ln1": rmsnorm_spec(d, layers), "ln2": rmsnorm_spec(d, layers)}
+    if cfg.post_norm:
+        s["ln1_post"] = rmsnorm_spec(d, layers)
+        s["ln2_post"] = rmsnorm_spec(d, layers)
+    s["attn"] = (mla_mod.mla_specs(cfg, layers) if cfg.mla
+                 else _attn_specs(cfg, layers))
+    if moe:
+        s["ffn"] = moe_mod.moe_specs(d, cfg, layers)
+    else:
+        ff = cfg.dense_d_ff or cfg.d_ff
+        s["ffn"] = mlp_specs(d, ff, cfg.act, layers=layers)
+    return s
+
+
+def transformer_specs(cfg: ModelConfig):
+    s = {"embed": embed_specs(cfg.vocab, cfg.d_model, cfg.tie_embeddings),
+         "final_norm": rmsnorm_spec(cfg.d_model)}
+    if cfg.family == "audio":
+        s["frontend"] = {
+            "proj": spec((cfg.frontend_dim, cfg.d_model), ("ffn", "embed")),
+            "mask_emb": spec((cfg.d_model,), ("embed",), std=0.02)}
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    if cfg.is_moe and cfg.first_dense_layers:
+        s["dense_layers"] = _layer_specs(cfg, cfg.first_dense_layers, False)
+        s["layers"] = _layer_specs(cfg, n_moe, True)
+    else:
+        s["layers"] = _layer_specs(cfg, cfg.n_layers, cfg.is_moe)
+    return s
+
+
+# --------------------------------------------------------------------------- #
+# Blocks
+# --------------------------------------------------------------------------- #
+def _attention(p, x, cfg: ModelConfig, flags: RuntimeFlags, positions, window,
+               cache=None, pos=None):
+    """Standard GQA attention; returns (out, new (k,v) or per-step cache)."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.mrope_sections:
+        q = mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    scale = cfg.query_scale if cfg.query_scale is not None else cfg.head_dim ** -0.5
+    if flags.attn_shard == "heads_repeat" and cfg.n_heads != cfg.n_kv_heads:
+        rep = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    q = constrain(q, ("batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("batch", "act_seq", "act_kv_heads", None))
+    v = constrain(v, ("batch", "act_seq", "act_kv_heads", None))
+
+    if cache is None:                                # train / prefill
+        o = attn_mod.attend(q, k, v, causal=cfg.causal, window=window,
+                            softcap=cfg.attn_softcap, scale=scale,
+                            impl=flags.attn_impl, chunk=flags.attn_chunk,
+                            unroll=flags.analysis_unroll)
+        kv = (k, v)
+    else:                                            # single-token decode
+        ck, cv = attn_mod.write_kv(cache[0], cache[1], k, v, pos)
+        t_len = ck.shape[1]
+        k_pos, k_valid = attn_mod.cache_slot_positions(pos, t_len)
+        o = attn_mod.attend(q, ck, cv, causal=cfg.causal, window=window,
+                            softcap=cfg.attn_softcap, scale=scale,
+                            q_pos0=pos, k_pos=k_pos, k_valid=k_valid,
+                            impl=flags.attn_impl, chunk=flags.attn_chunk,
+                            unroll=flags.analysis_unroll)
+        kv = (ck, cv)
+    o = constrain(o, ("batch", "act_seq", "act_heads", None))
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), kv
+
+
+def _ffn(p, x, cfg, flags, moe: bool):
+    if moe:
+        y, aux = moe_mod.moe_ffn(p, x, cfg, impl=flags.moe_impl)
+        return y, moe_mod.router_aux_loss(aux, cfg.n_experts)
+    return mlp(p, x, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def _block(p, x, cfg, flags, positions, window, moe, cache=None, pos=None):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        if cache is None:
+            a = mla_mod.mla_train(p["attn"], h, cfg, positions,
+                                  impl=flags.attn_impl, chunk=flags.attn_chunk,
+                                  unroll=flags.analysis_unroll)
+            new_cache = None
+        else:
+            a, new_cache = mla_mod.mla_decode(p["attn"], h, cfg, cache, pos)
+    else:
+        a, new_cache = _attention(p["attn"], h, cfg, flags, positions, window,
+                                  cache=cache, pos=pos)
+    if cfg.post_norm:
+        a = rmsnorm(p["ln1_post"], a, cfg.norm_eps)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    f, aux = _ffn(p["ffn"], h, cfg, flags, moe)
+    if cfg.post_norm:
+        f = rmsnorm(p["ln2_post"], f, cfg.norm_eps)
+    return x + f, aux, new_cache
+
+
+def _remat(fn, flags: RuntimeFlags):
+    if flags.remat == "full":
+        return jax.checkpoint(fn)
+    if flags.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _group(cfg: ModelConfig) -> int:
+    return 2 if cfg.alt_window is not None else 1
+
+
+def _stack(params, x, cfg, flags, positions, moe: bool):
+    """Run a layer stack (train path). Returns (x, summed aux)."""
+    g = _group(cfg)
+
+    def body(x, layer_p):
+        aux = jnp.zeros((), jnp.float32)
+        for j in range(g):
+            pj = jax.tree.map(lambda a: a[j], layer_p) if g > 1 else layer_p
+            win = cfg.alt_window if (g > 1 and j == 0) else (
+                None if g > 1 else cfg.window)
+            x, a, _ = _block(pj, x, cfg, flags, positions, win, moe)
+            aux = aux + a
+        return x, aux
+
+    body = _remat(body, flags)
+    n_layers = jax.tree.leaves(params)[0].shape[0]
+    if flags.scan_layers:
+        stacked = params
+        if g > 1:
+            stacked = jax.tree.map(
+                lambda a: a.reshape((a.shape[0] // g, g) + a.shape[1:]), params)
+        x, auxs = jax.lax.scan(
+            body, x, stacked,
+            unroll=(jax.tree.leaves(stacked)[0].shape[0]
+                    if flags.analysis_unroll else 1))
+        return x, auxs.sum()
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(0, n_layers, g):
+        layer_p = jax.tree.map(
+            lambda a: a[i:i + g] if g > 1 else a[i], params)
+        x, a = body(x, layer_p)
+        aux = aux + a
+    return x, aux
+
+
+# --------------------------------------------------------------------------- #
+# Forward / loss
+# --------------------------------------------------------------------------- #
+def _embed_inputs(params, cfg: ModelConfig, flags: RuntimeFlags, batch):
+    """Family-specific input embedding. Returns (x, positions)."""
+    dt = jnp.dtype(flags.compute_dtype)
+    if cfg.family == "audio":
+        x = batch["features"].astype(dt) @ params["frontend"]["proj"].astype(dt)
+        mask_emb = params["frontend"]["mask_emb"].astype(dt)
+        x = jnp.where(batch["mask"][..., None], mask_emb[None, None, :], x)
+        positions = jnp.arange(x.shape[1])[None, :]
+        return x, positions
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, scale=cfg.embed_scale,
+              d=cfg.d_model).astype(dt)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        nv = batch["vision_embeds"].shape[1]
+        x = jnp.concatenate([batch["vision_embeds"].astype(dt), x[:, nv:]], 1)
+    if cfg.mrope_sections:
+        positions = batch["positions"]               # [3, B, S]
+    else:
+        positions = jnp.arange(x.shape[1])[None, :]
+    return x, positions
+
+
+def hidden_forward(params, cfg: ModelConfig, flags: RuntimeFlags, batch):
+    """Embed -> layer stacks -> final norm. Returns (hidden, aux)."""
+    x, positions = _embed_inputs(params, cfg, flags, batch)
+    x = constrain(x, ("batch", "act_seq", None))
+    aux = jnp.zeros((), jnp.float32)
+    if "dense_layers" in params:
+        x, a = _stack(params["dense_layers"], x, cfg, flags, positions, False)
+        aux = aux + a
+    moe = cfg.is_moe
+    x, a = _stack(params["layers"], x, cfg, flags, positions, moe)
+    aux = aux + a
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def transformer_loss(params, cfg: ModelConfig, flags: RuntimeFlags, batch,
+                     aux_weight: float = 0.01):
+    hidden, aux = hidden_forward(params, cfg, flags, batch)
+    if cfg.family == "audio":
+        loss = masked_unit_ce(params["embed"], hidden, batch["targets"],
+                              batch["mask"], n_chunks=flags.loss_chunks,
+                              unroll=flags.analysis_unroll)
+    else:
+        loss = chunked_ce_from_hidden(
+            params["embed"], hidden, batch["targets"],
+            batch.get("loss_mask"), softcap=cfg.final_softcap,
+            n_chunks=flags.loss_chunks, unroll=flags.analysis_unroll)
+    metrics = {"ce": loss, "aux": aux}
+    return loss + aux_weight * aux, metrics
+
+
+# --------------------------------------------------------------------------- #
+# Serving: prefill + decode with ring caches
+# --------------------------------------------------------------------------- #
+def transformer_cache_shapes(cfg: ModelConfig, batch: int, cache_len: int):
+    """Cache pytree shapes (leading 'layers' axis). Ring len caps at window."""
+    if cfg.window is not None:
+        cache_len = min(cache_len, cfg.window)
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    if cfg.mla:
+        per = mla_mod.mla_cache_shape(cfg, batch, cache_len)
+    else:
+        per = {"k": (batch, cache_len, cfg.n_kv_heads, cfg.head_dim),
+               "v": (batch, cache_len, cfg.n_kv_heads, cfg.head_dim)}
+    out = {}
+    if cfg.is_moe and cfg.first_dense_layers:
+        out["dense_layers"] = {k: (cfg.first_dense_layers,) + v
+                               for k, v in per.items()}
+        out["layers"] = {k: (n_moe,) + v for k, v in per.items()}
+    else:
+        out["layers"] = {k: (cfg.n_layers,) + v for k, v in per.items()}
+    return out
+
+
+def transformer_cache_axes(cfg: ModelConfig):
+    """Logical axis names mirroring transformer_cache_shapes."""
+    if cfg.mla:
+        per = {"c_kv": (None, "batch", "cache_seq", "kv_lora"),
+               "k_pe": (None, "batch", "cache_seq", None)}
+    else:
+        per = {"k": (None, "batch", "cache_seq", "act_kv_heads", None),
+               "v": (None, "batch", "cache_seq", "act_kv_heads", None)}
+    out = {"layers": per}
+    if cfg.is_moe and cfg.first_dense_layers:
+        out["dense_layers"] = per
+    return out
+
+
+def _decode_stack(params, caches, x, cfg, flags, positions, pos, moe: bool):
+    g = _group(cfg)
+
+    def body(x, layer):
+        layer_p, layer_c = layer
+        new_cs = []
+        for j in range(g):
+            pj = jax.tree.map(lambda a: a[j], layer_p) if g > 1 else layer_p
+            cj = jax.tree.map(lambda a: a[j], layer_c) if g > 1 else layer_c
+            win = cfg.alt_window if (g > 1 and j == 0) else (
+                None if g > 1 else cfg.window)
+            if cfg.mla:
+                cache_in = cj
+            else:
+                cache_in = (cj["k"], cj["v"])
+            x, _, new_c = _block(pj, x, cfg, flags, positions, win, moe,
+                                 cache=cache_in, pos=pos)
+            new_c = new_c if cfg.mla else {"k": new_c[0], "v": new_c[1]}
+            new_cs.append(new_c)
+        out_c = (jax.tree.map(lambda *a: jnp.stack(a), *new_cs) if g > 1
+                 else new_cs[0])
+        return x, out_c
+
+    if flags.scan_layers:
+        stacked_p, stacked_c = params, caches
+        if g > 1:
+            reshape = lambda a: a.reshape((a.shape[0] // g, g) + a.shape[1:])
+            stacked_p = jax.tree.map(reshape, params)
+            stacked_c = jax.tree.map(reshape, caches)
+        x, new_c = jax.lax.scan(
+            body, x, (stacked_p, stacked_c),
+            unroll=(jax.tree.leaves(stacked_p)[0].shape[0]
+                    if flags.analysis_unroll else 1))
+        if g > 1:
+            new_c = jax.tree.map(
+                lambda a: a.reshape((a.shape[0] * g,) + a.shape[2:]), new_c)
+        return x, new_c
+    n_layers = jax.tree.leaves(params)[0].shape[0]
+    new_all = []
+    for i in range(0, n_layers, g):
+        sl = lambda a: a[i:i + g] if g > 1 else a[i]
+        x, nc = body(x, (jax.tree.map(sl, params), jax.tree.map(sl, caches)))
+        new_all.append(nc)
+    stack_fn = (jnp.concatenate if g > 1 else
+                lambda xs: jnp.stack(list(xs)))
+    new_c = jax.tree.map(lambda *a: stack_fn(a), *new_all)
+    return x, new_c
+
+
+def transformer_decode(params, cfg: ModelConfig, flags: RuntimeFlags, caches,
+                       tokens, pos):
+    """One decode step. tokens [B,1]; pos scalar int32 (current position)."""
+    dt = jnp.dtype(flags.compute_dtype)
+    x = embed(params["embed"], tokens, scale=cfg.embed_scale,
+              d=cfg.d_model).astype(dt)
+    x = constrain(x, ("batch", None, None))
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(pos, (3, tokens.shape[0], 1))
+    else:
+        positions = jnp.full((tokens.shape[0], 1), pos)
+    new_caches = dict(caches)
+    if "dense_layers" in params:
+        x, new_caches["dense_layers"] = _decode_stack(
+            params["dense_layers"], caches["dense_layers"], x, cfg, flags,
+            positions, pos, False)
+    x, new_caches["layers"] = _decode_stack(
+        params["layers"], caches["layers"], x, cfg, flags,
+        positions, pos, cfg.is_moe)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, softcap=cfg.final_softcap)
+    return logits, new_caches
+
+
+def transformer_prefill(params, cfg: ModelConfig, flags: RuntimeFlags, batch,
+                        cache_len: int):
+    """Full-sequence forward that also builds the decode cache.
+
+    Returns (last-token logits [B,1,V], caches at pos = S-1).
+    Encoder-only archs return full-sequence logits and no cache.
+    """
+    # Run the train-path forward once for hidden states...
+    hidden, _ = hidden_forward(params, cfg, flags, batch)
+    if cfg.is_encoder:
+        return unembed(params["embed"], hidden,
+                       softcap=cfg.final_softcap), {}
+    logits = unembed(params["embed"], hidden[:, -1:, :],
+                     softcap=cfg.final_softcap)
+    # ...and rebuild per-layer K/V for the cache via a cheap second pass of
+    # the projections only (avoids threading cache plumbing through scan).
+    caches = _build_caches(params, cfg, flags, batch, cache_len)
+    return logits, caches
+
+
+def _kv_for_cache(p, x, cfg, positions):
+    if cfg.mla:
+        c_kv = rmsnorm(p["attn"]["kv_norm"], x @ p["attn"]["kv_down"],
+                       cfg.norm_eps)
+        k_pe = rope((x @ p["attn"]["k_rope"])[:, :, None, :], positions,
+                    cfg.rope_theta)[:, :, 0, :]
+        return {"c_kv": c_kv, "k_pe": k_pe}
+    k = jnp.einsum("bsd,dhk->bshk", x, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["attn"]["wv"])
+    if cfg.mrope_sections:
+        k = mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        k = rope(k, positions, cfg.rope_theta)
+    return {"k": k, "v": v}
+
+
+def _ring_place(arr, s_len: int, cache_len: int):
+    """Place the last ``cache_len`` of a [B,S,...] seq at ring slots p%Tc."""
+    if s_len <= cache_len:
+        pad = [(0, 0), (0, cache_len - s_len)] + [(0, 0)] * (arr.ndim - 2)
+        return jnp.pad(arr, pad)
+    last = arr[:, s_len - cache_len:]
+    return jnp.roll(last, s_len % cache_len, axis=1)
+
+
+def _build_caches(params, cfg, flags, batch, cache_len: int):
+    """Second forward pass capturing per-layer K/V into ring caches."""
+    if cfg.window is not None:
+        cache_len = min(cache_len, cfg.window)
+    x, positions = _embed_inputs(params, cfg, flags, batch)
+    s_len = x.shape[1]
+    out = {}
+
+    def run(stack_params, x, moe):
+        g = _group(cfg)
+
+        def body(x, layer_p):
+            kvs = []
+            for j in range(g):
+                pj = jax.tree.map(lambda a: a[j], layer_p) if g > 1 else layer_p
+                h = rmsnorm(pj["ln1"], x, cfg.norm_eps)
+                kv = _kv_for_cache(pj, h, cfg, positions)
+                kvs.append(jax.tree.map(
+                    lambda a: _ring_place(a, s_len, cache_len), kv))
+                win = cfg.alt_window if (g > 1 and j == 0) else (
+                    None if g > 1 else cfg.window)
+                x, _, _ = _block(pj, x, cfg, flags, positions, win, moe)
+            kv_out = (jax.tree.map(lambda *a: jnp.stack(a), *kvs) if g > 1
+                      else kvs[0])
+            return x, kv_out
+
+        if flags.scan_layers:
+            stacked = stack_params
+            if g > 1:
+                stacked = jax.tree.map(
+                    lambda a: a.reshape((a.shape[0] // g, g) + a.shape[1:]),
+                    stack_params)
+            x, kv = jax.lax.scan(
+                body, x, stacked,
+                unroll=(jax.tree.leaves(stacked)[0].shape[0]
+                        if flags.analysis_unroll else 1))
+            if g > 1:
+                kv = jax.tree.map(
+                    lambda a: a.reshape((a.shape[0] * g,) + a.shape[2:]), kv)
+            return x, kv
+        n_layers = jax.tree.leaves(stack_params)[0].shape[0]
+        kvs = []
+        for i in range(0, n_layers, g):
+            layer_p = jax.tree.map(
+                lambda a: a[i:i + g] if g > 1 else a[i], stack_params)
+            x, kv = body(x, layer_p)
+            kvs.append(kv)
+        cat = jnp.concatenate if g > 1 else lambda xs: jnp.stack(list(xs))
+        return x, jax.tree.map(lambda *a: cat(a), *kvs)
+
+    if "dense_layers" in params:
+        x, out["dense_layers"] = run(params["dense_layers"], x, False)
+    _, out["layers"] = run(params["layers"], x, cfg.is_moe)
+    return out

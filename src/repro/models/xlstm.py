@@ -1,0 +1,205 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+The mLSTM is a gated linear recurrence — C_t = f_t·C_{t-1} + i_t·k_t v_tᵀ,
+h_t = (C_t q_t) / max(|n_t·q_t|, 1) — so the train path reuses the SSD
+``chunked_linear_scan`` with the normalizer n carried as an extra value
+column (v is augmented with a ones column).  The sLSTM has no parallel
+form (its recurrent gate mixing is sequential by construction); it runs as
+a ``lax.scan`` over time with the paper's exponential-gating stabilizer m.
+
+Simplifications vs. the released xLSTM code (DESIGN.md §5): the forget gate
+is sigmoid (log-space ≤ 0, so the chunked scan needs no running-max state),
+the input gate exponent is clipped at 8, and per-block LayerNorms replace
+the original's multi-head GroupNorm.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, mlp, mlp_specs, rmsnorm, rmsnorm_spec
+from repro.models.params import spec
+from repro.models.ssm import chunked_linear_scan
+
+__all__ = ["mlstm_specs", "mlstm_block", "mlstm_decode", "mlstm_state_shapes",
+           "slstm_specs", "slstm_block", "slstm_decode", "slstm_state_shapes"]
+
+_ICLIP = 8.0
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------------- #
+def _mdims(cfg):
+    d_in = 2 * cfg.d_model            # proj factor 2 (xLSTM paper)
+    hd = d_in // cfg.n_heads
+    return d_in, cfg.n_heads, hd
+
+
+def mlstm_specs(cfg):
+    d = cfg.d_model
+    d_in, nh, hd = _mdims(cfg)
+    return {
+        "norm": rmsnorm_spec(d),
+        "up": spec((d, 2 * d_in), ("embed", "ffn")),
+        "conv": spec((d_in, cfg.ssm_conv or 4), ("ffn", "conv"), std=0.5),
+        "wq": spec((d_in, d_in), ("ffn", "ssm_inner")),
+        "wk": spec((d_in, d_in), ("ffn", "ssm_inner")),
+        "wv": spec((d_in, d_in), ("ffn", "ssm_inner")),
+        "wi": spec((d_in, nh), ("ffn", None), std=0.01),
+        "wf": spec((d_in, nh), ("ffn", None), std=0.01),
+        "bi": spec((nh,), (None,), init="zeros"),
+        "bf": spec((nh,), (None,), init="ones"),   # bias toward remembering
+        "out_norm": rmsnorm_spec(d_in),
+        "down": spec((d_in, d), ("ffn", "embed")),
+    }
+
+
+def _mlstm_gates(p, xc):
+    """log forget (<=0) and clipped-exp input gate. xc [B,L,d_in] -> [B,L,nh]."""
+    logf = jax.nn.log_sigmoid((xc @ p["wf"]).astype(jnp.float32) + p["bf"])
+    i = jnp.exp(jnp.minimum((xc @ p["wi"]).astype(jnp.float32) + p["bi"], _ICLIP))
+    return logf, i
+
+
+def _mlstm_qkv(p, cfg, xm, xc):
+    d_in, nh, hd = _mdims(cfg)
+    shp = xm.shape[:-1] + (nh, hd)
+    q = (xc @ p["wq"]).reshape(shp)
+    k = (xc @ p["wk"]).reshape(shp) * (hd ** -0.5)
+    v = (xm @ p["wv"]).reshape(shp)
+    return q, k, v
+
+
+def _normalize(y_aug, hd):
+    num, den = y_aug[..., :hd], y_aug[..., hd:]
+    return num / jnp.maximum(jnp.abs(den), 1.0)
+
+
+def mlstm_block(p, x, cfg, state=None, unroll: bool = False):
+    """x [B,L,D] -> ([B,L,D], state dict) — chunk-parallel train path."""
+    b, l, d = x.shape
+    d_in, nh, hd = _mdims(cfg)
+    h = rmsnorm(p["norm"], x, cfg.norm_eps) @ p["up"]
+    xm, z = jnp.split(h, 2, axis=-1)
+    xc, conv_state = causal_conv1d(p["conv"], xm,
+                                   None if state is None else state["conv"])
+    xc = jax.nn.silu(xc)
+    q, k, v = _mlstm_qkv(p, cfg, xm, xc)
+    logf, i = _mlstm_gates(p, xc)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)    # normalizer column
+    v_aug = jnp.concatenate([v, ones], axis=-1)
+    s0 = None if state is None else state["c"]
+    y_aug, s_fin = chunked_linear_scan(k, v_aug, q, logf, i,
+                                       chunk=min(cfg.ssm_chunk or 256, l),
+                                       initial_state=s0, unroll=unroll)
+    y = _normalize(y_aug, hd).reshape(b, l, d_in).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    new_state = {"conv": conv_state, "c": s_fin}
+    return x + y @ p["down"], new_state
+
+
+def mlstm_state_shapes(cfg, batch: int):
+    d_in, nh, hd = _mdims(cfg)
+    return {"conv": (batch, (cfg.ssm_conv or 4) - 1, d_in),
+            "c": (batch, nh, hd, hd + 1)}
+
+
+def mlstm_decode(p, x, cfg, state):
+    """Recurrent single-token step. x [B,1,D]."""
+    b = x.shape[0]
+    d_in, nh, hd = _mdims(cfg)
+    h = rmsnorm(p["norm"], x, cfg.norm_eps) @ p["up"]
+    xm, z = jnp.split(h, 2, axis=-1)
+    xc, conv_state = causal_conv1d(p["conv"], xm, state["conv"])
+    xc = jax.nn.silu(xc)
+    q, k, v = _mlstm_qkv(p, cfg, xm, xc)
+    logf, i = _mlstm_gates(p, xc)                    # [B,1,nh]
+    ones = jnp.ones(v.shape[:-1] + (1,), jnp.float32)
+    v_aug = jnp.concatenate([v.astype(jnp.float32), ones], axis=-1)
+    c = state["c"].astype(jnp.float32)               # [B,nh,hd,hd+1]
+    c = (c * jnp.exp(logf[:, 0])[..., None, None]
+         + i[:, 0][..., None, None] * k[:, 0].astype(jnp.float32)[..., None]
+         * v_aug[:, 0][..., None, :])
+    y_aug = jnp.einsum("bhn,bhnp->bhp", q[:, 0].astype(jnp.float32), c)
+    y = _normalize(y_aug, hd).reshape(b, 1, d_in).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return x + y @ p["down"], {"conv": conv_state, "c": c.astype(state["c"].dtype)}
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------------- #
+def _sdims(cfg):
+    hd = cfg.d_model // cfg.n_heads
+    return cfg.n_heads, hd
+
+
+def slstm_specs(cfg):
+    d = cfg.d_model
+    nh, hd = _sdims(cfg)
+    ff = -(-8 * d // 3 // 64) * 64                   # post-MLP, ~8d/3 gated
+    return {
+        "norm": rmsnorm_spec(d),
+        "w_in": spec((d, 4, nh, hd), ("embed", None, "heads", "head_dim")),
+        "r": spec((4, nh, hd, hd), (None, "heads", "head_dim", None), std=0.02),
+        "b": spec((4, nh, hd), (None, "heads", "head_dim"), init="zeros"),
+        "out": spec((d, d), ("embed", "embed")),
+        "mlp_norm": rmsnorm_spec(d),
+        "mlp": mlp_specs(d, ff, "swiglu"),
+    }
+
+
+def _slstm_cell(p, pre_t, hcnm):
+    """One timestep. pre_t [B,4,nh,hd]; state (h, c, n, m) each [B,nh,hd]."""
+    h, c, n, m = hcnm
+    rec = jnp.einsum("bkd,gkde->bgke", h, p["r"])    # [B,4,nh,hd]
+    zt, it, ft, ot = jnp.moveaxis(
+        (pre_t + rec + p["b"]).astype(jnp.float32), 1, 0)
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    m_new = jnp.maximum(ft + m, it)                  # exp-gating stabilizer
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + m - m_new)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (h_new, c, n, m_new)
+
+
+def slstm_block(p, x, cfg, state=None):
+    """x [B,L,D] -> ([B,L,D], state) — sequential lax.scan over time."""
+    b, l, d = x.shape
+    nh, hd = _sdims(cfg)
+    xin = rmsnorm(p["norm"], x, cfg.norm_eps)
+    pre = jnp.einsum("bld,dgke->blgke", xin, p["w_in"])  # [B,L,4,nh,hd]
+    if state is None:
+        zero = jnp.zeros((b, nh, hd), jnp.float32)
+        state = (zero, zero, zero, jnp.full((b, nh, hd), -jnp.inf, jnp.float32))
+
+    def step(carry, pre_t):
+        new = _slstm_cell(p, pre_t, carry)
+        return new, new[0]
+
+    state, hs = jax.lax.scan(step, state, pre.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, l, d).astype(x.dtype)
+    x = x + y @ p["out"]
+    x = x + mlp(p["mlp"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps), "swiglu")
+    return x, state
+
+
+def slstm_state_shapes(cfg, batch: int):
+    nh, hd = _sdims(cfg)
+    return tuple((batch, nh, hd) for _ in range(4))
+
+
+def slstm_decode(p, x, cfg, state):
+    b, _, d = x.shape
+    xin = rmsnorm(p["norm"], x, cfg.norm_eps)
+    pre = jnp.einsum("bld,dgke->blgke", xin, p["w_in"])[:, 0]
+    state = _slstm_cell(p, pre, state)
+    y = state[0].reshape(b, 1, d).astype(x.dtype)
+    x = x + y @ p["out"]
+    x = x + mlp(p["mlp"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps), "swiglu")
+    return x, state

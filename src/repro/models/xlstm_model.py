@@ -1,0 +1,104 @@
+"""xLSTM language model: mixed mLSTM / sLSTM block stack (python-unrolled —
+the assigned config is 12 blocks, small enough that unrolling beats the
+heterogeneous-scan plumbing)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, RuntimeFlags
+from repro.models.layers import embed, embed_specs, rmsnorm, rmsnorm_spec, unembed
+from repro.models.losses import chunked_ce_from_hidden
+from repro.models.xlstm import (mlstm_block, mlstm_decode, mlstm_specs,
+                                mlstm_state_shapes, slstm_block, slstm_decode,
+                                slstm_specs, slstm_state_shapes)
+from repro.shard.api import constrain
+
+__all__ = ["xlstm_specs", "xlstm_loss", "xlstm_prefill", "xlstm_decode_step",
+           "xlstm_cache_shapes", "block_kinds"]
+
+
+def block_kinds(cfg: ModelConfig) -> list[str]:
+    """'slstm' at every (i % slstm_every == slstm_at), else 'mlstm'."""
+    if not cfg.slstm_every:
+        return ["mlstm"] * cfg.n_layers
+    return ["slstm" if i % cfg.slstm_every == cfg.slstm_at else "mlstm"
+            for i in range(cfg.n_layers)]
+
+
+def xlstm_specs(cfg: ModelConfig):
+    blocks = [mlstm_specs(cfg) if k == "mlstm" else slstm_specs(cfg)
+              for k in block_kinds(cfg)]
+    return {"embed": embed_specs(cfg.vocab, cfg.d_model, cfg.tie_embeddings),
+            "blocks": blocks, "final_norm": rmsnorm_spec(cfg.d_model)}
+
+
+def _forward(params, cfg, flags, batch, states=None):
+    dt = jnp.dtype(flags.compute_dtype)
+    x = embed(params["embed"], batch["tokens"], scale=cfg.embed_scale,
+              d=cfg.d_model).astype(dt)
+    x = constrain(x, ("batch", "act_seq", None))
+    kinds = block_kinds(cfg)
+    new_states = []
+    for i, (kind, p) in enumerate(zip(kinds, params["blocks"])):
+        st = None if states is None else states[i]
+        if kind == "mlstm":
+            fn = lambda p_, x_, cfg_, st_: mlstm_block(
+                p_, x_, cfg_, st_, unroll=flags.analysis_unroll)
+        else:
+            fn = slstm_block
+        if flags.remat != "none":
+            fn = jax.checkpoint(fn, static_argnums=(2,))
+        x, st2 = fn(p, x, cfg, st)
+        new_states.append(st2)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps), new_states
+
+
+def xlstm_loss(params, cfg, flags, batch, aux_weight: float = 0.0):
+    hidden, _ = _forward(params, cfg, flags, batch)
+    loss = chunked_ce_from_hidden(params["embed"], hidden, batch["targets"],
+                                  batch.get("loss_mask"),
+                                  n_chunks=flags.loss_chunks)
+    return loss, {"ce": loss}
+
+
+def xlstm_cache_shapes(cfg: ModelConfig, batch: int, cache_len: int = 0):
+    out = []
+    for kind in block_kinds(cfg):
+        if kind == "mlstm":
+            out.append(mlstm_state_shapes(cfg, batch))
+        else:
+            out.append(slstm_state_shapes(cfg, batch))
+    return out
+
+
+def xlstm_cache_axes(cfg: ModelConfig):
+    out = []
+    for kind in block_kinds(cfg):
+        if kind == "mlstm":
+            out.append({"conv": ("batch", None, "act_ffn"),
+                        "c": ("batch", "act_heads", None, None)})
+        else:
+            out.append(tuple(("batch", "act_heads", None) for _ in range(4)))
+    return out
+
+
+def xlstm_prefill(params, cfg, flags, batch, cache_len: int = 0):
+    hidden, states = _forward(params, cfg, flags, batch)
+    logits = unembed(params["embed"], hidden[:, -1:, :])
+    return logits, states
+
+
+def xlstm_decode_step(params, cfg, flags, states, tokens, pos):
+    dt = jnp.dtype(flags.compute_dtype)
+    x = embed(params["embed"], tokens, scale=cfg.embed_scale,
+              d=cfg.d_model).astype(dt)
+    kinds = block_kinds(cfg)
+    new_states = []
+    for i, (kind, p) in enumerate(zip(kinds, params["blocks"])):
+        fn = mlstm_decode if kind == "mlstm" else slstm_decode
+        x, st2 = fn(p, x, cfg, states[i])
+        new_states.append(st2)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x), new_states

@@ -1,0 +1,243 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one weight-SHARED attention block.
+
+The backbone is scanned in groups of ``cfg.attn_every`` Mamba2 blocks; after
+each group the single shared attention+MLP block runs (same weights at every
+site — Zamba2's parameter-efficiency trick; the per-site LoRA deltas of the
+released model are omitted, DESIGN.md §5).  Leftover blocks (n_layers %
+attn_every) run as a tail scan without attention.
+
+Serving state: per-layer Mamba2 (conv, ssm) states stacked [L, ...] plus a
+per-site KV cache stacked [n_sites, ...] for the shared block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.config import ModelConfig, RuntimeFlags
+from repro.models.layers import (embed, embed_specs, mlp, mlp_specs, rmsnorm,
+                                 rmsnorm_spec, rope, unembed)
+from repro.models.losses import chunked_ce_from_hidden
+from repro.models.params import spec
+from repro.models.ssm import (mamba2_block, mamba2_decode, mamba2_specs,
+                              mamba2_state_shapes)
+from repro.shard.api import constrain
+
+__all__ = ["zamba_specs", "zamba_loss", "zamba_prefill", "zamba_decode",
+           "zamba_cache_shapes"]
+
+
+def _sites(cfg) -> tuple[int, int]:
+    """(number of shared-attention sites, tail mamba blocks)."""
+    n_sites = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - n_sites * cfg.attn_every
+    return n_sites, tail
+
+
+def zamba_specs(cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    shared = {
+        "ln1": rmsnorm_spec(d),
+        "wq": spec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": spec((h, hd, d), ("heads", "head_dim", "embed")),
+        "ln2": rmsnorm_spec(d),
+        "mlp": mlp_specs(d, cfg.d_ff, cfg.act),
+    }
+    return {
+        "embed": embed_specs(cfg.vocab, d, cfg.tie_embeddings),
+        "mamba": mamba2_specs(cfg, cfg.n_layers),
+        "shared": shared,
+        "final_norm": rmsnorm_spec(d),
+    }
+
+
+def _shared_attn(p, x, cfg, flags, positions, cache=None, pos=None):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "act_seq", "act_heads", None))
+    if cache is None:
+        o = attn_mod.attend(q, k, v, causal=True, window=cfg.window,
+                            impl=flags.attn_impl, chunk=flags.attn_chunk,
+                            unroll=flags.analysis_unroll)
+        new_c = (k, v)
+    else:
+        ck, cv = attn_mod.write_kv(cache["k"], cache["v"], k, v, pos)
+        k_pos, k_valid = attn_mod.cache_slot_positions(pos, ck.shape[1])
+        o = attn_mod.attend(q, ck, cv, causal=True, window=cfg.window,
+                            q_pos0=pos, k_pos=k_pos, k_valid=k_valid,
+                            impl=flags.attn_impl, chunk=flags.attn_chunk,
+                            unroll=flags.analysis_unroll)
+        new_c = (ck, cv)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg.act)
+    return x, new_c
+
+
+def _forward(params, cfg, flags, batch):
+    dt = jnp.dtype(flags.compute_dtype)
+    x = embed(params["embed"], batch["tokens"], scale=cfg.embed_scale,
+              d=cfg.d_model).astype(dt)
+    x = constrain(x, ("batch", "act_seq", None))
+    positions = jnp.arange(x.shape[1])[None, :]
+    n_sites, tail = _sites(cfg)
+    k = cfg.attn_every
+    head = jax.tree.map(lambda a: a[:n_sites * k].reshape((n_sites, k) + a.shape[1:]),
+                        params["mamba"])
+    tail_p = jax.tree.map(lambda a: a[n_sites * k:], params["mamba"])
+
+    un = flags.analysis_unroll
+
+    def group(x, gp):
+        def one(x, lp):
+            y, _ = mamba2_block(lp, x, cfg, unroll=un)
+            return x + y, None
+        x, _ = jax.lax.scan(one, x, gp, unroll=k if un else 1)
+        x, _ = _shared_attn(params["shared"], x, cfg, flags, positions)
+        return x, None
+
+    def tail_block(x, lp):
+        y, _ = mamba2_block(lp, x, cfg, unroll=un)
+        return x + y, None
+
+    if flags.remat != "none":
+        group = jax.checkpoint(group)
+        tail_block = jax.checkpoint(tail_block)
+    x, _ = jax.lax.scan(group, x, head, unroll=n_sites if un else 1)
+    if tail:
+        x, _ = jax.lax.scan(tail_block, x, tail_p, unroll=tail if un else 1)
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def zamba_loss(params, cfg, flags, batch, aux_weight: float = 0.0):
+    hidden = _forward(params, cfg, flags, batch)
+    loss = chunked_ce_from_hidden(params["embed"], hidden, batch["targets"],
+                                  batch.get("loss_mask"),
+                                  n_chunks=flags.loss_chunks)
+    return loss, {"ce": loss}
+
+
+def zamba_cache_shapes(cfg: ModelConfig, batch: int, cache_len: int):
+    n_sites, _ = _sites(cfg)
+    ss = mamba2_state_shapes(cfg, batch)
+    if cfg.window is not None:
+        cache_len = min(cache_len, cfg.window)
+    return {
+        "conv": (cfg.n_layers,) + ss["conv"],
+        "ssm": (cfg.n_layers,) + ss["ssm"],
+        "attn_k": (n_sites, batch, cache_len, cfg.n_kv_heads, cfg.head_dim),
+        "attn_v": (n_sites, batch, cache_len, cfg.n_kv_heads, cfg.head_dim),
+    }
+
+
+def zamba_cache_axes(cfg: ModelConfig):
+    return {"conv": (None, "batch", None, "ssm_inner"),
+            "ssm": (None, "batch", "act_heads", None, None),
+            "attn_k": (None, "batch", "cache_seq", "act_kv_heads", None),
+            "attn_v": (None, "batch", "cache_seq", "act_kv_heads", None)}
+
+
+def zamba_decode(params, cfg, flags, caches, tokens, pos):
+    dt = jnp.dtype(flags.compute_dtype)
+    x = embed(params["embed"], tokens, scale=cfg.embed_scale,
+              d=cfg.d_model).astype(dt)
+    positions = jnp.full((tokens.shape[0], 1), pos)
+    n_sites, tail = _sites(cfg)
+    k = cfg.attn_every
+    take = lambda a, lo, hi: a[lo:hi]
+    head_p = jax.tree.map(lambda a: take(a, 0, n_sites * k), params["mamba"])
+    head_p = jax.tree.map(lambda a: a.reshape((n_sites, k) + a.shape[1:]), head_p)
+    head_c = {kk: caches[kk][:n_sites * k].reshape(
+        (n_sites, k) + caches[kk].shape[1:]) for kk in ("conv", "ssm")}
+
+    def group(x, inp):
+        gp, gc, site_c = inp
+        new_conv, new_ssm = [], []
+        for j in range(k):
+            lp = jax.tree.map(lambda a: a[j], gp)
+            st = {"conv": gc["conv"][j], "ssm": gc["ssm"][j]}
+            y, st2 = mamba2_decode(lp, x, cfg, st)
+            x = x + y
+            new_conv.append(st2["conv"])
+            new_ssm.append(st2["ssm"])
+        x, (ck, cv) = _shared_attn(params["shared"], x, cfg, flags, positions,
+                                   cache={"k": site_c["k"], "v": site_c["v"]},
+                                   pos=pos)
+        return x, {"conv": jnp.stack(new_conv), "ssm": jnp.stack(new_ssm),
+                   "k": ck, "v": cv}
+
+    site_c = {"k": caches["attn_k"], "v": caches["attn_v"]}
+    x, new_head = jax.lax.scan(group, x, (head_p, head_c, site_c))
+    new_caches = {
+        "attn_k": new_head["k"], "attn_v": new_head["v"],
+        "conv": new_head["conv"].reshape((n_sites * k,) + new_head["conv"].shape[2:]),
+        "ssm": new_head["ssm"].reshape((n_sites * k,) + new_head["ssm"].shape[2:]),
+    }
+    if tail:
+        tail_p = jax.tree.map(lambda a: a[n_sites * k:], params["mamba"])
+        tail_c = {kk: caches[kk][n_sites * k:] for kk in ("conv", "ssm")}
+
+        def tb(x, inp):
+            lp, st = inp
+            y, st2 = mamba2_decode(lp, x, cfg, st)
+            return x + y, st2
+
+        x, new_tail = jax.lax.scan(tb, x, (tail_p, tail_c))
+        new_caches["conv"] = jnp.concatenate([new_caches["conv"],
+                                              new_tail["conv"]])
+        new_caches["ssm"] = jnp.concatenate([new_caches["ssm"],
+                                             new_tail["ssm"]])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, new_caches
+
+
+def zamba_prefill(params, cfg, flags, batch, cache_len: int):
+    """Sequential prefill via repeated decode would be O(S) steps; instead we
+    run the parallel forward for logits and rebuild states with one chunked
+    pass per layer (states exact; shared-attn KV ring-placed)."""
+    from repro.models.transformer import _ring_place
+    dt = jnp.dtype(flags.compute_dtype)
+    x = embed(params["embed"], batch["tokens"], scale=cfg.embed_scale,
+              d=cfg.d_model).astype(dt)
+    positions = jnp.arange(x.shape[1])[None, :]
+    s_len = x.shape[1]
+    if cfg.window is not None:
+        cache_len = min(cache_len, cfg.window)
+    n_sites, tail = _sites(cfg)
+    k = cfg.attn_every
+    convs, ssms, kcs, vcs = [], [], [], []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["mamba"])
+        if i and i % k == 0:
+            h = rmsnorm(params["shared"]["ln1"], x, cfg.norm_eps)
+            kk = rope(jnp.einsum("bsd,dhk->bshk", h, params["shared"]["wk"]),
+                      positions, cfg.rope_theta)
+            vv = jnp.einsum("bsd,dhk->bshk", h, params["shared"]["wv"])
+            kcs.append(_ring_place(kk, s_len, cache_len))
+            vcs.append(_ring_place(vv, s_len, cache_len))
+            x, _ = _shared_attn(params["shared"], x, cfg, flags, positions)
+        y, st = mamba2_block(lp, x, cfg, unroll=flags.analysis_unroll)
+        x = x + y
+        convs.append(st["conv"])
+        ssms.append(st["ssm"])
+    while len(kcs) < n_sites:                        # site after last group
+        h = rmsnorm(params["shared"]["ln1"], x, cfg.norm_eps)
+        kk = rope(jnp.einsum("bsd,dhk->bshk", h, params["shared"]["wk"]),
+                  positions, cfg.rope_theta)
+        vv = jnp.einsum("bsd,dhk->bshk", h, params["shared"]["wv"])
+        kcs.append(_ring_place(kk, s_len, cache_len))
+        vcs.append(_ring_place(vv, s_len, cache_len))
+        x, _ = _shared_attn(params["shared"], x, cfg, flags, positions)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, -1:, :])
+    caches = {"conv": jnp.stack(convs), "ssm": jnp.stack(ssms),
+              "attn_k": jnp.stack(kcs), "attn_v": jnp.stack(vcs)}
+    return logits, caches

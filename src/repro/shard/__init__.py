@@ -1,0 +1,7 @@
+"""Sharding rules and helpers (logical axes -> PartitionSpec)."""
+
+from repro.shard.api import (BASE_RULES, make_rules, pspec_for, sharding_for,
+                             activation_ctx, constrain, mesh_axis_size)
+
+__all__ = ["BASE_RULES", "make_rules", "pspec_for", "sharding_for",
+           "activation_ctx", "constrain", "mesh_axis_size"]

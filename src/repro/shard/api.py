@@ -1,0 +1,131 @@
+"""Logical-axis sharding: one rule table maps axis names -> mesh axes.
+
+Models annotate parameters (via ParamSpec.axes) and activations (via
+``constrain``) with *logical* names; this module translates them to
+``PartitionSpec`` under the active (mesh, rules) context.  Two guards make
+one rule table safe for all 10 architectures on a fixed production mesh:
+
+* divisibility — a dim is only sharded if its size divides evenly by the
+  mesh axes assigned to it (e.g. Gemma-2B's 8 query heads stay replicated
+  on a 16-way model axis instead of failing to lower);
+* uniqueness — a mesh axis is used at most once per spec (leftmost logical
+  axis wins), so e.g. ``[layers, experts, embed, ffn]`` takes 'model' on
+  experts and leaves ffn unsharded.
+
+``constrain`` reads a contextvar set by the step factory at trace time, so
+model code stays mesh-agnostic and runs unmodified in single-device tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["BASE_RULES", "make_rules", "pspec_for", "sharding_for",
+           "activation_ctx", "constrain", "mesh_axis_size"]
+
+# Default rule table: TP on 'model', DP/FSDP on ('pod','data').
+BASE_RULES: dict[str, object] = {
+    # ---- parameter axes ---- #
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "embed": "data",          # FSDP: weights' d_model dim sharded over data
+    "layers": None,
+    "head_dim": None,
+    "q_lora": None,
+    "kv_lora": "model",       # MLA latent projections: shard the rank dim
+    "state": None,
+    "conv": None,
+    "ssm_inner": "model",
+    # ---- activation axes ---- #
+    "batch": ("pod", "data"),
+    "act_seq": None,
+    "cache_seq": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_ffn": "model",
+    "moe_groups": ("pod", "data"),
+    "moe_dispatch": ("pod", "data"),   # group dim of the [G,E,C,D] buffers
+    "experts_act": "model",
+}
+
+
+def make_rules(**overrides) -> dict:
+    r = dict(BASE_RULES)
+    r.update(overrides)
+    return r
+
+
+def _axes_size(mesh: Mesh, assignment) -> int:
+    if assignment is None:
+        return 1
+    names = (assignment,) if isinstance(assignment, str) else tuple(assignment)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def pspec_for(shape, logical_axes, rules: Mapping, mesh: Mesh) -> P:
+    """PartitionSpec for a tensor, with divisibility + uniqueness guards."""
+    used: set[str] = set()
+    out = []
+    for size, name in zip(shape, logical_axes):
+        assignment = rules.get(name) if name is not None else None
+        if assignment is None:
+            out.append(None)
+            continue
+        names = ((assignment,) if isinstance(assignment, str)
+                 else tuple(assignment))
+        names = tuple(n for n in names if n in mesh.shape and n not in used)
+        total = 1
+        for n in names:
+            total *= mesh.shape[n]
+        if not names or total == 1 or size % total != 0:
+            out.append(None)
+            continue
+        used.update(names)
+        out.append(names[0] if len(names) == 1 else names)
+    while out and out[-1] is None:                  # trim trailing Nones
+        out.pop()
+    return P(*out)
+
+
+def sharding_for(shape, logical_axes, rules, mesh) -> NamedSharding:
+    return NamedSharding(mesh, pspec_for(shape, logical_axes, rules, mesh))
+
+
+# --------------------------------------------------------------------------- #
+# Activation constraints (trace-time context)
+# --------------------------------------------------------------------------- #
+_CTX: contextvars.ContextVar = contextvars.ContextVar("shard_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_ctx(mesh: Mesh, rules: Mapping):
+    tok = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def constrain(x, logical_axes):
+    """with_sharding_constraint by logical names; no-op outside a context."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = pspec_for(x.shape, logical_axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

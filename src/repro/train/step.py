@@ -1,0 +1,172 @@
+"""Train / serve step factories: model + mesh + rules -> jitted SPMD steps.
+
+``make_train_step`` builds the canonical production step:
+
+  * microbatched gradient accumulation (``flags.microbatches``) via
+    ``lax.scan`` — bounds activation memory, the dry-run's biggest knob;
+  * gradients accumulated in f32; optional int8 error-feedback compression
+    (``flags.grad_compress``) bracketing the DP reduction;
+  * AdamW with warmup-cosine, global-norm clip;
+  * all tensors logically sharded through ``repro.shard`` rules; the same
+    factory serves 1-device tests and the 512-way dry-run unchanged.
+
+``make_serve_step`` builds prefill + decode closures for batched serving.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import compress_with_feedback
+from repro.models import Model, RuntimeFlags
+from repro.optim.adamw import AdamWConfig, OptState, apply_updates, init_opt
+from repro.shard.api import activation_ctx, pspec_for, sharding_for
+
+__all__ = ["TrainState", "make_train_step", "make_serve_step",
+           "state_shardings", "abstract_state"]
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: OptState
+    residual: object      # int8-compression error feedback (or () if off)
+
+
+def make_train_state(model: Model, key, opt_cfg: AdamWConfig,
+                     flags: RuntimeFlags, dtype=jnp.float32) -> TrainState:
+    params = model.init(key, dtype)
+    residual = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                if flags.grad_compress else ())
+    return TrainState(params, init_opt(params), residual)
+
+
+def abstract_state(model: Model, flags: RuntimeFlags,
+                   dtype=jnp.bfloat16) -> TrainState:
+    """ShapeDtypeStruct TrainState for the dry-run (no allocation)."""
+    params = model.abstract(dtype)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    opt = OptState(mu=jax.tree.map(f32, params), nu=jax.tree.map(f32, params),
+                   step=jax.ShapeDtypeStruct((), jnp.int32))
+    residual = jax.tree.map(f32, params) if flags.grad_compress else ()
+    return TrainState(params, opt, residual)
+
+
+def state_shardings(model: Model, flags: RuntimeFlags, mesh, rules):
+    """NamedSharding pytree matching TrainState (ZeRO: moments follow params)."""
+    axes = model.axes()
+    specs = model.specs()
+
+    def shard_like(_spec):
+        return sharding_for(_spec.shape, _spec.axes, rules, mesh)
+
+    from repro.models.params import ParamSpec
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    p_sh = jax.tree.map(shard_like, specs, is_leaf=is_spec)
+    opt = OptState(mu=p_sh, nu=p_sh,
+                   step=sharding_for((), (), rules, mesh))
+    residual = p_sh if flags.grad_compress else ()
+    return TrainState(p_sh, opt, residual)
+
+
+def batch_shardings(batch_tree, mesh, rules):
+    def one(x):
+        shape = x.shape
+        names = ("batch",) + (None,) * (len(shape) - 1)
+        if len(shape) == 3 and shape[0] == 3:          # [3,B,S] position ids
+            names = (None, "batch", None)
+        return sharding_for(shape, names, rules, mesh)
+    return jax.tree.map(one, batch_tree)
+
+
+def make_train_step(model: Model, flags: RuntimeFlags, opt_cfg: AdamWConfig,
+                    mesh=None, rules=None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb, flags)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch):
+        def run():
+            k = flags.microbatches
+            if k > 1:
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:])
+                    if x.ndim >= 1 and x.shape[0] % k == 0 and x.shape[0] != 3
+                    else jnp.broadcast_to(x, (k,) + x.shape), batch)
+                # position-id arrays [3,B,S] need batch-dim microbatching
+                def fix_pos(x):
+                    if x.ndim == 3 and x.shape[0] == 3:
+                        return x.reshape(3, k, x.shape[1] // k, x.shape[2]
+                                         ).transpose(1, 0, 2, 3)
+                    return None
+                mbs = {kk: (fix_pos(batch[kk]) if kk == "positions"
+                            else mbs[kk]) for kk in batch}
+
+                def acc(carry, mb):
+                    g_sum, l_sum = carry
+                    (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        state.params, mb)
+                    g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     g_sum, g)
+                    return (g, l_sum + l), None
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  state.params)
+                (grads, loss_sum), _ = jax.lax.scan(
+                    acc, (g0, 0.0), mbs,
+                    unroll=k if flags.analysis_unroll else 1)
+                grads = jax.tree.map(lambda g: g / k, grads)
+                loss = loss_sum / k
+                metrics = {}
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, batch)
+                grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+            residual = state.residual
+            if flags.grad_compress:
+                grads, residual = compress_with_feedback(grads, residual)
+            params, opt, om = apply_updates(state.params, grads, state.opt,
+                                            opt_cfg)
+            metrics = dict(metrics, loss=loss, **om)
+            return TrainState(params, opt, residual), metrics
+
+        if mesh is not None:
+            with activation_ctx(mesh, rules):
+                return run()
+        return run()
+
+    return train_step
+
+
+def make_serve_step(model: Model, flags: RuntimeFlags, mesh=None, rules=None):
+    """Returns (prefill_fn, decode_fn).
+
+    decode_fn(params, caches, tokens [B,1], pos) -> (next_tokens [B,1], caches)
+    — one new token per sequence against the standing cache (greedy).
+    """
+
+    def prefill(params, batch, cache_len):
+        def run():
+            logits, caches = model.prefill(params, batch, flags, cache_len)
+            return jnp.argmax(logits, axis=-1), caches
+        if mesh is not None:
+            with activation_ctx(mesh, rules):
+                return run()
+        return run()
+
+    def decode(params, caches, tokens, pos):
+        def run():
+            logits, new_caches = model.decode(params, caches, tokens, pos, flags)
+            return jnp.argmax(logits, axis=-1), new_caches
+        if mesh is not None:
+            with activation_ctx(mesh, rules):
+                return run()
+        return run()
+
+    return prefill, decode

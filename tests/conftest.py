@@ -1,0 +1,18 @@
+"""Shared fixtures. Tests must see exactly 1 CPU device (never set
+xla_force_host_platform_device_count here — that is dryrun.py's job)."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _single_device_guard():
+    # dry-run env leakage would silently change sharding tests
+    assert len(jax.devices()) == 1, "tests must run with 1 device"
+    yield

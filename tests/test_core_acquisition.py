@@ -1,0 +1,92 @@
+"""EI closed form, constraint probability, Gauss-Hermite exactness."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import acquisition as acq
+
+
+def _norm_cdf(z):
+    return 0.5 * (1.0 + math.erf(z / math.sqrt(2.0)))
+
+
+@settings(deadline=None, max_examples=30)
+@given(mu=st.floats(-5, 5), sigma=st.floats(0.05, 3),
+       y_star=st.floats(-5, 5))
+def test_ei_matches_monte_carlo(mu, sigma, y_star):
+    rng = np.random.default_rng(0)
+    samples = rng.normal(mu, sigma, 200_000)
+    mc = np.maximum(y_star - samples, 0.0).mean()
+    ei = float(acq.expected_improvement(jnp.float32(mu), jnp.float32(sigma),
+                                        jnp.float32(y_star)))
+    assert ei == pytest.approx(mc, abs=0.02 * max(sigma, 1.0))
+
+
+def test_ei_zero_when_hopeless():
+    ei = float(acq.expected_improvement(jnp.float32(0.0), jnp.float32(0.1),
+                                        jnp.float32(-10.0)))
+    assert ei == pytest.approx(0.0, abs=1e-6)
+
+
+@settings(deadline=None, max_examples=30)
+@given(mu=st.floats(-3, 3), sigma=st.floats(0.05, 2), u=st.floats(0.1, 5),
+       t_max=st.floats(0.1, 3))
+def test_constraint_prob_via_cost_model(mu, sigma, u, t_max):
+    """P(T <= t_max) computed through the cost model == Phi((t_max*u-mu)/s)."""
+    p = float(acq.constraint_prob(jnp.float32(mu), jnp.float32(sigma),
+                                  jnp.float32(u), jnp.float32(t_max)))
+    assert p == pytest.approx(_norm_cdf((t_max * u - mu) / sigma), abs=1e-4)
+
+
+def test_budget_filter_confidence():
+    mu = jnp.asarray([1.0, 5.0, 9.0], jnp.float32)
+    sigma = jnp.asarray([1.0, 1.0, 1.0], jnp.float32)
+    ok = acq.budget_ok(mu, sigma, 6.0, conf=0.99)
+    assert ok.tolist() == [True, False, False]   # 5.0 has only ~84% conf
+
+
+def test_incumbent_prefers_cheapest_feasible():
+    y = jnp.asarray([3.0, 1.0, 2.0, 9.0], jnp.float32)
+    obs = jnp.asarray([True, True, True, False])
+    feas = jnp.asarray([True, False, True, False])
+    sig = jnp.asarray([0.1, 0.1, 0.1, 2.0], jnp.float32)
+    assert float(acq.incumbent(y, obs, feas, y, sig)) == 2.0
+
+
+def test_incumbent_fallback_when_infeasible():
+    """No feasible obs: y* = max observed + 3 max sigma over untested."""
+    y = jnp.asarray([3.0, 7.0, 0.0], jnp.float32)
+    obs = jnp.asarray([True, True, False])
+    feas = jnp.asarray([False, False, False])
+    sig = jnp.asarray([0.1, 0.1, 2.0], jnp.float32)
+    assert float(acq.incumbent(y, obs, feas, y, sig)) == pytest.approx(
+        7.0 + 3 * 2.0)
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 5, 8])
+def test_gauss_hermite_integrates_polynomials_exactly(k):
+    """K-node G-H is exact for polynomials up to degree 2K-1 under N(mu,s)."""
+    xi, w = acq.gauss_hermite(k)
+    assert w.sum() == pytest.approx(1.0, abs=1e-6)
+    mu, sigma = 1.3, 0.7
+    nodes = mu + np.sqrt(2.0) * sigma * xi
+    for deg in range(2 * k):
+        approx = float((w * nodes ** deg).sum())
+        # exact central moments of N(mu, sigma)
+        rng = np.random.default_rng(1)
+        exact = float(np.mean(rng.normal(mu, sigma, 2_000_000) ** deg))
+        assert approx == pytest.approx(exact, rel=0.02, abs=0.02)
+
+
+def test_gh_cost_nodes_shape_and_mean():
+    xi, w = acq.gauss_hermite(3)
+    mu = jnp.asarray([1.0, 2.0], jnp.float32)
+    sigma = jnp.asarray([0.5, 1.0], jnp.float32)
+    nodes = acq.gh_cost_nodes(mu, sigma, jnp.asarray(xi))
+    assert nodes.shape == (2, 3)
+    recon = (np.asarray(nodes) * w).sum(axis=1)
+    np.testing.assert_allclose(recon, [1.0, 2.0], atol=1e-5)

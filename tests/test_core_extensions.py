@@ -1,0 +1,77 @@
+"""Paper §4.4 extensions: multiple constraints + setup costs."""
+
+import numpy as np
+import pytest
+
+from repro.core import Settings
+from repro.core.extensions import (ConstrainedJob, cartesian_gh,
+                                   default_setup_cost,
+                                   optimize_multi_constraint,
+                                   optimize_with_setup_costs)
+from repro.core.space import DiscreteSpace
+from repro.jobs import tensorflow_jobs
+from repro.jobs.tables import JobTable
+
+
+def _job(seed=0):
+    rng = np.random.default_rng(seed)
+    space = DiscreteSpace.from_grid({"vm_type": [0, 1, 2],
+                                     "cluster_vcpus": [8, 16, 32, 64]})
+    runtime = rng.uniform(0.1, 1.0, space.n_points)
+    price = rng.uniform(0.5, 2.0, space.n_points)
+    return JobTable("j", space, runtime, price,
+                    t_max=float(np.quantile(runtime, 0.7)))
+
+
+def test_cartesian_gh_weights_normalized():
+    vals, wts = cartesian_gh([1.0, 2.0], [0.5, 0.3], k=3)
+    assert vals.shape[1] == 2
+    assert wts.sum() == pytest.approx(1.0)
+    assert (wts > 0).all()
+
+
+def test_cartesian_gh_pruning_reduces_branches():
+    full, _ = cartesian_gh([0.0] * 3, [1.0] * 3, k=3, prune=0.0)
+    pruned, w = cartesian_gh([0.0] * 3, [1.0] * 3, k=3, prune=0.05)
+    assert pruned.shape[0] < full.shape[0] == 27
+    assert w.sum() == pytest.approx(1.0)
+
+
+def test_multi_constraint_respects_joint_feasibility():
+    job = _job()
+    rng = np.random.default_rng(1)
+    energy = rng.uniform(0.0, 10.0, job.space.n_points)
+    cjob = ConstrainedJob(job, {"energy": energy},
+                          {"energy": float(np.quantile(energy, 0.6))})
+    out = optimize_multi_constraint(cjob, budget_b=4.0, seed=0)
+    assert out["cno"] >= 1.0
+    # recommended config satisfies the extra constraint if any explored did
+    arr = np.array(out["explored"])
+    if cjob.feasible[arr].any():
+        assert cjob.feasible[out["recommended"]]
+
+
+def test_setup_cost_model():
+    job = _job()
+    setup = default_setup_cost(job.space, boot_fee=0.01)
+    # first deployment boots everything
+    assert setup(None, 0) == pytest.approx(0.01 * job.space.points_raw[0, 1])
+    i8 = job.space.row_of([0, 8])
+    i16 = job.space.row_of([0, 16])
+    j8 = job.space.row_of([1, 8])
+    # growing same type boots only the delta
+    assert setup(i8, i16) == pytest.approx(0.01 * 8)
+    # shrinking is free
+    assert setup(i16, i8) == 0.0
+    # type change reboots all
+    assert setup(i8, j8) == pytest.approx(0.01 * 8)
+
+
+def test_setup_costs_accounted_in_budget():
+    job = _job()
+    setup = default_setup_cost(job.space, boot_fee=0.05)
+    out = optimize_with_setup_costs(job, Settings(policy="la0", n_trees=10,
+                                                  depth=3),
+                                    setup_cost=setup, budget_b=4.0, seed=0)
+    assert out["setup_spent"] > 0.0
+    assert out["cno"] >= 1.0

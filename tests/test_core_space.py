@@ -1,0 +1,62 @@
+"""DiscreteSpace + Latin-Hypercube bootstrap properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.space import DiscreteSpace, latin_hypercube_indices
+
+
+def _grid(a=4, b=3, c=5):
+    return DiscreteSpace.from_grid({
+        "a": list(range(a)), "b": [10.0 * i for i in range(b)],
+        "c": list(range(c))})
+
+
+def test_grid_shape():
+    s = _grid()
+    assert s.n_points == 4 * 3 * 5
+    assert s.n_dims == 3
+    assert s.points.min() >= 0.0 and s.points.max() <= 1.0
+
+
+def test_thresholds_separate_unique_values():
+    s = _grid()
+    for d in range(s.n_dims):
+        uniq = np.unique(s.points[:, d])
+        thr = s.thresholds[d][np.isfinite(s.thresholds[d])]
+        assert len(thr) == len(uniq) - 1
+        # each threshold splits consecutive unique values
+        for lo, hi, t in zip(uniq[:-1], uniq[1:], thr):
+            assert lo < t < hi
+
+
+def test_valid_predicate_filters():
+    s = DiscreteSpace.from_grid({"x": [0, 1, 2], "y": [0, 1]},
+                                valid=lambda c: c["x"] + c["y"] < 3)
+    assert s.n_points == 5
+
+
+def test_row_of_roundtrip():
+    s = _grid()
+    for i in [0, 7, s.n_points - 1]:
+        assert s.row_of(s.points_raw[i]) == i
+
+
+@settings(deadline=None, max_examples=25)
+@given(n=st.integers(1, 60), seed=st.integers(0, 1000))
+def test_lhs_indices_distinct_and_in_range(n, seed):
+    s = _grid()
+    idx = latin_hypercube_indices(s, n, np.random.default_rng(seed))
+    assert len(idx) == min(n, s.n_points)
+    assert len(set(idx.tolist())) == len(idx)          # no duplicates
+    assert idx.min() >= 0 and idx.max() < s.n_points
+
+
+def test_lhs_stratification_quality():
+    """LHS should cover each dimension's range better than worst-case."""
+    s = _grid(8, 8, 8)
+    idx = latin_hypercube_indices(s, 8, np.random.default_rng(3))
+    pts = s.points[idx]
+    for d in range(3):
+        assert len(np.unique(pts[:, d])) >= 4   # hits >= half the levels

@@ -1,0 +1,92 @@
+"""Bagged regression forest: exact splits, masking, prediction totality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import trees
+from repro.core.space import DiscreteSpace
+
+
+def _space():
+    return DiscreteSpace.from_grid({"a": list(range(8)),
+                                    "b": list(range(8))})
+
+
+def _fit(y, mask, space, depth=4, n_trees=10, seed=0):
+    left = trees.make_left_table(space.points, space.thresholds)
+    return trees.fit_forest(jax.random.PRNGKey(seed), jnp.asarray(y),
+                            jnp.asarray(mask), jnp.asarray(space.points),
+                            left, jnp.asarray(space.thresholds),
+                            n_trees=n_trees, depth=depth)
+
+
+def test_axis_aligned_step_function_is_learned_exactly():
+    """y = 1{a >= 4} is one split; every tree must recover it."""
+    space = _space()
+    y = (space.points_raw[:, 0] >= 4).astype(np.float32)
+    mask = np.ones(space.n_points, bool)
+    params, assign = _fit(y, mask, space, depth=2)
+    preds = jnp.take_along_axis(params.leaf, assign, axis=1)
+    np.testing.assert_allclose(np.asarray(preds),
+                               np.tile(y, (10, 1)), atol=1e-5)
+
+
+def test_unobserved_points_do_not_leak():
+    """Changing y on masked-out points must not change the fit."""
+    space = _space()
+    rng = np.random.default_rng(0)
+    y1 = rng.normal(size=space.n_points).astype(np.float32)
+    mask = rng.random(space.n_points) < 0.4
+    y2 = y1.copy()
+    y2[~mask] = 1e6                                   # poison unobserved
+    p1, a1 = _fit(y1, mask, space)
+    p2, a2 = _fit(y2, mask, space)
+    np.testing.assert_allclose(np.asarray(p1.leaf), np.asarray(p2.leaf),
+                               atol=1e-4)
+
+
+def test_prediction_total_even_with_single_observation():
+    space = _space()
+    y = np.zeros(space.n_points, np.float32)
+    y[5] = 3.0
+    mask = np.zeros(space.n_points, bool)
+    mask[5] = True
+    params, assign = _fit(y, mask, space)
+    preds = jnp.take_along_axis(params.leaf, assign, axis=1)
+    assert bool(jnp.isfinite(preds).all())
+    np.testing.assert_allclose(np.asarray(preds), 3.0, atol=1e-5)
+
+
+def test_predict_forest_matches_tabular_gather():
+    space = _space()
+    rng = np.random.default_rng(1)
+    y = rng.normal(size=space.n_points).astype(np.float32)
+    mask = rng.random(space.n_points) < 0.6
+    params, assign = _fit(y, mask, space)
+    tab = jnp.take_along_axis(params.leaf, assign, axis=1)
+    trav = trees.predict_forest(params, jnp.asarray(space.points))
+    np.testing.assert_allclose(np.asarray(tab), np.asarray(trav), atol=1e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 100), frac=st.floats(0.2, 0.9))
+def test_mu_sigma_bounded_by_observed_range(seed, frac):
+    """Ensemble mean stays within the observed y range (tree averages)."""
+    space = _space()
+    rng = np.random.default_rng(seed)
+    y = rng.uniform(-2, 5, space.n_points).astype(np.float32)
+    mask = rng.random(space.n_points) < frac
+    if not mask.any():
+        mask[0] = True
+    left = trees.make_left_table(space.points, space.thresholds)
+    mu, sigma = trees.fit_predict_mu_sigma(
+        jax.random.PRNGKey(seed), jnp.asarray(y), jnp.asarray(mask),
+        jnp.asarray(space.points), left, jnp.asarray(space.thresholds),
+        jnp.float32(1e-6), n_trees=10, depth=4)
+    lo, hi = y[mask].min(), y[mask].max()
+    assert float(mu.min()) >= lo - 1e-4
+    assert float(mu.max()) <= hi + 1e-4
+    assert float(sigma.min()) >= 1e-6 - 1e-9

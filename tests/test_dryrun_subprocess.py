@@ -1,0 +1,72 @@
+"""Dry-run launcher: subprocess test (needs 512 forced host devices).
+
+Slow (one real compile); exercises mesh construction, input specs,
+sharding rules, lower+compile, and the roofline JSON artifact end-to-end
+for one cheap cell on BOTH the single-pod and multi-pod meshes.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_dryrun_cell_single_and_multi(tmp_path):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-125m",
+         "--shape", "decode_32k", "--mesh", "both", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, r.stderr[-2000:]
+    for mesh in ("single", "multi"):
+        f = tmp_path / f"xlstm-125m__decode_32k__{mesh}.json"
+        d = json.loads(f.read_text())
+        assert "error" not in d, d.get("error")
+        assert d["chips"] == (256 if mesh == "single" else 512)
+        assert d["hlo_flops_per_device"] > 0
+        assert d["roofline"]["bound"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_skip_cells_are_documented(tmp_path):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "hubert-xlarge", "--shape", "decode_32k", "--mesh", "single",
+         "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0
+    d = json.loads((tmp_path / "hubert-xlarge__decode_32k__single.json"
+                    ).read_text())
+    assert "skipped" in d and "encoder-only" in d["skipped"]
+
+
+def test_roofline_parser_units():
+    from repro.launch.roofline import parse_collectives, roofline_terms
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=[32,16]<=[512], dimensions={0}
+  %ar = f32[4096]{0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = bf16[8,128]{1,0} reduce-scatter(%z), replica_groups=[2,256]<=[512], dimensions={0}
+  %cp = bf16[64]{0} collective-permute(%w), source_target_pairs={{0,1}}
+"""
+    st = parse_collectives(hlo)
+    assert st.counts == {"all-gather": 1, "all-reduce": 1,
+                         "reduce-scatter": 1, "collective-permute": 1}
+    ag = 16 * 1024 * 2
+    ar = 4096 * 4
+    rs = 8 * 128 * 2
+    cp = 64 * 2
+    expect = (ag * 15 / 16) + (2 * ar * 3 / 4) + (rs * 255) + cp
+    assert st.wire_bytes_per_device == pytest.approx(expect)
+    t = roofline_terms(197e12, 819e9, 50e9)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+    assert t["step_s"] == pytest.approx(1.0)

@@ -1,0 +1,64 @@
+"""Synthetic dataset calibration vs. the paper's published statistics."""
+
+import numpy as np
+import pytest
+
+from repro.jobs import cherrypick_jobs, scout_jobs, tensorflow_jobs
+
+
+def test_tensorflow_space_matches_paper():
+    jobs = tensorflow_jobs(0)
+    assert len(jobs) == 3
+    for j in jobs:
+        assert j.space.n_points == 384            # Tables 1-2
+        assert j.space.n_dims == 5
+
+
+def test_tensorflow_stats_match_fig1a():
+    """Fig 1a: ~3 orders of cost spread; 1.5-5% configs within 2x of opt;
+    T_max feasible for about half the space (paper §5.2)."""
+    for j in tensorflow_jobs(0):
+        s = j.summary()
+        assert s["cost_spread_orders"] >= 2.0, j.name
+        assert 0.01 <= s["within_2x_frac"] <= 0.08, (j.name, s)
+        assert 0.35 <= s["feasible_frac"] <= 0.65
+
+
+def test_scout_space_matches_paper():
+    jobs = scout_jobs(0)
+    assert len(jobs) == 18
+    for j in jobs:
+        assert j.space.n_points == 69             # paper §5.1.2
+        assert j.space.n_dims == 3
+
+
+def test_cherrypick_spaces_match_paper():
+    jobs = cherrypick_jobs(0)
+    assert len(jobs) == 5
+    for j in jobs:
+        assert 47 <= j.space.n_points <= 72
+
+
+def test_deterministic_in_seed():
+    a = tensorflow_jobs(3)[0]
+    b = tensorflow_jobs(3)[0]
+    np.testing.assert_array_equal(a.runtime, b.runtime)
+    c = tensorflow_jobs(4)[0]
+    assert not np.allclose(a.runtime, c.runtime)
+
+
+def test_budget_rule():
+    j = scout_jobs(0)[0]
+    n = j.bootstrap_size()
+    assert n == max(int(np.ceil(0.03 * 69)), 3)
+    assert j.budget(3.0) == pytest.approx(n * j.mean_cost * 3.0)
+
+
+def test_save_load_roundtrip(tmp_path):
+    j = scout_jobs(0)[0]
+    p = tmp_path / "job.json"
+    j.save(p)
+    from repro.jobs.tables import JobTable
+    j2 = JobTable.load(p)
+    np.testing.assert_allclose(j.cost, j2.cost)
+    assert j2.t_max == j.t_max

@@ -1,0 +1,145 @@
+"""Pallas kernels vs. pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import trees
+from repro.core.acquisition import gauss_hermite
+from repro.core.space import DiscreteSpace
+from repro.kernels.decode_attention.kernel import decode_attention_call
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_call
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gh_ei.kernel import gh_ei_call
+from repro.kernels.gh_ei.ref import gh_ei_ref
+from repro.kernels.ssm_scan.kernel import ssm_scan_call
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.kernels.tree_predict.kernel import tree_predict_call
+from repro.kernels.tree_predict.ref import tree_predict_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,h,kh,s,t,d", [
+    (2, 4, 2, 128, 128, 64),
+    (1, 4, 1, 64, 128, 32),      # MQA, cross lengths
+    (1, 6, 6, 128, 128, 16),     # MHA, odd head count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, None, None), (True, 32, None), (True, None, 30.0),
+    (False, None, None),
+])
+def test_flash_attention_sweep(b, h, kh, s, t, d, dtype, causal, window,
+                               softcap):
+    q = jnp.asarray(RNG.normal(size=(b, h, s, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, kh, t, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, kh, t, d)), dtype)
+    out = flash_attention_call(q, k, v, causal=causal, window=window,
+                               softcap=softcap, bq=64, bk=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window,
+                        softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,h,kh,t,d,pos,window", [
+    (2, 4, 2, 256, 64, 100, None),
+    (1, 8, 1, 512, 32, 900, None),    # ring rollover (pos > t)
+    (2, 4, 4, 256, 64, 300, 64),      # sliding window
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, h, kh, t, d, pos, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, h, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, kh, t, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, kh, t, d)), dtype)
+    out = decode_attention_call(q, k, v, pos, window=window, bk=128,
+                                interpret=True)
+    ref = decode_attention_ref(q, k, v, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("depth,n_trees,bm", [(2, 4, 16), (4, 10, 32),
+                                              (5, 7, 64)])
+def test_tree_predict_sweep(depth, n_trees, bm):
+    space = DiscreteSpace.from_grid({"a": list(range(5)),
+                                     "b": [0.0, 2.0, 7.0],
+                                     "c": list(range(6))})
+    y = jnp.asarray(RNG.normal(size=(space.n_points,)).astype(np.float32))
+    mask = jnp.asarray(RNG.random(space.n_points) < 0.6)
+    left = trees.make_left_table(space.points, space.thresholds)
+    params, _ = trees.fit_forest(
+        jax.random.PRNGKey(depth), y, mask, jnp.asarray(space.points), left,
+        jnp.asarray(space.thresholds), n_trees=n_trees, depth=depth)
+    x = jnp.asarray(space.points)
+    mu_k, sig_k = tree_predict_call(x, params.feat, params.thr, params.leaf,
+                                    bm=bm, interpret=True)
+    mu_r, sig_r = tree_predict_ref(x, params.feat, params.thr, params.leaf)
+    np.testing.assert_allclose(np.asarray(mu_k), np.asarray(mu_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sig_k), np.asarray(sig_r),
+                               atol=1e-5)
+
+
+def test_tree_predict_consistent_with_core_forest():
+    """Kernel must agree with the engine's own tabular predictions."""
+    space = DiscreteSpace.from_grid({"a": list(range(8)),
+                                     "b": list(range(8))})
+    y = jnp.asarray(RNG.normal(size=(space.n_points,)).astype(np.float32))
+    mask = jnp.asarray(RNG.random(space.n_points) < 0.5)
+    left = trees.make_left_table(space.points, space.thresholds)
+    params, assign = trees.fit_forest(
+        jax.random.PRNGKey(0), y, mask, jnp.asarray(space.points), left,
+        jnp.asarray(space.thresholds), n_trees=10, depth=4)
+    preds = jnp.take_along_axis(params.leaf, assign, axis=1)
+    mu_core, sig_core = trees.forest_mu_sigma(preds, 1e-6)
+    mu_k, sig_k = tree_predict_call(jnp.asarray(space.points), params.feat,
+                                    params.thr, params.leaf, bm=32,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(mu_k), np.asarray(mu_core),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sig_k), np.asarray(sig_core),
+                               atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("m,k_gh,bm", [(97, 3, 32), (512, 5, 128), (33, 2, 64)])
+def test_gh_ei_sweep(m, k_gh, bm):
+    mu = jnp.asarray(RNG.uniform(1, 5, m), jnp.float32)
+    sig = jnp.asarray(RNG.uniform(0.1, 2, m), jnp.float32)
+    u = jnp.asarray(RNG.uniform(0.5, 3, m), jnp.float32)
+    xi, _ = gauss_hermite(k_gh)
+    a = gh_ei_call(mu, sig, u, 2.5, 1.2, 10.0, jnp.asarray(xi), bm=bm,
+                   interpret=True)
+    r = gh_ei_ref(mu, sig, u, 2.5, 1.2, 10.0, jnp.asarray(xi))
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(r[0]), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(r[1]))
+    np.testing.assert_allclose(np.asarray(a[2]), np.asarray(r[2]), atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("b,l,h,n,p,chunk", [
+    (2, 128, 3, 16, 8, 32), (1, 64, 2, 8, 8, 64), (1, 96, 1, 4, 16, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_sweep(b, l, h, n, p, chunk, dtype):
+    k = jnp.asarray(RNG.normal(size=(b, l, h, n)) * 0.3, dtype)
+    v = jnp.asarray(RNG.normal(size=(b, l, h, p)), dtype)
+    q = jnp.asarray(RNG.normal(size=(b, l, h, n)) * 0.3, dtype)
+    ld = -jnp.asarray(RNG.uniform(0.01, 0.5, (b, l, h)), jnp.float32)
+    g = jnp.asarray(RNG.uniform(0, 1, (b, l, h)), jnp.float32)
+    out = ssm_scan_call(k, v, q, ld, g, chunk=chunk, interpret=True)
+    ref = ssm_scan_ref(k, v, q, ld, g, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=(5e-2 if dtype == jnp.bfloat16 else 1e-4),
+                               rtol=5e-2)

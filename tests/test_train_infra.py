@@ -1,0 +1,230 @@
+"""Training substrate: optimizer, microbatching, compression, checkpoint,
+fault tolerance, data pipeline, sharding rules."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data.pipeline import Prefetcher, SyntheticLM, make_batch
+from repro.distributed.compression import (compress_with_feedback,
+                                           compressed_psum, dequantize,
+                                           quantize)
+from repro.models import RuntimeFlags, build_model
+from repro.optim.adamw import (AdamWConfig, apply_updates, global_norm,
+                               init_opt, warmup_cosine)
+from repro.runtime.fault_tolerance import (RunConfig, StragglerWatchdog,
+                                           run_training)
+from repro.shard.api import make_rules, pspec_for
+from repro.train.step import make_train_state, make_train_step
+
+FLAGS = RuntimeFlags(attn_impl="naive", loss_chunks=2, compute_dtype="float32")
+
+
+# --------------------------------------------------------------------------- #
+# optimizer
+# --------------------------------------------------------------------------- #
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = init_opt(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = apply_updates(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_warmup_cosine_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(warmup_cosine(cfg, jnp.int32(s))) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(1.0)
+    assert lrs[-1] == pytest.approx(0.1, abs=1e-3)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[1:], lrs[2:]))
+
+
+def test_grad_clip_via_global_norm():
+    cfg = AdamWConfig(clip_norm=1.0)
+    g = {"a": jnp.full((4,), 100.0)}
+    params = {"a": jnp.zeros((4,))}
+    _, state, metrics = apply_updates(params, g, init_opt(params), cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+# --------------------------------------------------------------------------- #
+# microbatching and compression
+# --------------------------------------------------------------------------- #
+def _tiny_setup(**flag_over):
+    cfg = get_smoke_config("deepseek-7b")
+    model = build_model(cfg)
+    flags = dataclasses.replace(FLAGS, **flag_over)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    state = make_train_state(model, jax.random.PRNGKey(0), opt, flags)
+    step = jax.jit(make_train_step(model, flags, opt))
+    data = SyntheticLM(cfg, batch=4, seq=16, seed=0)
+    return state, step, data
+
+
+def test_microbatch_equivalence():
+    """mb=2 must produce (nearly) the same update as mb=1."""
+    s1, step1, data = _tiny_setup(microbatches=1)
+    s2, step2, _ = _tiny_setup(microbatches=2)
+    b = data(0)
+    s1, m1 = step1(s1, b)
+    s2, m2 = step2(s2, b)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), abs=1e-4)
+    for a, c in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-4)
+
+
+def test_quantize_dequantize_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(256,)) * 7.0, jnp.float32)
+    q, s = quantize(x)
+    err = jnp.abs(dequantize(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_carries_residual():
+    """Telescoping invariant: sum of emitted = N*g - r_N with |r_N| <= s/2,
+    i.e. components below one quantum are never silently dropped forever."""
+    g = {"w": jnp.asarray([1e-4, 2e-4, 1.0], jnp.float32)}
+    r = {"w": jnp.zeros(3, jnp.float32)}
+    total = jnp.zeros(3, jnp.float32)
+    n = 50
+    for _ in range(n):
+        deq, r = compress_with_feedback(g, r)
+        total = total + deq["w"]
+    scale_bound = float(jnp.max(jnp.abs(g["w"])) * 1.01) / 127.0
+    err = np.abs(np.asarray(total) - n * np.asarray(g["w"]))
+    assert (err <= scale_bound / 2 + 1e-6).all()
+    # and without feedback the tiny components WOULD be dropped entirely
+    q, s = quantize(g["w"])
+    assert float(dequantize(q, s)[0]) == 0.0
+
+
+def test_compressed_psum_single_axis():
+    mesh = jax.make_mesh((1,), ("d",))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)
+    y = jax.shard_map(lambda a: compressed_psum(a, "d"), mesh=mesh,
+                      in_specs=P(), out_specs=P())(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=2e-2,
+                               atol=2e-2)
+
+
+def test_grad_compress_still_converges():
+    state, step, data = _tiny_setup(grad_compress=True)
+    losses = []
+    for i in range(15):
+        state, m = step(state, data(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+# --------------------------------------------------------------------------- #
+# checkpointing + fault tolerance
+# --------------------------------------------------------------------------- #
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=2, async_write=False)
+    state = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 2))}}
+    for s in (1, 2, 3):
+        ckpt.save(s, jax.tree.map(lambda x: x * s, state))
+    assert ckpt.all_steps() == [2, 3]                # pruned to keep=2
+    restored = ckpt.restore(3, state)
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.arange(5.0) * 3)
+    assert not list(tmp_path.glob("*.tmp"))          # atomic
+
+
+def test_restart_bit_exact(tmp_path):
+    state, step, data = _tiny_setup()
+    ckpt = CheckpointManager(tmp_path / "a", keep=3, async_write=False)
+    out = run_training(step, state, data, ckpt,
+                       RunConfig(total_steps=12, checkpoint_every=5,
+                                 log_every=100, fail_at_step=None),
+                       log=lambda *a: None)
+    # run again with injected failure + resume
+    state2, step2, _ = _tiny_setup()
+    ckpt2 = CheckpointManager(tmp_path / "b", keep=3, async_write=False)
+    with pytest.raises(RuntimeError):
+        run_training(step2, state2, data, ckpt2,
+                     RunConfig(total_steps=12, checkpoint_every=5,
+                               log_every=100, fail_at_step=9),
+                     log=lambda *a: None)
+    out2 = run_training(step2, state2, data, ckpt2,
+                        RunConfig(total_steps=12, checkpoint_every=5,
+                                  log_every=100), log=lambda *a: None)
+    for a, b in zip(jax.tree.leaves(out["state"].params),
+                    jax.tree.leaves(out2["state"].params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_watchdog():
+    w = StragglerWatchdog(factor=2.0)
+    assert not w.observe(1, 1.0)
+    assert not w.observe(2, 1.1)
+    assert w.observe(3, 5.0)                        # 5x the EMA
+    assert len(w.stragglers) == 1
+
+
+# --------------------------------------------------------------------------- #
+# data pipeline
+# --------------------------------------------------------------------------- #
+def test_batches_deterministic_in_seed_step():
+    cfg = get_smoke_config("gemma-2b")
+    a = make_batch(cfg, "train", 4, 16, seed=1, step=7)
+    b = make_batch(cfg, "train", 4, 16, seed=1, step=7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = make_batch(cfg, "train", 4, 16, seed=1, step=8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_vlm_batch_has_mrope_positions():
+    cfg = get_smoke_config("qwen2-vl-2b")
+    b = make_batch(cfg, "train", 2, 16, seed=0, step=0)
+    assert b["positions"].shape == (3, 2, 16)
+    assert b["vision_embeds"].shape[1] == cfg.n_vision_tokens
+
+
+def test_prefetcher_yields_in_order():
+    cfg = get_smoke_config("gemma-2b")
+    src = SyntheticLM(cfg, batch=2, seq=8, seed=0)
+    pf = Prefetcher(src, start_step=3, depth=2)
+    steps = [next(pf)[0] for _ in range(4)]
+    pf.close()
+    assert steps == [3, 4, 5, 6]
+
+
+# --------------------------------------------------------------------------- #
+# sharding rules
+# --------------------------------------------------------------------------- #
+def test_pspec_divisibility_guard():
+    mesh = jax.make_mesh((1,), ("model",))
+    rules = make_rules()
+    # 8 heads on a 1-wide axis -> total 1 -> unsharded
+    assert pspec_for((8,), ("heads",), rules, mesh) == P()
+
+
+def test_pspec_uniqueness_guard():
+    class FakeMesh:
+        shape = {"model": 4, "data": 2}
+    rules = make_rules()
+    # experts and ffn both want 'model' -> leftmost wins
+    spec = pspec_for((2, 8, 16, 32), ("layers", "experts", "embed", "ffn"),
+                     rules, FakeMesh())
+    assert spec == P(None, "model", "data")          # trailing None trimmed
+
+
+def test_pspec_tuple_assignment():
+    class FakeMesh:
+        shape = {"pod": 2, "data": 4, "model": 4}
+    rules = make_rules()
+    assert pspec_for((16, 128), ("batch", None), rules,
+                     FakeMesh()) == P(("pod", "data"))
