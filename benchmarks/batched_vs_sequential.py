@@ -1,0 +1,63 @@
+"""Batched vs sequential simulation harness: parity audit + wall-clock.
+
+The paper's evaluation needs >=100 simulated optimizations per (job, policy,
+budget) cell.  This section runs the same 100-run sweep through both
+harnesses on the synthetic job, verifies the outcomes match run for run, and
+reports the wall-clock speedup of the device-resident lockstep path (warm
+compile, the steady state of a figure sweep).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_line, write_json
+from repro.core import Settings, run_many, run_many_batched
+from repro.jobs import synthetic_job
+
+GRID = [("bo", 0, "exact"), ("la0", 0, "exact"), ("lynceus", 1, "frozen"),
+        ("lynceus", 2, "frozen")]
+
+
+def _outcomes_equal(a, b):
+    return (a.explored == b.explored and a.recommended == b.recommended
+            and a.cno == b.cno and a.spent == b.spent and a.nex == b.nex
+            and a.trajectory == b.trajectory)
+
+
+def main(n_runs=20, quick=False):
+    job = synthetic_job(0)
+    n = 30 if quick else max(n_runs, 100)
+    out = {}
+    t_seq_total = t_bat_total = 0.0
+    for policy, la, refit in GRID:
+        s = Settings(policy=policy, la=la, k_gh=3, refit=refit)
+        # Warm both compile caches (different seed, same shapes).
+        run_many(job, s, n_runs=1, seed=999)
+        run_many_batched(job, s, n_runs=n, seed=999)
+
+        t0 = time.perf_counter()
+        seq = run_many(job, s, n_runs=n, seed=5)
+        t_seq = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        bat = run_many_batched(job, s, n_runs=n, seed=5)
+        t_bat = time.perf_counter() - t0
+
+        mismatches = sum(not _outcomes_equal(a, b) for a, b in zip(seq, bat))
+        tag = f"{policy}{la}_{refit}"
+        out[tag] = {"runs": n, "seconds_sequential": t_seq,
+                    "seconds_batched": t_bat, "speedup": t_seq / t_bat,
+                    "mismatching_runs": mismatches}
+        t_seq_total += t_seq
+        t_bat_total += t_bat
+        csv_line("batched", tag, "speedup", round(t_seq / t_bat, 2))
+        csv_line("batched", tag, "mismatching_runs", mismatches)
+    agg = t_seq_total / t_bat_total
+    out["suite"] = {"speedup": agg, "seconds_sequential": t_seq_total,
+                    "seconds_batched": t_bat_total}
+    csv_line("batched", "suite", "sequential_seconds",
+             round(t_seq_total, 2))
+    csv_line("batched", "suite", "batched_seconds", round(t_bat_total, 2))
+    csv_line("batched", "suite", "speedup", round(agg, 2))
+    csv_line("batched", "suite", "speedup_ge_5x", agg >= 5.0)
+    write_json("batched", out)

@@ -2,7 +2,8 @@
 
 Every figure pulls from one memoized outcome store, so e.g. Fig 4/6/7 reuse
 the same simulated optimizations (the paper does the same: one experiment,
-several views).  Cache key = (dataset, job, policy, la, refit, b, n_runs).
+several views).  Cache key = (dataset, job, policy, la, refit, b, n_runs,
+backend).
 """
 
 from __future__ import annotations
@@ -12,9 +13,7 @@ import pathlib
 
 import numpy as np
 
-from repro.core import Settings, metrics, optimize
-from repro.core.space import latin_hypercube_indices
-from repro.core.lookahead import make_selector
+from repro.core import Settings, metrics, run_many, run_many_batched
 from repro.jobs import cherrypick_jobs, scout_jobs, tensorflow_jobs
 
 CACHE = pathlib.Path("results/benchmarks/cache")
@@ -23,34 +22,45 @@ OUT = pathlib.Path("results/benchmarks")
 POLICY_SET = [("rnd", 0), ("bo", 0), ("la0", 0), ("lynceus", 1),
               ("lynceus", 2)]
 
+# Figure sweeps run on the batched device-resident harness by default; flip
+# to "sequential" (benchmarks.run --sequential) to audit any figure against
+# the one-run-at-a-time oracle.
+DEFAULT_BACKEND = "batched"
+
 
 def datasets():
     return {"tensorflow": tensorflow_jobs(0), "scout": scout_jobs(0),
             "cherrypick": cherrypick_jobs(0)}
 
 
-def _key(ds, job, policy, la, b, n_runs, refit):
-    return f"{ds}__{job}__{policy}{la}__b{b}__r{n_runs}__{refit}"
+def _key(ds, job, policy, la, b, n_runs, refit, backend):
+    # backend is part of the key: a --sequential audit must never be served
+    # results the batched harness cached (they agree on audited configs, but
+    # serving one for the other would make the audit vacuous).
+    return f"{ds}__{job}__{policy}{la}__b{b}__r{n_runs}__{refit}__{backend}"
 
 
 def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
-               refit="frozen", seed0=0, quiet=False):
-    """Cached multi-run optimization; identical i-th bootstraps per policy."""
+               refit="frozen", seed0=0, quiet=False, backend=None):
+    """Cached multi-run optimization; identical i-th bootstraps per policy.
+
+    The per-run seeds (7777 + r) and the bootstraps derived from them are
+    shared across every policy on a job — the paper's fairness protocol.
+    ``backend`` picks the harness: "batched" (default, device-resident
+    lockstep lanes) or "sequential" (the Python-loop oracle).
+    """
+    backend = backend or DEFAULT_BACKEND
     CACHE.mkdir(parents=True, exist_ok=True)
-    f = CACHE / (_key(ds_name, job.name, policy, la, b, n_runs, refit)
-                 + ".json")
+    f = CACHE / (_key(ds_name, job.name, policy, la, b, n_runs, refit,
+                      backend) + ".json")
     if f.exists():
         return json.loads(f.read_text())
     s = Settings(policy=policy, la=la, k_gh=3, refit=refit)
-    selector = None
-    if policy != "rnd":
-        selector = make_selector(job.space, job.unit_price, job.t_max, s)
+    seeds = [7777 + r for r in range(n_runs)]        # shared across policies
+    runner = run_many if backend == "sequential" else run_many_batched
+    outcomes = runner(job, s, budget_b=b, seeds=seeds)
     outs = []
-    for r in range(n_runs):
-        rng = np.random.default_rng(7777 + r)        # shared across policies
-        boot = latin_hypercube_indices(job.space, job.bootstrap_size(), rng)
-        o = optimize(job, s, budget_b=b, seed=7777 + r, bootstrap=boot,
-                     selector=selector)
+    for r, o in enumerate(outcomes):
         outs.append({"cno": o.cno, "nex": o.nex, "spent": o.spent,
                      "found": o.found_optimum,
                      "select_s": o.select_seconds,

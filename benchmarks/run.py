@@ -13,10 +13,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (fig1a_landscape, fig1b_disjoint, fig4_cno_tf,
-                        fig5_cno_scout_cp, fig6_la_ablation, fig7_cno_vs_nex,
-                        fig8_budget, fig9_nex, table3_latency, roofline,
-                        kernels_bench)
+from benchmarks import (batched_vs_sequential, common, fig1a_landscape,
+                        fig1b_disjoint, fig4_cno_tf, fig5_cno_scout_cp,
+                        fig6_la_ablation, fig7_cno_vs_nex, fig8_budget,
+                        fig9_nex, table3_latency, roofline, kernels_bench)
 
 SECTIONS = {
     "fig1a": fig1a_landscape.main,
@@ -28,6 +28,7 @@ SECTIONS = {
     "fig8": fig8_budget.main,
     "fig9": fig9_nex.main,
     "table3": table3_latency.main,
+    "batched": batched_vs_sequential.main,
     "roofline": roofline.main,
     "kernels": kernels_bench.main,
 }
@@ -39,7 +40,12 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="5 runs / reduced sweeps (CI smoke)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--sequential", action="store_true",
+                    help="drive figure sweeps through the sequential oracle "
+                         "instead of the batched harness")
     args = ap.parse_args(argv)
+    if args.sequential:
+        common.DEFAULT_BACKEND = "sequential"
     n_runs = 5 if args.quick else args.runs
     only = args.only.split(",") if args.only else list(SECTIONS)
     for name in only:

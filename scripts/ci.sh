@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 test suite + batched-harness smoke on the synthetic job.
+# Exits nonzero on any test failure, any sequential/batched outcome
+# divergence, or a missing speedup.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pytest -q
+
+PYTHONPATH=src python - <<'PY'
+import sys
+import time
+
+from repro.core import Settings, run_many, run_many_batched
+from repro.jobs import synthetic_job
+
+job = synthetic_job(0)
+failures = 0
+for policy, la, refit in [("bo", 0, "exact"), ("la0", 0, "exact"),
+                          ("lynceus", 2, "frozen")]:
+    s = Settings(policy=policy, la=la, k_gh=3, refit=refit)
+    seq = run_many(job, s, n_runs=25, seed=13)
+    bat = run_many_batched(job, s, n_runs=25, seed=13)
+    bad = sum(a.explored != b.explored or a.spent != b.spent
+              or a.cno != b.cno or a.trajectory != b.trajectory
+              for a, b in zip(seq, bat))
+    print(f"ci-smoke {policy}{la}/{refit}: {bad}/25 mismatching runs")
+    failures += bad
+
+s = Settings(policy="la0", la=0, k_gh=3)
+run_many(job, s, n_runs=1, seed=999)            # warm compile caches
+run_many_batched(job, s, n_runs=50, seed=999)
+t0 = time.perf_counter(); run_many(job, s, n_runs=50, seed=7)
+t_seq = time.perf_counter() - t0
+t0 = time.perf_counter(); run_many_batched(job, s, n_runs=50, seed=7)
+t_bat = time.perf_counter() - t0
+print(f"ci-smoke speedup: sequential {t_seq:.2f}s batched {t_bat:.2f}s "
+      f"({t_seq / t_bat:.1f}x)")
+
+if failures:
+    sys.exit(f"{failures} mismatching runs between harnesses")
+if t_seq / t_bat < 2.0:                          # loose floor; CI boxes vary
+    sys.exit("batched harness lost its speedup")
+print("ci-smoke OK")
+PY

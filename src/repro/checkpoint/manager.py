@@ -20,11 +20,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import tree_leaves_with_path
+
 __all__ = ["CheckpointManager"]
 
 
 def _flatten_with_names(tree):
-    flat = jax.tree.leaves_with_path(tree)
+    flat = tree_leaves_with_path(tree)
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 

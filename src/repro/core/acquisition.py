@@ -18,6 +18,9 @@ Implements paper §3 exactly:
 
 from __future__ import annotations
 
+import functools
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -25,10 +28,35 @@ from jax.scipy.stats import norm
 
 __all__ = [
     "expected_improvement", "prob_leq", "constraint_prob", "ei_constrained",
-    "incumbent", "budget_ok", "gauss_hermite", "gh_cost_nodes",
+    "incumbent", "budget_ok", "normal_quantile", "quantize_scores",
+    "gauss_hermite", "gh_cost_nodes",
 ]
 
 _SIG_EPS = 1e-12
+
+
+def quantize_scores(x: jax.Array, bits: int = 12) -> jax.Array:
+    """Round float32 scores to ``bits`` mantissa bits before an argmax.
+
+    XLA recompiles the selector for every batch geometry (R = 1 oracle,
+    R = chunk harness), and fusion choices perturb transcendental- and
+    matmul-derived scores in the last ulp.  An argmax over raw scores then
+    breaks near-ties differently per compilation context, which would make
+    a simulated run's exploration trace depend on how many runs are batched
+    together.  Rounding to a 2^-bits relative grid (default ~2.4e-4, about
+    3 orders of magnitude above the observed noise) collapses near-ties to
+    *exact* ties, and exact ties break deterministically (lowest index) in
+    every context.  Pure bit arithmetic — itself geometry-stable.
+
+    Infinities and NaNs pass through unchanged (+-inf are fixed points of
+    the mantissa rounding; the selector relies on -inf masking).
+    """
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    half = jnp.uint32(1 << (22 - bits))
+    mask = jnp.uint32((0xFFFFFFFF << (23 - bits)) & 0xFFFFFFFF)
+    nan = jnp.isnan(x)
+    q = jax.lax.bitcast_convert_type((u + half) & mask, jnp.float32)
+    return jnp.where(nan, x, q)
 
 
 def expected_improvement(mu: jax.Array, sigma: jax.Array,
@@ -70,9 +98,38 @@ def incumbent(y, obs_mask, feasible_mask, mu, sigma):
     return jnp.where(jnp.isfinite(best_feas), best_feas, fallback)
 
 
+@functools.lru_cache(maxsize=None)
+def normal_quantile(conf: float) -> float:
+    """Standard-normal quantile Phi^-1(conf), host-side float64 bisection.
+
+    Computed once per confidence level from ``math.erf`` so that the budget
+    filter below never thresholds a device-evaluated transcendental.
+    """
+    if not 0.0 < conf < 1.0:
+        raise ValueError(f"conf must be in (0, 1), got {conf}")
+    lo, hi = -40.0, 40.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if 0.5 * (1.0 + math.erf(mid / math.sqrt(2.0))) < conf:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
 def budget_ok(mu, sigma, beta, conf: float = 0.99) -> jax.Array:
-    """Gamma filter: P(cost <= remaining budget) >= conf."""
-    return prob_leq(mu, sigma, beta) >= conf
+    """Gamma filter: P(cost <= remaining budget) >= conf (Alg. 1 line 23).
+
+    Evaluated in z-space — ``(beta - mu)/sigma >= Phi^-1(conf)`` — rather
+    than thresholding ``norm.cdf``: mathematically identical (Phi is
+    monotone), but the compare is now pure IEEE arithmetic against a host
+    constant.  XLA's vectorized erf differs in the last ulp across batch
+    shapes, and a cdf value sitting within one ulp of ``conf`` would make
+    Gamma membership — and thus the whole exploration trace — depend on how
+    many runs happen to be batched together.
+    """
+    z = (beta - mu) / jnp.maximum(sigma, _SIG_EPS)
+    return z >= normal_quantile(float(conf))
 
 
 def gauss_hermite(k: int) -> tuple[np.ndarray, np.ndarray]:

@@ -36,7 +36,8 @@ import numpy as np
 from repro.core import acquisition as acq
 from repro.core import trees
 
-__all__ = ["Settings", "select_next", "make_selector"]
+__all__ = ["Settings", "select_next", "select_next_batched", "make_selector",
+           "make_batch_selector", "space_arrays"]
 
 _EPS = 1e-9
 
@@ -145,7 +146,7 @@ def _recurse(key, y_b, m_b, beta_b, bf_b, depth_left, *, points, left,
     eic = acq.ei_constrained(mu, sigma, ystar[:, None], u[None, :], t_max)
     untested = ~m_b.astype(bool)
     cand = untested & acq.budget_ok(mu, sigma, beta_b[:, None], s.conf)
-    score = jnp.where(cand, eic, -jnp.inf)
+    score = acq.quantize_scores(jnp.where(cand, eic, -jnp.inf))
     sel = jnp.argmax(score, axis=1)                             # [S]
     valid = jnp.any(cand, axis=1)
     take = lambda a: jnp.take_along_axis(a, sel[:, None], axis=1)[:, 0]
@@ -187,9 +188,8 @@ def _recurse(key, y_b, m_b, beta_b, bf_b, depth_left, *, points, left,
     return reward, cost
 
 
-@functools.partial(jax.jit, static_argnames=("s",))
-def select_next(key, y, obs_mask, beta, points, left, thresholds, u, t_max,
-                s: Settings):
+def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
+                      t_max, s: Settings):
     """One NextConfig step. Returns (index, valid, diagnostics).
 
     y: [M] observed costs (value irrelevant where unobserved);
@@ -212,11 +212,15 @@ def select_next(key, y, obs_mask, beta, points, left, thresholds, u, t_max,
 
     if s.policy == "bo":
         # CherryPick-style greedy, cost-unaware: argmax EI_c over untested.
-        score = jnp.where(untested, eic0, -jnp.inf)
+        # All selection argmaxes run on quantized scores (see
+        # acq.quantize_scores): near-ties must break identically whether the
+        # selector is compiled for 1 run or a whole batched chunk.
+        score = acq.quantize_scores(jnp.where(untested, eic0, -jnp.inf))
         return jnp.argmax(score), jnp.any(untested), diagnostics
     if s.policy == "la0" or (s.policy == "lynceus" and s.la == 0):
         # Cost-normalized greedy (paper's LA = 0 variant).
-        score = jnp.where(gamma0, eic0 / jnp.maximum(mu0, _EPS), -jnp.inf)
+        score = acq.quantize_scores(
+            jnp.where(gamma0, eic0 / jnp.maximum(mu0, _EPS), -jnp.inf))
         return jnp.argmax(score), jnp.any(gamma0), diagnostics
     if s.policy != "lynceus":
         raise ValueError(f"unknown policy {s.policy!r}")
@@ -248,22 +252,76 @@ def select_next(key, y, obs_mask, beta, points, left, thresholds, u, t_max,
     w = jnp.asarray(w)
     reward = reward + s.gamma * (r1.reshape(m_dim, s.k_gh) @ w)
     cost = cost + (c1.reshape(m_dim, s.k_gh) @ w)
-    score = jnp.where(gamma0, reward / jnp.maximum(cost, _EPS), -jnp.inf)
+    score = acq.quantize_scores(
+        jnp.where(gamma0, reward / jnp.maximum(cost, _EPS), -jnp.inf))
     diagnostics["reward"] = reward
     diagnostics["path_cost"] = cost
     return jnp.argmax(score), jnp.any(gamma0), diagnostics
 
 
-def make_selector(space, unit_price: np.ndarray, t_max: float, s: Settings):
-    """Bind a space to the jitted selector; returns f(key, y, mask, beta)."""
+select_next = jax.jit(_select_next_impl, static_argnames=("s",))
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def select_next_batched(keys, y, obs_mask, beta, points, left, thresholds, u,
+                        t_max, s: Settings):
+    """NextConfig for R independent runs at once (the batched-harness entry).
+
+    keys: [R, 2] PRNG keys; y: [R, M]; obs_mask: [R, M]; beta: [R].
+    Returns ([R] indices, [R] valid flags, batched diagnostics).  Per-lane
+    results are bitwise independent of R (each lane is the same elementwise/
+    per-slice program), which is what lets the sequential oracle run as the
+    R = 1 special case of this very kernel.
+    """
+
+    def one(k, y_r, m_r, b_r):
+        return _select_next_impl(k, y_r, m_r, b_r, points, left, thresholds,
+                                 u, t_max, s)
+
+    return jax.vmap(one)(keys, y, obs_mask, beta)
+
+
+def space_arrays(space, unit_price: np.ndarray):
+    """Device-resident space tensors shared by every selector of a space."""
     points = jnp.asarray(space.points)
     thresholds = jnp.asarray(space.thresholds)
     left = trees.make_left_table(space.points, space.thresholds)
     u = jnp.asarray(unit_price, dtype=jnp.float32)
+    return points, left, thresholds, u
+
+
+def make_batch_selector(space, unit_price: np.ndarray, t_max: float,
+                        s: Settings):
+    """Bind a space to the batched selector; returns f(keys, y, mask, beta)
+    over [R, ...] lane-stacked state."""
+    points, left, thresholds, u = space_arrays(space, unit_price)
+
+    def run(keys, y, obs_mask, beta):
+        return select_next_batched(
+            jnp.asarray(keys), jnp.asarray(y, jnp.float32),
+            jnp.asarray(obs_mask), jnp.asarray(beta, jnp.float32),
+            points, left, thresholds, u, jnp.float32(t_max), s)
+
+    return run
+
+
+def make_selector(space, unit_price: np.ndarray, t_max: float, s: Settings):
+    """Bind a space to the jitted selector; returns f(key, y, mask, beta).
+
+    Routed through :func:`select_next_batched` with a single lane rather than
+    the unbatched :func:`select_next` program: XLA vectorizes transcendentals
+    (the erf inside ``norm.cdf``) differently for rank-1 vs rank-2 operands,
+    which perturbs EI in the last ulp and could flip an argmax.  Running the
+    sequential oracle as the R = 1 case of the batched kernel makes
+    ``optimize`` and ``run_many_batched`` bit-identical by construction.
+    """
+    batch = make_batch_selector(space, unit_price, t_max, s)
 
     def run(key, y, obs_mask, beta):
-        return select_next(key, jnp.asarray(y, jnp.float32),
-                           jnp.asarray(obs_mask), jnp.float32(beta),
-                           points, left, thresholds, u, jnp.float32(t_max), s)
+        idx, valid, diag = batch(
+            jnp.asarray(key)[None], jnp.asarray(y, jnp.float32)[None],
+            jnp.asarray(obs_mask)[None],
+            jnp.asarray(beta, jnp.float32)[None])
+        return idx[0], valid[0], jax.tree.map(lambda a: a[0], diag)
 
     return run

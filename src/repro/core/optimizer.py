@@ -21,10 +21,12 @@ comparisons are at parity of spend — exactly the paper's methodology (§5.2).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import TYPE_CHECKING, Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lookahead
@@ -33,7 +35,7 @@ from repro.core.space import latin_hypercube_indices
 if TYPE_CHECKING:  # avoid the core <-> jobs import cycle at runtime
     from repro.jobs.tables import JobTable
 
-__all__ = ["Outcome", "optimize", "run_many"]
+__all__ = ["Outcome", "optimize", "run_many", "run_many_batched"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,7 +87,10 @@ def optimize(job: JobTable, settings: lookahead.Settings, *, budget_b: float = 3
     rng = np.random.default_rng(seed)
     n_boot = job.bootstrap_size()
     budget = job.budget(budget_b)
-    cost = job.cost
+    # Budget accounting runs in float32 — the same IEEE arithmetic the
+    # device-resident batched harness performs — so the two paths stay
+    # bit-identical (the selector only ever sees float32 anyway).
+    cost = job.cost.astype(np.float32)
 
     if bootstrap is None:
         bootstrap = latin_hypercube_indices(job.space, n_boot, rng)
@@ -94,7 +99,7 @@ def optimize(job: JobTable, settings: lookahead.Settings, *, budget_b: float = 3
     y = np.zeros(m, dtype=np.float32)
     mask = np.zeros(m, dtype=bool)
     explored: list[int] = []
-    beta = budget
+    beta = np.float32(budget)
     trajectory: list[float] = []
 
     def run_config(i: int) -> None:
@@ -209,20 +214,207 @@ def optimize_live(evaluator, space, unit_price, t_max: float,
             "best_runtime": float(runtimes[rec]), "best_cost": float(y[rec])}
 
 
+def _per_run_seeds(seed: int, n_runs: int) -> list[int]:
+    return [seed * 100003 + r for r in range(n_runs)]
+
+
+def _per_run_bootstraps(job: JobTable, seeds) -> list[np.ndarray]:
+    """The i-th bootstrap is a pure function of the i-th seed, so every
+    policy handed the same seeds sees the same bootstraps (paper fairness)."""
+    return [latin_hypercube_indices(job.space, job.bootstrap_size(),
+                                    np.random.default_rng(s)) for s in seeds]
+
+
 def run_many(job: JobTable, settings: lookahead.Settings, *, n_runs: int = 100,
-             budget_b: float = 3.0, seed: int = 0) -> list[Outcome]:
+             budget_b: float = 3.0, seed: int = 0, seeds=None,
+             bootstraps=None) -> list[Outcome]:
     """Paper methodology: ≥100 runs, each with a different bootstrap; all
     policies see the same i-th bootstrap (pass the same seed across policies).
+
+    This is the sequential oracle — one Python-driven run at a time.  The
+    production path is :func:`run_many_batched`, which produces bit-identical
+    outcomes; keep this one as the reference the batched harness is audited
+    against.  ``seeds``/``bootstraps`` override the derived per-run values
+    (both length n_runs; ``seeds`` alone re-derives the bootstraps from it).
     """
+    seeds, bootstraps = _resolve_runs(job, seed, n_runs, seeds, bootstraps)
     selector = None
     if settings.policy != "rnd":
         selector = lookahead.make_selector(
             job.space, job.unit_price, job.t_max, settings)
-    outs = []
-    for r in range(n_runs):
-        rng = np.random.default_rng(seed * 100003 + r)
-        boot = latin_hypercube_indices(job.space, job.bootstrap_size(), rng)
-        outs.append(optimize(job, settings, budget_b=budget_b,
-                             seed=seed * 100003 + r, bootstrap=boot,
-                             selector=selector))
+    return [optimize(job, settings, budget_b=budget_b, seed=s, bootstrap=boot,
+                     selector=selector)
+            for s, boot in zip(seeds, bootstraps)]
+
+
+def _resolve_runs(job: JobTable, seed: int, n_runs: int, seeds, bootstraps):
+    """Materialize per-run seeds/bootstraps; reject mismatched overrides
+    (a silent zip-truncation would under-sample a figure sweep)."""
+    seeds = list(seeds) if seeds is not None else _per_run_seeds(seed, n_runs)
+    if bootstraps is None:
+        bootstraps = _per_run_bootstraps(job, seeds)
+    if len(bootstraps) != len(seeds):
+        raise ValueError(f"{len(seeds)} seeds but {len(bootstraps)} "
+                         "bootstraps; pass matching lists")
+    return seeds, list(bootstraps)
+
+
+# --------------------------------------------------------------------------- #
+# Batched, device-resident harness
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("s",))
+def _batched_episode(keys, y, mask, beta, explored, n_exp, cost, points, left,
+                     thresholds, u, t_max, s: lookahead.Settings):
+    """Advance R simulated optimizations to completion in lockstep.
+
+    One ``lax.while_loop`` over exploration steps; every iteration selects
+    for all R lanes at once and applies Alg. 1's budget accounting and
+    stopping rule as masked lane updates — no host round trip anywhere.
+
+    keys: [R, 2]; y/mask: [R, M]; beta: [R]; explored: [R, M] int32 (-1
+    padded, bootstrap prefix already written); n_exp: [R] int32.
+    Returns (beta, explored, n_exp, steps).
+    """
+    r_dim, m_dim = y.shape
+    lanes = jnp.arange(r_dim)
+
+    def cond(st):
+        return st["active"].any()
+
+    def body(st):
+        split = jax.vmap(jax.random.split)(st["key"])       # [R, 2, 2]
+        key, sub = split[:, 0], split[:, 1]
+        idx, valid, _ = lookahead.select_next_batched(
+            sub, st["y"], st["mask"], jnp.maximum(st["beta"], 0.0),
+            points, left, thresholds, u, t_max, s)
+        c = cost[idx]                                       # [R] f32
+        run = st["active"] & valid                          # Gamma empty -> stop
+        if s.policy == "bo":
+            # Cost-unaware greedy stops when its pick is unaffordable.
+            run = run & (c <= st["beta"])
+        hit = run[:, None] & (jnp.arange(m_dim)[None, :] == idx[:, None])
+        y = jnp.where(hit, c[:, None], st["y"])
+        mask = st["mask"] | hit
+        beta = jnp.where(run, st["beta"] - c, st["beta"])
+        pos = jnp.minimum(st["n_exp"], m_dim - 1)
+        explored = st["explored"].at[lanes, pos].set(
+            jnp.where(run, idx, st["explored"][lanes, pos]))
+        n_exp = st["n_exp"] + run.astype(jnp.int32)
+        active = run & (beta > 0.0)                         # Alg. 1 line 11
+        return {"key": key, "y": y, "mask": mask, "beta": beta,
+                "explored": explored, "n_exp": n_exp, "active": active,
+                "steps": st["steps"] + 1}
+
+    st = jax.lax.while_loop(cond, body, {
+        "key": keys, "y": y, "mask": mask, "beta": beta, "explored": explored,
+        "n_exp": n_exp, "active": jnp.ones((r_dim,), bool),
+        "steps": jnp.int32(0)})
+    return st["beta"], st["explored"], st["n_exp"], st["steps"]
+
+
+def _auto_lane_chunk(job: JobTable, s: lookahead.Settings, n_runs: int) -> int:
+    """Bound the deepest speculative tensor (n_trees × M × M·k^la per lane)."""
+    m = job.space.n_points
+    states = m * (s.k_gh ** max(s.la, 0) if s.policy == "lynceus" else 1)
+    budget_elems = 1.5e8
+    return int(max(1, min(n_runs, budget_elems // (s.n_trees * m * states))))
+
+
+def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
+                     n_runs: int = 100, budget_b: float = 3.0, seed: int = 0,
+                     seeds=None, bootstraps=None,
+                     lane_chunk: int | None = None) -> list[Outcome]:
+    """Batched ``run_many``: R device-resident runs advanced in lockstep.
+
+    Each lane executes the exact Alg. 1 semantics of the sequential oracle —
+    identical PRNG key schedule, float32 budget accounting, bootstrap replay
+    and stopping rule — but the whole sweep is a handful of compiled XLA
+    programs instead of a Python loop with host<->device sync points per
+    exploration step.
+
+    Equivalence contract: outcomes are bit-identical to :func:`run_many` on
+    the audited configurations (the synthetic job is exact across thousands
+    of runs for every policy; see tests/test_batched_harness.py and
+    scripts/ci.sh).  XLA recompiles the selector per batch geometry and its
+    fusion choices wobble scores in the last ulps; every *decision* in the
+    pipeline is hardened against that (z-space budget filter,
+    cancellation-free split gains, quantized argmaxes — see
+    ``acquisition.quantize_scores``), but on larger spaces a sub-percent
+    fraction of runs can still step onto a near-tied, statistically
+    equivalent branch.  Use ``run_many`` when strict per-run reproduction
+    against the oracle is required.
+
+    ``rnd`` has no model to amortize and is driven by host-side numpy RNG, so
+    it falls through to the sequential path.  ``lane_chunk`` bounds how many
+    runs share one compiled episode (memory control on big spaces); the
+    default is sized from the lookahead state tensor.  ``trajectory``, CNO
+    and NEX are reconstructed post hoc from the recorded exploration order —
+    pure table math, identical to what the sequential loop computes inline.
+    """
+    if settings.policy == "rnd":
+        return run_many(job, settings, n_runs=n_runs, budget_b=budget_b,
+                        seed=seed, seeds=seeds, bootstraps=bootstraps)
+    seeds, bootstraps = _resolve_runs(job, seed, n_runs, seeds, bootstraps)
+    n_runs = len(seeds)
+    if lane_chunk is None:
+        lane_chunk = _auto_lane_chunk(job, settings, n_runs)
+
+    m = job.space.n_points
+    budget = job.budget(budget_b)
+    cost32 = job.cost.astype(np.float32)
+    dev = job.device_view()
+    points, left, thresholds, u = lookahead.space_arrays(
+        job.space, job.unit_price)
+    t_max32 = jnp.float32(job.t_max)
+
+    outs: list[Outcome] = []
+    for lo in range(0, n_runs, lane_chunk):
+        chunk_seeds = seeds[lo:lo + lane_chunk]
+        chunk_boots = bootstraps[lo:lo + lane_chunk]
+        r_dim = len(chunk_seeds)
+
+        # Host-side bootstrap replay, float32 — Alg. 1 lines 6-8, the exact
+        # arithmetic `optimize` performs before its selection loop starts.
+        y0 = np.zeros((r_dim, m), np.float32)
+        m0 = np.zeros((r_dim, m), bool)
+        beta0 = np.full(r_dim, np.float32(budget), np.float32)
+        expl0 = np.full((r_dim, m), -1, np.int32)
+        for r, boot in enumerate(chunk_boots):
+            for j, i in enumerate(boot):
+                i = int(i)
+                y0[r, i] = cost32[i]
+                m0[r, i] = True
+                beta0[r] = beta0[r] - cost32[i]
+                expl0[r, j] = i
+        keys0 = jnp.stack([jax.random.PRNGKey(s) for s in chunk_seeds])
+        n_exp0 = np.array([len(b) for b in chunk_boots], np.int32)
+
+        t0 = time.perf_counter()
+        beta_f, expl_f, n_exp_f, steps = jax.block_until_ready(
+            _batched_episode(keys0, jnp.asarray(y0), jnp.asarray(m0),
+                             jnp.asarray(beta0), jnp.asarray(expl0),
+                             jnp.asarray(n_exp0), dev.cost, points, left,
+                             thresholds, u, t_max32, settings))
+        wall = time.perf_counter() - t0
+        # Amortized wall time per selection (steps x lanes selections per
+        # episode), to stay comparable with the sequential oracle's per-call
+        # mean.  Caveats: includes the masked-lane state update, and the
+        # first chunk folds in XLA compilation.
+        sel_s = wall / max(int(steps) * r_dim, 1)
+
+        beta_f = np.asarray(beta_f)
+        expl_f = np.asarray(expl_f)
+        n_exp_f = np.asarray(n_exp_f)
+        for r in range(r_dim):
+            explored = [int(i) for i in expl_f[r, :n_exp_f[r]]]
+            rec = _recommend(job, explored)
+            trajectory = [_trajectory_point(job, explored[:j + 1])
+                          for j in range(len(explored))]
+            outs.append(Outcome(
+                job=job.name, policy=settings.policy, recommended=rec,
+                cno=job.cno(rec), nex=len(explored),
+                spent=float(budget - beta_f[r]), budget=float(budget),
+                found_optimum=(rec == job.optimum_index),
+                explored=tuple(explored), select_seconds=sel_s,
+                trajectory=tuple(trajectory)))
     return outs

@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.acquisition import quantize_scores as _quantize_scores
+
 __all__ = [
     "ForestParams", "make_left_table", "fit_forest", "predict_forest",
     "forest_mu_sigma", "fit_predict_mu_sigma",
@@ -62,11 +64,6 @@ def make_left_table(points: np.ndarray, thresholds: np.ndarray) -> jnp.ndarray:
                        dtype=jnp.float32)
 
 
-def _sse(sw, swy, swy2):
-    """Weighted sum of squared errors around the weighted mean."""
-    return swy2 - swy * swy / jnp.maximum(sw, _EPS)
-
-
 def _fit_one_tree(y: jax.Array, w: jax.Array, points: jax.Array,
                   left: jax.Array, *, depth: int, min_weight: float):
     """Fit a single tree. y, w: [M]; points: [M, F]; left: [M, F, T]."""
@@ -82,28 +79,46 @@ def _fit_one_tree(y: jax.Array, w: jax.Array, points: jax.Array,
         n = 2 ** lvl
         onehot = (assign[:, None] == jnp.arange(n)[None, :]).astype(jnp.float32)
         wy = w * y
-        wy2 = wy * y
         sw_n = onehot.T @ w                              # [n]
         swy_n = onehot.T @ wy
-        swy2_n = onehot.T @ wy2
         # Left-branch stats per (node, feature, threshold).  Contract the M
         # dimension as one [n, M] @ [M, F*T] matmul per statistic: this keeps
         # intermediates at O(n·F·T) instead of the naive einsum's O(M·F·T)
         # per node, which is what makes the vmap over thousands of
         # speculative states affordable (and MXU-friendly on TPU).
         left_flat = left.reshape(m, f_dims * t_dims)
-        stats = jnp.stack([w, wy, wy2], axis=0)          # [3, M]
+        stats = jnp.stack([w, wy], axis=0)               # [2, M]
         node_stats = (onehot.T[None, :, :] * stats[:, None, :]) @ left_flat
-        sl_w, sl_wy, sl_wy2 = (node_stats.reshape(3, n, f_dims, t_dims)[i]
-                               for i in range(3))
+        sl_w, sl_wy = (node_stats.reshape(2, n, f_dims, t_dims)[i]
+                       for i in range(2))
         sr_w = sw_n[:, None, None] - sl_w
         sr_wy = swy_n[:, None, None] - sl_wy
-        sr_wy2 = swy2_n[:, None, None] - sl_wy2
-        gain = (_sse(sw_n, swy_n, swy2_n)[:, None, None]
-                - _sse(sl_w, sl_wy, sl_wy2) - _sse(sr_w, sr_wy, sr_wy2))
+        # Variance-reduction gain in its decomposition form,
+        #   SSE_p - SSE_l - SSE_r = (w_l w_r / w_p) (mean_l - mean_r)^2,
+        # which is algebraically identical to differencing the three SSEs but
+        # free of their catastrophic cancellation: the gain's floating-point
+        # wobble is *relative* (~1 ulp), not absolute at the scale of
+        # ulp(sum w y^2).  That matters because XLA re-fuses this program
+        # differently per batch geometry (1-run oracle vs R-run harness), and
+        # the split argmax below must not flip between the two.
+        ml = sl_wy / jnp.maximum(sl_w, _EPS)
+        mr = sr_wy / jnp.maximum(sr_w, _EPS)
+        gain = (sl_w * sr_w / jnp.maximum(sw_n[:, None, None], _EPS)
+                * (ml - mr) ** 2)
+        # Noise floor: when a node's observed values are (near-)constant,
+        # ml - mr is itself a catastrophic cancellation and every "gain" is
+        # pure rounding noise with O(1) relative error — snap those to an
+        # exact 0 so the argmax ties deterministically instead of ranking
+        # noise.  1e-10 of the node's w·mean^2 scale sits ~4 orders above
+        # the (1e-7)^2 relative noise and far below any meaningful gain.
+        scale = (swy_n * swy_n / jnp.maximum(sw_n, _EPS))[:, None, None]
+        gain = jnp.where(gain < scale * 1e-10, 0.0, gain)
         valid = (sl_w >= min_weight) & (sr_w >= min_weight)
         gain = jnp.where(valid, gain, -jnp.inf)
-        flat = gain.reshape(n, f_dims * t_dims)
+        # Quantized argmax (see acquisition.quantize_scores): collapse
+        # geometry-dependent last-ulp wobble into exact ties, which break by
+        # lowest index identically in every compilation context.
+        flat = _quantize_scores(gain).reshape(n, f_dims * t_dims)
         best = jnp.argmax(flat, axis=1)
         best_gain = jnp.take_along_axis(flat, best[:, None], axis=1)[:, 0]
         f_sel = (best // t_dims).astype(jnp.int32)

@@ -1,8 +1,8 @@
 """Tabular job-cost datasets (the paper's simulation substrate)."""
 
-from repro.jobs.tables import JobTable
-from repro.jobs.synthetic import (tensorflow_jobs, scout_jobs,
+from repro.jobs.tables import DeviceTables, JobTable
+from repro.jobs.synthetic import (synthetic_job, tensorflow_jobs, scout_jobs,
                                   cherrypick_jobs, all_jobs)
 
-__all__ = ["JobTable", "tensorflow_jobs", "scout_jobs", "cherrypick_jobs",
-           "all_jobs"]
+__all__ = ["DeviceTables", "JobTable", "synthetic_job", "tensorflow_jobs",
+           "scout_jobs", "cherrypick_jobs", "all_jobs"]

@@ -22,7 +22,25 @@ import numpy as np
 from repro.core.space import DiscreteSpace
 from repro.jobs.tables import JobTable
 
-__all__ = ["tensorflow_jobs", "scout_jobs", "cherrypick_jobs", "all_jobs"]
+__all__ = ["synthetic_job", "tensorflow_jobs", "scout_jobs",
+           "cherrypick_jobs", "all_jobs"]
+
+
+def synthetic_job(seed: int = 0, *, n_a: int = 6, n_b: int = 4,
+                  name: str = "synthetic") -> JobTable:
+    """Small deterministic 2-dim job for smoke tests and harness benchmarks.
+
+    Runtime/price are uniform draws with T_max at the median runtime, so
+    about half the space is feasible — the same regime as the real datasets
+    but tiny enough that a full ≥100-run sweep finishes in seconds.
+    """
+    rng = np.random.default_rng(seed)
+    space = DiscreteSpace.from_grid({"a": list(range(n_a)),
+                                     "b": list(range(n_b))})
+    runtime = rng.uniform(0.1, 2.0, space.n_points)
+    price = rng.uniform(0.5, 2.0, space.n_points)
+    return JobTable(name, space, runtime, price,
+                    t_max=float(np.median(runtime)))
 
 # --------------------------------------------------------------------------- #
 # TensorFlow jobs (paper §5.1.1)

@@ -11,12 +11,25 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
+from typing import NamedTuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.space import DiscreteSpace
 
-__all__ = ["JobTable"]
+__all__ = ["DeviceTables", "JobTable"]
+
+
+class DeviceTables(NamedTuple):
+    """Per-config job tables as device arrays (float32 — the precision the
+    whole simulation runs in, host and device alike)."""
+
+    cost: jax.Array        # [M] f32 — C(x) = T(x)·U(x)
+    unit_price: jax.Array  # [M] f32
+    runtime: jax.Array     # [M] f32
+    feasible: jax.Array    # [M] bool — T(x) <= t_max
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +83,24 @@ class JobTable:
     def budget(self, b: float) -> float:
         """B = N · m̃ · b (paper §5.2)."""
         return self.bootstrap_size() * self.mean_cost * b
+
+    def device_view(self) -> DeviceTables:
+        """The tables as device arrays, moved to device once and cached.
+
+        The batched simulation harness gathers every simulated "run"'s cost
+        from ``.cost``, so no host <-> device traffic happens inside the
+        exploration loop; the other columns ride along for consumers that
+        need on-device feasibility/runtime lookups.
+        """
+        cached = getattr(self, "_device_view", None)
+        if cached is None:
+            cached = DeviceTables(
+                cost=jnp.asarray(self.cost, jnp.float32),
+                unit_price=jnp.asarray(self.unit_price, jnp.float32),
+                runtime=jnp.asarray(self.runtime, jnp.float32),
+                feasible=jnp.asarray(self.feasible))
+            object.__setattr__(self, "_device_view", cached)
+        return cached
 
     # ------------------------------------------------------------------ #
     def cno(self, index: int) -> float:

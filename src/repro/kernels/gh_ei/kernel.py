@@ -2,10 +2,12 @@
 
 One pass over the candidate set computes, per configuration block:
 EI(x) (closed form with in-kernel Phi/phi), the time-constraint probability
-P(C <= T_max*U) through the cost model, the budget filter
-P(c <= beta) >= conf, and the K Gauss-Hermite cost nodes mu + sqrt(2)sigma xi
-— everything the Lynceus lookahead needs per speculative state, fused into
-a single VPU-elementwise kernel instead of five jnp passes.
+P(C <= T_max*U) through the cost model, the budget filter (as the z-space
+compare ``(beta - mu)/sigma >= Phi^-1(conf)`` — the same geometry-stable
+form as ``acquisition.budget_ok``, never thresholding an erf output), and
+the K Gauss-Hermite cost nodes mu + sqrt(2)sigma xi — everything the
+Lynceus lookahead needs per speculative state, fused into a single
+VPU-elementwise kernel instead of five jnp passes.
 """
 
 from __future__ import annotations
@@ -17,6 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.acquisition import normal_quantile
 
 __all__ = ["gh_ei_call"]
 
@@ -43,7 +47,7 @@ def _kernel(scal_ref, mu_ref, sig_ref, u_ref, xi_ref, eic_ref, ok_ref,
     ei = jnp.maximum((y_star - mu) * _Phi(z) + sig * _phi(z), 0.0)
     p_time = _Phi((t_max * u_ref[...] - mu) / sig)
     eic_ref[...] = ei * p_time
-    ok_ref[...] = (_Phi((beta - mu) / sig) >= conf)
+    ok_ref[...] = ((beta - mu) / sig >= np.float32(normal_quantile(conf)))
     for i in range(k_gh):                                # static unroll
         nodes_ref[i, :] = mu + np.sqrt(2.0).astype(np.float32) * sig * xi_ref[i]
 

@@ -26,6 +26,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.compat import cost_analysis_dict
 from repro.configs import ARCHS, get_config
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh, mesh_devices
@@ -173,7 +174,7 @@ def analyze(compiled, cfg, meta) -> dict:
                 out[f] = int(v)
     except Exception as e:                            # pragma: no cover
         out["memory_analysis_error"] = str(e)
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     bytes_acc = float(ca.get("bytes accessed", 0.0))
     out["hlo_flops_per_device"] = flops
@@ -206,7 +207,7 @@ def _clone_stats(arch, shape, multi_pod, flags_over, rules_over, units):
     fo = dict(flags_over, analysis_unroll=True)
     compiled, _, meta = lower_cell(arch, shape, multi_pod, fo, rules_over,
                                    cfg=clone)
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     stats = rl.parse_collectives(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import tree_leaves_with_path
+
 __all__ = ["ParamSpec", "spec", "init_params", "abstract_params",
            "logical_axes", "count_params"]
 
@@ -54,7 +56,7 @@ def _fan_in(s: ParamSpec) -> int:
 def init_params(specs, key: jax.Array, dtype=jnp.float32):
     """Materialize parameters; each leaf gets a path-derived key."""
     leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
-    paths = jax.tree.leaves_with_path(specs, is_leaf=_is_spec)
+    paths = tree_leaves_with_path(specs, is_leaf=_is_spec)
 
     arrays = []
     for (path, s), _ in zip(paths, leaves):

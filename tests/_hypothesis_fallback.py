@@ -1,0 +1,68 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+CI has no network, so the property-test modules must not hard-depend on
+hypothesis.  This shim implements the tiny subset the suite uses —
+``@settings`` (ignored), ``@given`` with keyword strategies, and
+``st.floats / st.integers / st.sampled_from`` — by turning each ``@given``
+into a plain ``pytest.mark.parametrize`` over a fixed grid of examples
+drawn from each strategy (bounds plus interior points).  Coverage is
+narrower than real hypothesis, but the properties still execute.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+class st:
+    """Mirror of ``hypothesis.strategies`` for the subset the tests use."""
+
+    @staticmethod
+    def floats(min_value, max_value):
+        span = float(max_value) - float(min_value)
+        return _Strategy([float(min_value) + span * f
+                          for f in (0.0, 0.23, 0.5, 0.81, 1.0)])
+
+    @staticmethod
+    def integers(min_value, max_value):
+        lo, hi = int(min_value), int(max_value)
+        mid = (lo + hi) // 2
+        return _Strategy(sorted({lo, min(lo + 1, hi), mid,
+                                 max(hi - 1, lo), hi}))
+
+    @staticmethod
+    def sampled_from(elements):
+        return _Strategy(elements)
+
+
+def settings(**_kwargs):
+    """No-op replacement for ``hypothesis.settings``."""
+    return lambda fn: fn
+
+
+def given(**strategies):
+    """Parametrize over a cycled grid of each strategy's examples.
+
+    Each parameter's cycle is rotated by its position so same-shaped
+    strategies are decorrelated — e.g. two floats(-5, 5) arguments must not
+    walk the grid in lockstep, or every example would sit on the degenerate
+    mu == y_star diagonal and off-diagonal regressions would pass untested.
+    """
+    names = list(strategies)
+    n_examples = max(len(s.examples) for s in strategies.values())
+    if len(names) > 1:
+        n_examples += len(names) - 1        # let the rotations play out
+    rows = [tuple(strategies[n].examples[(i + p) % len(strategies[n].examples)]
+                  for p, n in enumerate(names)) for i in range(n_examples)]
+    if len(names) == 1:
+        rows = [r[0] for r in rows]
+
+    def deco(fn):
+        return pytest.mark.parametrize(",".join(names), rows)(fn)
+
+    return deco

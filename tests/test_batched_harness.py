@@ -1,0 +1,93 @@
+"""run_many_batched vs the sequential oracle: bit-exact outcome parity.
+
+The batched harness must reproduce the sequential ``optimize`` loop exactly:
+same seed + same bootstrap => identical exploration order, recommendation,
+CNO, NEX and spend, for every policy.  These tests pin that contract on the
+synthetic job (audited clean across thousands of runs; see
+``run_many_batched``'s docstring for the full determinism story).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Settings, run_many, run_many_batched
+from repro.core.optimizer import _per_run_bootstraps, _per_run_seeds
+from repro.jobs import synthetic_job
+
+POLICIES = [
+    ("bo", 0, "exact"),
+    ("la0", 0, "exact"),
+    ("lynceus", 1, "frozen"),
+    ("lynceus", 2, "frozen"),
+    ("lynceus", 2, "exact"),
+]
+
+
+def _assert_outcomes_equal(seq, bat):
+    assert len(seq) == len(bat)
+    for i, (a, b) in enumerate(zip(seq, bat)):
+        assert a.explored == b.explored, f"run {i}: exploration order differs"
+        assert a.recommended == b.recommended, f"run {i}"
+        assert a.cno == b.cno, f"run {i}"
+        assert a.nex == b.nex, f"run {i}"
+        assert a.spent == b.spent, f"run {i}"
+        assert a.budget == b.budget, f"run {i}"
+        assert a.trajectory == b.trajectory, f"run {i}"
+        assert a.found_optimum == b.found_optimum, f"run {i}"
+
+
+@pytest.mark.parametrize("policy,la,refit", POLICIES)
+def test_batched_matches_sequential_bit_exact(policy, la, refit):
+    job = synthetic_job(3)
+    s = Settings(policy=policy, la=la, k_gh=2, refit=refit)
+    seq = run_many(job, s, n_runs=6, budget_b=3.0, seed=11)
+    bat = run_many_batched(job, s, n_runs=6, budget_b=3.0, seed=11)
+    _assert_outcomes_equal(seq, bat)
+
+
+def test_lane_chunking_does_not_change_outcomes():
+    """Chunked episodes (different compiled batch widths) agree with the
+    oracle — the decision pipeline is geometry-hardened."""
+    job = synthetic_job(0)
+    s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
+    seq = run_many(job, s, n_runs=7, budget_b=3.0, seed=4)
+    for chunk in (1, 3, 7):
+        bat = run_many_batched(job, s, n_runs=7, budget_b=3.0, seed=4,
+                               lane_chunk=chunk)
+        _assert_outcomes_equal(seq, bat)
+
+
+def test_explicit_seeds_and_bootstraps_respected():
+    """The benchmark harness passes its own per-run seeds/bootstraps; both
+    paths must honor them (paper fairness: shared i-th bootstrap)."""
+    job = synthetic_job(1)
+    s = Settings(policy="la0", la=0, k_gh=2)
+    seeds = [7777 + r for r in range(5)]
+    boots = _per_run_bootstraps(job, seeds)
+    seq = run_many(job, s, seeds=seeds, bootstraps=boots)
+    bat = run_many_batched(job, s, seeds=seeds, bootstraps=boots)
+    _assert_outcomes_equal(seq, bat)
+    for o, boot in zip(bat, boots):
+        assert o.explored[:len(boot)] == tuple(int(i) for i in boot)
+
+
+def test_rnd_falls_through_to_sequential():
+    job = synthetic_job(2)
+    s = Settings(policy="rnd")
+    seq = run_many(job, s, n_runs=4, seed=9)
+    bat = run_many_batched(job, s, n_runs=4, seed=9)
+    _assert_outcomes_equal(seq, bat)
+
+
+def test_seed_derivation_matches_run_many():
+    assert _per_run_seeds(5, 3) == [5 * 100003, 5 * 100003 + 1,
+                                    5 * 100003 + 2]
+
+
+def test_device_view_cached_and_f32():
+    job = synthetic_job(0)
+    dev = job.device_view()
+    assert dev is job.device_view()              # moved to device once
+    assert dev.cost.dtype.name == "float32"
+    np.testing.assert_allclose(np.asarray(dev.cost),
+                               job.cost.astype(np.float32))

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # no-network CI: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import Settings, optimize
 from repro.core.metrics import cno_stats, nex_stats

@@ -113,8 +113,9 @@ def test_error_feedback_carries_residual():
 def test_compressed_psum_single_axis():
     mesh = jax.make_mesh((1,), ("d",))
     x = jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)
-    y = jax.shard_map(lambda a: compressed_psum(a, "d"), mesh=mesh,
-                      in_specs=P(), out_specs=P())(x)
+    from repro.compat import shard_map
+    y = shard_map(lambda a: compressed_psum(a, "d"), mesh=mesh,
+                  in_specs=P(), out_specs=P())(x)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=2e-2,
                                atol=2e-2)
 
