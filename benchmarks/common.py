@@ -33,29 +33,36 @@ def datasets():
             "cherrypick": cherrypick_jobs(0)}
 
 
-def _key(ds, job, policy, la, b, n_runs, refit, backend):
+def _key(ds, job, policy, la, b, n_runs, refit, backend, timeout):
     # backend is part of the key: a --sequential audit must never be served
     # results the batched harness cached (they agree on audited configs, but
-    # serving one for the other would make the audit vacuous).
-    return f"{ds}__{job}__{policy}{la}__b{b}__r{n_runs}__{refit}__{backend}"
+    # serving one for the other would make the audit vacuous).  Ditto the
+    # timeout flag: fig_timeout's on/off comparison must never alias.  The
+    # v2 schema token shields readers of the newer outcome fields
+    # (spend_trajectory, n_censored) from pre-timeout-era cache files.
+    to = "__to" if timeout else ""
+    return (f"{ds}__{job}__{policy}{la}__b{b}__r{n_runs}__{refit}"
+            f"__{backend}{to}__v2")
 
 
 def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
-               refit="frozen", seed0=0, quiet=False, backend=None):
+               refit="frozen", seed0=0, quiet=False, backend=None,
+               timeout=False):
     """Cached multi-run optimization; identical i-th bootstraps per policy.
 
     The per-run seeds (7777 + r) and the bootstraps derived from them are
     shared across every policy on a job — the paper's fairness protocol.
     ``backend`` picks the harness: "batched" (default, device-resident
-    lockstep lanes) or "sequential" (the Python-loop oracle).
+    lockstep lanes) or "sequential" (the Python-loop oracle).  ``timeout``
+    enables timeout-censored exploration (paper §3, mechanism i).
     """
     backend = backend or DEFAULT_BACKEND
     CACHE.mkdir(parents=True, exist_ok=True)
     f = CACHE / (_key(ds_name, job.name, policy, la, b, n_runs, refit,
-                      backend) + ".json")
+                      backend, timeout) + ".json")
     if f.exists():
         return json.loads(f.read_text())
-    s = Settings(policy=policy, la=la, k_gh=3, refit=refit)
+    s = Settings(policy=policy, la=la, k_gh=3, refit=refit, timeout=timeout)
     seeds = [7777 + r for r in range(n_runs)]        # shared across policies
     runner = run_many if backend == "sequential" else run_many_batched
     outcomes = runner(job, s, budget_b=b, seeds=seeds)
@@ -64,7 +71,9 @@ def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
         outs.append({"cno": o.cno, "nex": o.nex, "spent": o.spent,
                      "found": o.found_optimum,
                      "select_s": o.select_seconds,
-                     "trajectory": list(o.trajectory)})
+                     "n_censored": len(o.censored),
+                     "trajectory": list(o.trajectory),
+                     "spend_trajectory": list(o.spend_trajectory)})
         if not quiet:
             print(f"    {ds_name}/{job.name} {policy}{la} b={b} "
                   f"run {r + 1}/{n_runs} cno={o.cno:.3f}", flush=True)

@@ -16,7 +16,8 @@ import time
 from benchmarks import (batched_vs_sequential, common, fig1a_landscape,
                         fig1b_disjoint, fig4_cno_tf, fig5_cno_scout_cp,
                         fig6_la_ablation, fig7_cno_vs_nex, fig8_budget,
-                        fig9_nex, table3_latency, roofline, kernels_bench)
+                        fig9_nex, fig_timeout, table3_latency, roofline,
+                        kernels_bench)
 
 SECTIONS = {
     "fig1a": fig1a_landscape.main,
@@ -27,6 +28,7 @@ SECTIONS = {
     "fig7": fig7_cno_vs_nex.main,
     "fig8": fig8_budget.main,
     "fig9": fig9_nex.main,
+    "fig_timeout": fig_timeout.main,
     "table3": table3_latency.main,
     "batched": batched_vs_sequential.main,
     "roofline": roofline.main,

@@ -1,11 +1,18 @@
 #!/usr/bin/env bash
 # CI gate: tier-1 test suite + batched-harness smoke on the synthetic job.
 # Exits nonzero on any test failure, any sequential/batched outcome
-# divergence, or a missing speedup.
+# divergence (timeouts off OR on), or a missing speedup.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m pytest -q
+
+# The property suites must also pass on the no-hypothesis fallback path
+# (tests/_hypothesis_fallback.py) — network-less CI boxes have no
+# hypothesis, and both code paths have to stay green.
+REPRO_NO_HYPOTHESIS=1 python -m pytest -q \
+    tests/test_censored_properties.py tests/test_xla_wobble_regression.py \
+    tests/test_core_acquisition.py
 
 PYTHONPATH=src python - <<'PY'
 import sys
@@ -16,16 +23,27 @@ from repro.jobs import synthetic_job
 
 job = synthetic_job(0)
 failures = 0
-for policy, la, refit in [("bo", 0, "exact"), ("la0", 0, "exact"),
-                          ("lynceus", 2, "frozen")]:
-    s = Settings(policy=policy, la=la, k_gh=3, refit=refit)
-    seq = run_many(job, s, n_runs=25, seed=13)
-    bat = run_many_batched(job, s, n_runs=25, seed=13)
-    bad = sum(a.explored != b.explored or a.spent != b.spent
-              or a.cno != b.cno or a.trajectory != b.trajectory
-              for a, b in zip(seq, bat))
-    print(f"ci-smoke {policy}{la}/{refit}: {bad}/25 mismatching runs")
-    failures += bad
+for timeout in (False, True):
+    for policy, la, refit in [("bo", 0, "exact"), ("la0", 0, "exact"),
+                              ("lynceus", 2, "frozen")]:
+        s = Settings(policy=policy, la=la, k_gh=3, refit=refit,
+                     timeout=timeout)
+        seq = run_many(job, s, n_runs=25, seed=13)
+        bat = run_many_batched(job, s, n_runs=25, seed=13)
+        bad = sum(a.explored != b.explored or a.spent != b.spent
+                  or a.cno != b.cno or a.trajectory != b.trajectory
+                  or a.censored != b.censored
+                  or a.spend_trajectory != b.spend_trajectory
+                  for a, b in zip(seq, bat))
+        tag = "timeout" if timeout else "full-cost"
+        print(f"ci-smoke {policy}{la}/{refit}/{tag}: "
+              f"{bad}/25 mismatching runs")
+        failures += bad
+        if timeout and policy == "lynceus":
+            ncens = sum(len(o.censored) for o in seq)
+            print(f"ci-smoke censoring exercised: {ncens} aborted probes")
+            if ncens == 0:
+                failures += 1
 
 s = Settings(policy="la0", la=0, k_gh=3)
 run_many(job, s, n_runs=1, seed=999)            # warm compile caches

@@ -29,7 +29,7 @@ from jax.scipy.stats import norm
 __all__ = [
     "expected_improvement", "prob_leq", "constraint_prob", "ei_constrained",
     "incumbent", "budget_ok", "normal_quantile", "quantize_scores",
-    "gauss_hermite", "gh_cost_nodes",
+    "gauss_hermite", "gh_cost_nodes", "censored_adjust", "timeout_cap",
 ]
 
 _SIG_EPS = 1e-12
@@ -141,3 +141,65 @@ def gauss_hermite(k: int) -> tuple[np.ndarray, np.ndarray]:
 def gh_cost_nodes(mu, sigma, xi) -> jax.Array:
     """Speculated cost values ``mu + sqrt(2)·sigma·xi_i``; broadcasts over xi."""
     return mu[..., None] + np.sqrt(2.0) * sigma[..., None] * xi
+
+
+# --------------------------------------------------------------------------- #
+# Timeout-censored exploration (paper §3, mechanism i)
+# --------------------------------------------------------------------------- #
+def censored_adjust(mu, sigma, y, cens, rel) -> tuple[jax.Array, jax.Array]:
+    """Posterior correction at censored (timed-out) observations.
+
+    A censored run's recorded ``y`` is the cost billed up to the abort — a
+    *lower bound* on the true cost.  The tree fit consumes it as a regular
+    weighted target (so the bound still shapes split structure); afterwards
+    the posterior at the censored config itself is corrected: the mean is
+    clamped to ``>= y`` (the model must never predict a censored config
+    cheaper than what was already billed before the abort) and sigma is
+    floored at ``rel·y`` (only a bound is known there, not a value).
+
+    Bitwise no-op wherever ``cens`` is False: ``jnp.where`` with a false
+    predicate passes the original lane through unchanged, which is what lets
+    fully-observed inputs reproduce the uncensored fits exactly.
+    """
+    c = cens.astype(bool)
+    mu_adj = jnp.where(c, jnp.maximum(mu, y), mu)
+    sigma_adj = jnp.where(c, jnp.maximum(sigma, rel * jnp.abs(y)), sigma)
+    return mu_adj, sigma_adj
+
+
+def timeout_cap(best_feas, sigma_sel, u_sel, beta, t_max, kappa, tmax_mult
+                ) -> jax.Array:
+    """Per-exploration predictive timeout τ, in runtime units (paper §3).
+
+    Three caps compose:
+
+    * constraint cap ``tmax_mult·t_max`` — running past (a multiple of) the
+      SLO proves infeasibility, so never pay beyond it;
+    * budget cap ``beta/U`` — abort when the accrued spend reaches the
+      remaining budget, so a timeout-enabled optimization never bills past
+      B (the uncapped loop overshoots by up to one run's cost whenever the
+      Gamma filter's confidence tail misjudges the pick);
+    * predictive cap ``(y* + kappa·sigma)/U`` — once a feasible incumbent
+      ``y*`` exists, a run whose accrued cost passes the incumbent plus
+      ``kappa`` posterior deviations of slack cannot improve the
+      recommendation and is deemed suboptimal (abort, learn the bound).
+
+    τ is *billed* (the abort writes ``τ·U`` into the budget and the
+    observation state), so unlike the selection scores it must be
+    bit-identical between the R = 1 oracle program and the R = chunk
+    episode program — a one-ulp wobble is not a tie to break but a spend
+    divergence.  Every input except sigma is exact float32 table/state
+    arithmetic already; sigma is matmul-derived and wobbles with XLA's
+    per-program fusion choices, so it enters through an aggressively coarse
+    :func:`quantize_scores` grid (4 mantissa bits, ~6% relative).  A
+    timeout's slack needs the posterior's *scale*, not its precision, and
+    the coarse grid sits ~3 orders of magnitude above the observed
+    cross-program wobble.  Everything downstream of the rounding is plain
+    IEEE arithmetic on deterministic values.
+    """
+    cap = jnp.minimum(jnp.float32(t_max) * jnp.float32(tmax_mult),
+                      jnp.maximum(beta, 0.0) / jnp.maximum(u_sel, _SIG_EPS))
+    sig_q = quantize_scores(sigma_sel, bits=4)
+    pred = (best_feas + jnp.float32(kappa) * sig_q) / jnp.maximum(
+        u_sel, _SIG_EPS)
+    return jnp.where(jnp.isfinite(best_feas), jnp.minimum(cap, pred), cap)

@@ -116,11 +116,20 @@ def cartesian_gh(mus: Sequence[float], sigmas: Sequence[float], k: int,
 
 def optimize_multi_constraint(cjob: ConstrainedJob, *, budget_b: float = 3.0,
                               seed: int = 0, n_trees: int = 10,
-                              depth: int = 4) -> dict:
+                              depth: int = 4, settings=None) -> dict:
     """Greedy EI_c/E[cost] loop with the product-of-probabilities acquisition.
 
     The cost model speculates as usual; constraint forests are refit each
     step.  Returns the recommendation and its joint-constraint CNO.
+
+    ``settings`` (a :class:`repro.core.lookahead.Settings`) opts this loop
+    into the same timeout-censored exploration as the core optimizer: runs
+    are aborted at ``min(timeout_tmax_mult·t_max, (y* + kappa·sigma)/U)``,
+    billed up to the cap, recorded as censored lower bounds (posterior
+    clamped via ``acq.censored_adjust``), and excluded from incumbent and
+    recommendation.  A censored run also reveals none of its constraint
+    metrics.  When given, ``settings.n_trees``/``settings.depth`` override
+    the keyword defaults.
     """
     job = cjob.job
     rng = np.random.default_rng(seed)
@@ -128,25 +137,36 @@ def optimize_multi_constraint(cjob: ConstrainedJob, *, budget_b: float = 3.0,
     n_boot = job.bootstrap_size()
     boot = latin_hypercube_indices(space, n_boot, rng)
     cost = job.cost
+    timeout = settings is not None and settings.timeout
+    if settings is not None:
+        n_trees, depth = settings.n_trees, settings.depth
 
     m = space.n_points
     y = np.zeros(m, np.float32)
     mask = np.zeros(m, bool)
+    cens = np.zeros(m, bool)
     metric_obs = {k: np.zeros(m, np.float32) for k in cjob.metrics}
     beta = job.budget(budget_b)
     explored: list[int] = []
+    tau_boot = (job.t_max * settings.timeout_tmax_mult if timeout
+                else np.inf)
 
-    def run(i: int):
+    def run(i: int, tau=np.inf):
         nonlocal beta
-        y[i] = cost[i]
-        for k in metric_obs:
-            metric_obs[k][i] = cjob.metrics[k][i]
+        cut = timeout and job.runtime[i] > tau
+        billed = float(tau * job.unit_price[i]) if cut else cost[i]
+        y[i] = billed
+        cens[i] = bool(cut)
+        if not cut:
+            # an aborted run never reported its constraint metrics
+            for k in metric_obs:
+                metric_obs[k][i] = cjob.metrics[k][i]
         mask[i] = True
         explored.append(i)
-        beta -= cost[i]
+        beta -= billed
 
     for i in boot:
-        run(int(i))
+        run(int(i), tau_boot)
 
     points = jnp.asarray(space.points)
     left = trees.make_left_table(space.points, space.thresholds)
@@ -160,14 +180,20 @@ def optimize_multi_constraint(cjob: ConstrainedJob, *, budget_b: float = 3.0,
         mu, sigma = trees.fit_predict_mu_sigma(
             k_cost, jnp.asarray(y), jnp.asarray(mask), points, left, thr,
             jnp.float32(floor), n_trees=n_trees, depth=depth)
-        # time constraint through the cost model + extra metric constraints
+        if timeout:
+            mu, sigma = acq.censored_adjust(mu, sigma, jnp.asarray(y),
+                                            jnp.asarray(cens),
+                                            settings.cens_sigma_rel)
+        # time constraint through the cost model + extra metric constraints;
+        # censored runs never reported their metrics, so the metric forests
+        # see only the completed observations.
         p_time = acq.constraint_prob(mu, sigma, jnp.asarray(job.unit_price,
                                      jnp.float32), job.t_max)
         p_rest = multi_constraint_probs(
-            k_con, [metric_obs[k] for k in names], mask,
+            k_con, [metric_obs[k] for k in names], mask & ~cens,
             [cjob.thresholds[k] for k in names], space,
             n_trees=n_trees, depth=depth)
-        feas_obs = mask & (job.runtime <= job.t_max)
+        feas_obs = mask & ~cens & (job.runtime <= job.t_max)
         for k in names:
             feas_obs &= ~mask | (cjob.metrics[k] <= cjob.thresholds[k])
         best = float(np.min(np.where(feas_obs & mask, cost, np.inf)))
@@ -183,13 +209,24 @@ def optimize_multi_constraint(cjob: ConstrainedJob, *, budget_b: float = 3.0,
         nxt = int(score.argmax())
         if cost[nxt] > beta:
             break
-        run(nxt)
+        tau = np.inf
+        if timeout:
+            tau = float(acq.timeout_cap(
+                jnp.float32(best), sigma[nxt],
+                jnp.float32(job.unit_price[nxt]), jnp.float32(beta),
+                job.t_max, settings.timeout_kappa,
+                settings.timeout_tmax_mult))
+        run(nxt, tau)
 
     arr = np.array(explored)
-    feas = cjob.feasible[arr]
-    sub = arr[feas] if feas.any() else arr
+    feas = cjob.feasible[arr] & ~cens[arr]
+    if feas.any():
+        sub = arr[feas]
+    else:
+        sub = arr[~cens[arr]] if (~cens[arr]).any() else arr
     rec = int(sub[cost[sub].argmin()])
     return {"recommended": rec, "cno": cjob.cno(rec), "nex": len(explored),
+            "censored": [int(i) for i in arr[cens[arr]]],
             "explored": explored}
 
 

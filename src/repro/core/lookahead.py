@@ -55,6 +55,17 @@ class Settings:
     conf: float = 0.99           # budget-filter confidence (Alg. 1 line 23)
     refit: str = "exact"         # exact | frozen
     sigma_floor_rel: float = 0.01
+    # Timeout-censored exploration (paper §3, mechanism i).  Off by default:
+    # with timeout=False the selector traces the exact same program as before
+    # the mechanism existed (no censor mask is threaded anywhere).
+    timeout: bool = False        # abort deemed-suboptimal runs, learn the bound
+    timeout_kappa: float = 1.0   # posterior slack in the predictive cap
+    # Constraint cap: τ <= mult·t_max.  3x keeps enough full observations on
+    # small spaces for the model to stay sharp (1x censors half the
+    # bootstrap on median-t_max tables and costs more CNO than it saves);
+    # the predictive cap still aborts incumbent-dominated runs much earlier.
+    timeout_tmax_mult: float = 3.0
+    cens_sigma_rel: float = 0.5  # posterior sigma floor at censored configs
 
 
 # --------------------------------------------------------------------------- #
@@ -68,17 +79,25 @@ def _sigma_floor(y, obs_mask, rel):
     return 1e-6 + rel * jnp.sqrt(jnp.maximum(var, 0.0))
 
 
-def _fit_root(key, y, obs_mask, points, left, thresholds, floor, s: Settings):
+def _fit_root(key, y, obs_mask, cens, points, left, thresholds, floor,
+              s: Settings):
+    """Root ensemble fit.  Censored points (``cens`` not None) enter the fit
+    as regular observations at their billed lower bound — they shape split
+    structure — and the resulting posterior is corrected at those configs
+    (mean clamped to the bound, sigma inflated; see acq.censored_adjust)."""
     params, assign = trees.fit_forest(
         key, y, obs_mask, points, left, thresholds,
         n_trees=s.n_trees, depth=s.depth)
     preds = jnp.take_along_axis(params.leaf, assign, axis=1)   # [B, M]
     mu, sigma = trees.forest_mu_sigma(preds, floor)
+    if cens is not None:
+        mu, sigma = acq.censored_adjust(mu, sigma, y, cens, s.cens_sigma_rel)
     return params, assign, preds, mu, sigma
 
 
-def _fit_batch_exact(key, y_b, m_b, points, left, thresholds, floor, s: Settings):
-    """y_b, m_b: [S, M] -> mu, sigma: [S, M]."""
+def _fit_batch_exact(key, y_b, m_b, cens_b, points, left, thresholds, floor,
+                     s: Settings):
+    """y_b, m_b[, cens_b]: [S, M] -> mu, sigma: [S, M]."""
     keys = jax.random.split(key, y_b.shape[0])
 
     def one(k, y, m):
@@ -87,7 +106,11 @@ def _fit_batch_exact(key, y_b, m_b, points, left, thresholds, floor, s: Settings
         preds = jnp.take_along_axis(p.leaf, a, axis=1)
         return trees.forest_mu_sigma(preds, floor)
 
-    return jax.vmap(one)(keys, y_b, m_b)
+    mu, sigma = jax.vmap(one)(keys, y_b, m_b)
+    if cens_b is not None:
+        mu, sigma = acq.censored_adjust(mu, sigma, y_b, cens_b,
+                                        s.cens_sigma_rel)
+    return mu, sigma
 
 
 def _fit_batch_frozen(root_assign, root_preds, boot_w, sel_b, c_b, floor):
@@ -130,17 +153,23 @@ def _ystar(best_feas, y_b, m_b, sigma):
 # The selector
 # --------------------------------------------------------------------------- #
 def _recurse(key, y_b, m_b, beta_b, bf_b, depth_left, *, points, left,
-             thresholds, u, t_max, floor, s: Settings, frozen_ctx):
+             thresholds, u, t_max, floor, s: Settings, frozen_ctx,
+             cens_b=None):
     """Score each state's own argmax-EI_c pick; branch if depth_left > 0.
 
     Returns (reward [S], cost [S]) — already zeroed for states whose Gamma is
-    empty (Alg. 2 "continue").
+    empty (Alg. 2 "continue").  ``cens_b`` ([S, M] or None) marks the
+    parent's censored observations; speculation only ever adds fully-observed
+    points, so the mask is constant down the path.
     """
     k_fit, k_next = jax.random.split(key)
     if s.refit == "frozen" and frozen_ctx is not None:
         mu, sigma = _fit_batch_frozen(*frozen_ctx, floor)
+        if cens_b is not None:
+            mu, sigma = acq.censored_adjust(mu, sigma, y_b, cens_b,
+                                            s.cens_sigma_rel)
     else:
-        mu, sigma = _fit_batch_exact(k_fit, y_b, m_b, points, left,
+        mu, sigma = _fit_batch_exact(k_fit, y_b, m_b, cens_b, points, left,
                                      thresholds, floor, s)
     ystar = _ystar(bf_b, y_b, m_b, sigma)
     eic = acq.ei_constrained(mu, sigma, ystar[:, None], u[None, :], t_max)
@@ -175,11 +204,15 @@ def _recurse(key, y_b, m_b, beta_b, bf_b, depth_left, *, points, left,
         child_frozen = (ra, rp, bw,
                         flat(jnp.broadcast_to(sel[:, None], (s_dim, s.k_gh))),
                         flat(c_nodes))
+    cens_child = None
+    if cens_b is not None:
+        cens_child = flat(jnp.broadcast_to(cens_b[:, None, :],
+                                           (s_dim, s.k_gh, m_dim)))
     r_ch, c_ch = _recurse(
         k_next, flat(y_child), flat(m_child), flat(beta_child),
         flat(bf_child), depth_left - 1, points=points, left=left,
         thresholds=thresholds, u=u, t_max=t_max, floor=floor, s=s,
-        frozen_ctx=child_frozen)
+        frozen_ctx=child_frozen, cens_b=cens_child)
     r_ch = r_ch.reshape(s_dim, s.k_gh)
     c_ch = c_ch.reshape(s_dim, s.k_gh)
     w = jnp.asarray(w)
@@ -189,20 +222,29 @@ def _recurse(key, y_b, m_b, beta_b, bf_b, depth_left, *, points, left,
 
 
 def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
-                      t_max, s: Settings):
+                      t_max, s: Settings, cens=None):
     """One NextConfig step. Returns (index, valid, diagnostics).
 
     y: [M] observed costs (value irrelevant where unobserved);
-    obs_mask: [M]; beta: scalar remaining budget; u: [M] unit prices.
+    obs_mask: [M]; beta: scalar remaining budget; u: [M] unit prices;
+    cens: [M] censoring mask (only when ``s.timeout``) — observations whose
+    y is a billed lower bound from an aborted run, not a completed cost.
+
+    With ``s.timeout`` the diagnostics carry ``"timeout"``: the predictive
+    cap τ (runtime units) the driver must abort the selected exploration at.
     """
     m_dim = y.shape[0]
     floor = _sigma_floor(y, obs_mask, s.sigma_floor_rel)
     k_root, k_path = jax.random.split(key)
     params, assign, preds, mu0, sig0 = _fit_root(
-        k_root, y, obs_mask, points, left, thresholds, floor, s)
+        k_root, y, obs_mask, cens, points, left, thresholds, floor, s)
 
     obs = obs_mask.astype(bool)
     feas_obs = obs & (y <= t_max * u)
+    if cens is not None:
+        # An aborted run never revealed its runtime: it cannot be the
+        # feasible incumbent (its billed y is only a lower bound).
+        feas_obs = feas_obs & ~cens.astype(bool)
     best_feas = jnp.min(jnp.where(feas_obs, y, jnp.inf))
     ystar0 = _ystar(best_feas, y, obs_mask, sig0)
     eic0 = acq.ei_constrained(mu0, sig0, ystar0, u, t_max)
@@ -210,18 +252,25 @@ def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
     gamma0 = untested & acq.budget_ok(mu0, sig0, beta, s.conf)
     diagnostics = {"mu": mu0, "sigma": sig0, "ei_c": eic0, "y_star": ystar0}
 
+    def finish(sel, valid):
+        if s.timeout:
+            diagnostics["timeout"] = acq.timeout_cap(
+                best_feas, sig0[sel], u[sel], beta, t_max, s.timeout_kappa,
+                s.timeout_tmax_mult)
+        return sel, valid, diagnostics
+
     if s.policy == "bo":
         # CherryPick-style greedy, cost-unaware: argmax EI_c over untested.
         # All selection argmaxes run on quantized scores (see
         # acq.quantize_scores): near-ties must break identically whether the
         # selector is compiled for 1 run or a whole batched chunk.
         score = acq.quantize_scores(jnp.where(untested, eic0, -jnp.inf))
-        return jnp.argmax(score), jnp.any(untested), diagnostics
+        return finish(jnp.argmax(score), jnp.any(untested))
     if s.policy == "la0" or (s.policy == "lynceus" and s.la == 0):
         # Cost-normalized greedy (paper's LA = 0 variant).
         score = acq.quantize_scores(
             jnp.where(gamma0, eic0 / jnp.maximum(mu0, _EPS), -jnp.inf))
-        return jnp.argmax(score), jnp.any(gamma0), diagnostics
+        return finish(jnp.argmax(score), jnp.any(gamma0))
     if s.policy != "lynceus":
         raise ValueError(f"unknown policy {s.policy!r}")
 
@@ -245,10 +294,14 @@ def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
                       flat(jnp.broadcast_to(jnp.arange(m_dim)[:, None],
                                             (m_dim, s.k_gh))),
                       flat(c_nodes))
+    cens1 = None
+    if cens is not None:
+        cens1 = flat(jnp.broadcast_to(cens.astype(bool)[None, None, :],
+                                      (m_dim, s.k_gh, m_dim)))
     r1, c1 = _recurse(
         k_path, flat(y1), flat(m1), flat(beta1), flat(bf1), s.la - 1,
         points=points, left=left, thresholds=thresholds, u=u, t_max=t_max,
-        floor=floor, s=s, frozen_ctx=frozen_ctx)
+        floor=floor, s=s, frozen_ctx=frozen_ctx, cens_b=cens1)
     w = jnp.asarray(w)
     reward = reward + s.gamma * (r1.reshape(m_dim, s.k_gh) @ w)
     cost = cost + (c1.reshape(m_dim, s.k_gh) @ w)
@@ -256,7 +309,7 @@ def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
         jnp.where(gamma0, reward / jnp.maximum(cost, _EPS), -jnp.inf))
     diagnostics["reward"] = reward
     diagnostics["path_cost"] = cost
-    return jnp.argmax(score), jnp.any(gamma0), diagnostics
+    return finish(jnp.argmax(score), jnp.any(gamma0))
 
 
 select_next = jax.jit(_select_next_impl, static_argnames=("s",))
@@ -264,21 +317,29 @@ select_next = jax.jit(_select_next_impl, static_argnames=("s",))
 
 @functools.partial(jax.jit, static_argnames=("s",))
 def select_next_batched(keys, y, obs_mask, beta, points, left, thresholds, u,
-                        t_max, s: Settings):
+                        t_max, s: Settings, cens=None):
     """NextConfig for R independent runs at once (the batched-harness entry).
 
-    keys: [R, 2] PRNG keys; y: [R, M]; obs_mask: [R, M]; beta: [R].
+    keys: [R, 2] PRNG keys; y: [R, M]; obs_mask: [R, M]; beta: [R];
+    cens: [R, M] censoring mask or None (required iff ``s.timeout``).
     Returns ([R] indices, [R] valid flags, batched diagnostics).  Per-lane
     results are bitwise independent of R (each lane is the same elementwise/
     per-slice program), which is what lets the sequential oracle run as the
     R = 1 special case of this very kernel.
     """
 
-    def one(k, y_r, m_r, b_r):
-        return _select_next_impl(k, y_r, m_r, b_r, points, left, thresholds,
-                                 u, t_max, s)
+    if cens is None:
+        def one(k, y_r, m_r, b_r):
+            return _select_next_impl(k, y_r, m_r, b_r, points, left,
+                                     thresholds, u, t_max, s)
 
-    return jax.vmap(one)(keys, y, obs_mask, beta)
+        return jax.vmap(one)(keys, y, obs_mask, beta)
+
+    def one(k, y_r, m_r, b_r, c_r):
+        return _select_next_impl(k, y_r, m_r, b_r, points, left, thresholds,
+                                 u, t_max, s, c_r)
+
+    return jax.vmap(one)(keys, y, obs_mask, beta, cens)
 
 
 def space_arrays(space, unit_price: np.ndarray):
@@ -296,11 +357,12 @@ def make_batch_selector(space, unit_price: np.ndarray, t_max: float,
     over [R, ...] lane-stacked state."""
     points, left, thresholds, u = space_arrays(space, unit_price)
 
-    def run(keys, y, obs_mask, beta):
+    def run(keys, y, obs_mask, beta, cens=None):
         return select_next_batched(
             jnp.asarray(keys), jnp.asarray(y, jnp.float32),
             jnp.asarray(obs_mask), jnp.asarray(beta, jnp.float32),
-            points, left, thresholds, u, jnp.float32(t_max), s)
+            points, left, thresholds, u, jnp.float32(t_max), s,
+            None if cens is None else jnp.asarray(cens))
 
     return run
 
@@ -317,11 +379,12 @@ def make_selector(space, unit_price: np.ndarray, t_max: float, s: Settings):
     """
     batch = make_batch_selector(space, unit_price, t_max, s)
 
-    def run(key, y, obs_mask, beta):
+    def run(key, y, obs_mask, beta, cens=None):
         idx, valid, diag = batch(
             jnp.asarray(key)[None], jnp.asarray(y, jnp.float32)[None],
             jnp.asarray(obs_mask)[None],
-            jnp.asarray(beta, jnp.float32)[None])
+            jnp.asarray(beta, jnp.float32)[None],
+            None if cens is None else jnp.asarray(cens)[None])
         return idx[0], valid[0], jax.tree.map(lambda a: a[0], diag)
 
     return run

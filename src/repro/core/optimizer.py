@@ -53,20 +53,48 @@ class Outcome:
     explored: tuple[int, ...]   # exploration order (config indices)
     select_seconds: float       # mean wall-time of next-config selection
     trajectory: tuple[float, ...]  # best feasible CNO after each exploration
+    censored: tuple[int, ...] = ()  # explored configs aborted at the timeout
+    spend_trajectory: tuple[float, ...] = ()  # cumulative billed spend ($)
 
 
-def _recommend(job: JobTable, explored: list[int]) -> int:
-    """Cheapest feasible explored config; cheapest explored if none feasible."""
+def _recommend(job: JobTable, explored: list[int], cens=None) -> int:
+    """Cheapest feasible *completed* explored config (Alg. 1 line 12).
+
+    A censored run never finished, so its runtime — and hence feasibility —
+    was never observed: it is not recommendable.  (This never worsens the
+    recommendation: a predictively censored run's true cost provably exceeds
+    the then-incumbent, which is itself explored and uncensored, and a
+    constraint-cap censored run is infeasible in truth.)  Fallbacks when
+    nothing qualifies keep the historical order: cheapest completed, then —
+    degenerate, every run censored — cheapest explored by table cost.
+    """
     arr = np.array(explored, dtype=int)
     cost = job.cost[arr]
-    feas = job.feasible[arr]
+    c = (np.asarray(cens, dtype=bool) if cens is not None
+         else np.zeros(arr.size, dtype=bool))
+    feas = job.feasible[arr] & ~c
     if feas.any():
         return int(arr[feas][cost[feas].argmin()])
+    if (~c).any():
+        return int(arr[~c][cost[~c].argmin()])
     return int(arr[cost.argmin()])
 
 
-def _trajectory_point(job: JobTable, explored: list[int]) -> float:
-    return job.cno(_recommend(job, explored))
+def _trajectory_point(job: JobTable, explored: list[int], cens=None) -> float:
+    return job.cno(_recommend(job, explored, cens))
+
+
+def _boot_tau(job: JobTable, settings: lookahead.Settings) -> np.float32:
+    """Timeout for model-less runs (bootstrap, RND): the constraint cap only.
+
+    Exactly ``f32(t_max)·f32(mult)`` — the same arithmetic
+    ``acq.timeout_cap`` performs for its constraint branch on device, so a
+    run capped here and a run capped by the selector bill identically.
+    """
+    if not settings.timeout:
+        return np.float32(np.inf)
+    return np.float32(np.float32(job.t_max)
+                      * np.float32(settings.timeout_tmax_mult))
 
 
 def optimize(job: JobTable, settings: lookahead.Settings, *, budget_b: float = 3.0,
@@ -83,6 +111,13 @@ def optimize(job: JobTable, settings: lookahead.Settings, *, budget_b: float = 3
         share the same i-th bootstrap for fairness — pass the same array).
       selector: pre-built ``make_selector`` closure to reuse compiled code
         across runs on the same space.
+
+    With ``settings.timeout`` each exploration runs under a cap τ — the
+    constraint cap for model-less runs (bootstrap, RND), the selector's
+    predictive cap otherwise.  A run whose table runtime exceeds τ is
+    aborted: billed ``τ·U`` instead of its full cost, recorded as a
+    *censored* observation (its billed cost is a lower bound the model
+    keeps learning from — paper §3, mechanism i).
     """
     rng = np.random.default_rng(seed)
     n_boot = job.bootstrap_size()
@@ -90,7 +125,8 @@ def optimize(job: JobTable, settings: lookahead.Settings, *, budget_b: float = 3
     # Budget accounting runs in float32 — the same IEEE arithmetic the
     # device-resident batched harness performs — so the two paths stay
     # bit-identical (the selector only ever sees float32 anyway).
-    cost = job.cost.astype(np.float32)
+    host = job.host_view()
+    cost = host.cost
 
     if bootstrap is None:
         bootstrap = latin_hypercube_indices(job.space, n_boot, rng)
@@ -98,30 +134,41 @@ def optimize(job: JobTable, settings: lookahead.Settings, *, budget_b: float = 3
     m = job.space.n_points
     y = np.zeros(m, dtype=np.float32)
     mask = np.zeros(m, dtype=bool)
+    cens = np.zeros(m, dtype=bool)
+    cens_order: list[bool] = []
     explored: list[int] = []
     beta = np.float32(budget)
     trajectory: list[float] = []
+    spend_traj: list[float] = []
+    tau_boot = _boot_tau(job, settings)
 
-    def run_config(i: int) -> None:
+    def run_config(i: int, tau=np.float32(np.inf)) -> None:
         nonlocal beta
-        y[i] = cost[i]
+        t = host.runtime[i]
+        cut = bool(t > tau)
+        billed = np.float32(tau * host.unit_price[i]) if cut else cost[i]
+        y[i] = billed
         mask[i] = True
+        cens[i] = cut
         explored.append(int(i))
-        beta -= cost[i]
-        trajectory.append(_trajectory_point(job, explored))
+        cens_order.append(cut)
+        beta -= billed
+        trajectory.append(_trajectory_point(job, explored, cens_order))
+        spend_traj.append(float(budget - beta))
 
     for i in bootstrap:                       # Alg. 1 lines 6-8
-        run_config(int(i))
+        run_config(int(i), tau_boot)
 
     select_times: list[float] = []
     if settings.policy == "rnd":
         # Random exploration at parity of budget: keep drawing affordable,
-        # untested configs (true-cost check — RND has no model).
+        # untested configs (true-cost check — RND has no model, so timeouts
+        # only apply the constraint cap to it).
         while True:
             free = np.where(~mask & (cost <= beta))[0]
             if free.size == 0:
                 break
-            run_config(int(rng.choice(free)))
+            run_config(int(rng.choice(free)), tau_boot)
     else:
         sel = selector or lookahead.make_selector(
             job.space, job.unit_price, job.t_max, settings)
@@ -129,7 +176,12 @@ def optimize(job: JobTable, settings: lookahead.Settings, *, budget_b: float = 3
         while True:
             key, sub = jax.random.split(key)
             t0 = time.perf_counter()
-            idx, valid, _ = sel(sub, y, mask, max(beta, 0.0))
+            if settings.timeout:
+                idx, valid, diag = sel(sub, y, mask, max(beta, 0.0), cens)
+                tau = np.float32(diag["timeout"])
+            else:
+                idx, valid, _ = sel(sub, y, mask, max(beta, 0.0))
+                tau = np.float32(np.inf)
             idx = int(idx)
             valid = bool(valid)
             select_times.append(time.perf_counter() - t0)
@@ -139,18 +191,20 @@ def optimize(job: JobTable, settings: lookahead.Settings, *, budget_b: float = 3
                 # Cost-unaware greedy BO stops when its pick is unaffordable
                 # (CherryPick terminates on budget depletion in our harness).
                 break
-            run_config(idx)
+            run_config(idx, tau)
             if beta <= 0:
                 break
 
-    rec = _recommend(job, explored)
+    rec = _recommend(job, explored, cens_order)
     return Outcome(
         job=job.name, policy=settings.policy, recommended=rec,
         cno=job.cno(rec), nex=len(explored), spent=float(budget - beta),
         budget=float(budget), found_optimum=(rec == job.optimum_index),
         explored=tuple(explored),
         select_seconds=float(np.mean(select_times)) if select_times else 0.0,
-        trajectory=tuple(trajectory))
+        trajectory=tuple(trajectory),
+        censored=tuple(i for i, c in zip(explored, cens_order) if c),
+        spend_trajectory=tuple(spend_traj))
 
 
 def optimize_live(evaluator, space, unit_price, t_max: float,
@@ -162,6 +216,13 @@ def optimize_live(evaluator, space, unit_price, t_max: float,
     This is the framework-integration path (launch/autotune.py): each "run"
     of a configuration actually profiles it (a dry-run compile + roofline
     estimate, or a timed real step) and charges its cost against the budget.
+
+    With ``settings.timeout`` every probe runs under a cap τ — the
+    constraint cap ``timeout_tmax_mult·t_max`` for bootstrap probes, the
+    selector's predictive cap afterwards.  A probe whose runtime exceeds τ
+    is billed pro rata (``c·τ/t`` — the cost accrued up to the abort) and
+    recorded as a censored lower bound; censored probes are never
+    recommendable (their runtime was not observed to meet the SLO).
 
     Args:
       evaluator: f(index) -> (runtime_seconds, cost_dollars) for config i.
@@ -177,39 +238,58 @@ def optimize_live(evaluator, space, unit_price, t_max: float,
     y = np.zeros(m, np.float32)
     runtimes = np.zeros(m, np.float32)
     mask = np.zeros(m, bool)
+    cens = np.zeros(m, bool)
     explored: list[int] = []
     beta = budget
+    tau_boot = (float(np.float32(t_max) * np.float32(settings.timeout_tmax_mult))
+                if settings.timeout else float("inf"))
 
-    def run_config(i: int):
+    def run_config(i: int, tau: float = float("inf")):
         nonlocal beta
         t, c = evaluator(int(i))
+        cut = settings.timeout and t > tau
+        if cut:
+            c = float(c) * tau / max(float(t), 1e-12)
         y[i] = c
         runtimes[i] = t
         mask[i] = True
+        cens[i] = bool(cut)
         explored.append(int(i))
         beta -= c
         if log:
             log(f"[tune] cfg {i}: runtime {t:.4f}s cost {c:.4f} "
-                f"beta {beta:.3f}")
+                f"beta {beta:.3f}" + (f" CENSORED at tau {tau:.3f}s" if cut
+                                      else ""))
 
     for i in latin_hypercube_indices(space, n_boot, rng):
-        run_config(i)
+        run_config(i, tau_boot)
 
     sel = lookahead.make_selector(space, unit_price, t_max, settings)
     key = jax.random.PRNGKey(seed)
     while beta > 0:
         key, sub = jax.random.split(key)
-        idx, valid, _ = sel(sub, y, mask, max(beta, 0.0))
+        if settings.timeout:
+            idx, valid, diag = sel(sub, y, mask, max(beta, 0.0), cens)
+            tau = float(diag["timeout"])
+        else:
+            idx, valid, _ = sel(sub, y, mask, max(beta, 0.0))
+            tau = float("inf")
         if not bool(valid):
             break
-        run_config(int(idx))
+        run_config(int(idx), tau)
 
     arr = np.array(explored)
-    feas = runtimes[arr] <= t_max
-    sub_arr = arr[feas] if feas.any() else arr
+    feas = (runtimes[arr] <= t_max) & ~cens[arr]
+    if feas.any():
+        sub_arr = arr[feas]
+    elif (~cens[arr]).any():
+        sub_arr = arr[~cens[arr]]
+    else:
+        sub_arr = arr
     rec = int(sub_arr[y[sub_arr].argmin()])
     return {"recommended": rec, "explored": explored,
             "costs": y[arr].tolist(), "runtimes": runtimes[arr].tolist(),
+            "censored": [int(i) for i in arr[cens[arr]]],
             "spent": float(budget - beta), "budget": budget,
             "best_runtime": float(runtimes[rec]), "best_cost": float(y[rec])}
 
@@ -263,8 +343,9 @@ def _resolve_runs(job: JobTable, seed: int, n_runs: int, seeds, bootstraps):
 # Batched, device-resident harness
 # --------------------------------------------------------------------------- #
 @functools.partial(jax.jit, static_argnames=("s",))
-def _batched_episode(keys, y, mask, beta, explored, n_exp, cost, points, left,
-                     thresholds, u, t_max, s: lookahead.Settings):
+def _batched_episode(keys, y, mask, beta, explored, n_exp, cens, cexpl,
+                     bexpl, cost, runtime, points, left, thresholds, u, t_max,
+                     s: lookahead.Settings):
     """Advance R simulated optimizations to completion in lockstep.
 
     One ``lax.while_loop`` over exploration steps; every iteration selects
@@ -273,7 +354,15 @@ def _batched_episode(keys, y, mask, beta, explored, n_exp, cost, points, left,
 
     keys: [R, 2]; y/mask: [R, M]; beta: [R]; explored: [R, M] int32 (-1
     padded, bootstrap prefix already written); n_exp: [R] int32.
-    Returns (beta, explored, n_exp, steps).
+    With ``s.timeout``: cens [R, M] bool (censor mask, bootstrap prefix
+    replayed), cexpl [R, M] bool (censored-at-exploration-position, aligned
+    with ``explored``), bexpl [R, M] f32 (billed-spend-at-position — the
+    post-hoc spend-trajectory reconstruction cannot look billed bounds up
+    in a table the way it can full costs), and ``runtime`` [M] f32
+    (``device_view().runtime``, gathered per lane to evaluate the censoring
+    compare on device); all four are None — and absent from the loop state,
+    leaving the compiled program unchanged — when timeouts are off.
+    Returns (beta, explored, n_exp, steps[, cexpl, bexpl]).
     """
     r_dim, m_dim = y.shape
     lanes = jnp.arange(r_dim)
@@ -284,32 +373,51 @@ def _batched_episode(keys, y, mask, beta, explored, n_exp, cost, points, left,
     def body(st):
         split = jax.vmap(jax.random.split)(st["key"])       # [R, 2, 2]
         key, sub = split[:, 0], split[:, 1]
-        idx, valid, _ = lookahead.select_next_batched(
+        idx, valid, diag = lookahead.select_next_batched(
             sub, st["y"], st["mask"], jnp.maximum(st["beta"], 0.0),
-            points, left, thresholds, u, t_max, s)
+            points, left, thresholds, u, t_max, s,
+            st["cens"] if s.timeout else None)
         c = cost[idx]                                       # [R] f32
         run = st["active"] & valid                          # Gamma empty -> stop
         if s.policy == "bo":
             # Cost-unaware greedy stops when its pick is unaffordable.
             run = run & (c <= st["beta"])
+        if s.timeout:
+            # Abort at the predictive cap: bill τ·U, learn the lower bound.
+            cut = run & (runtime[idx] > diag["timeout"])
+            billed = jnp.where(cut, diag["timeout"] * u[idx], c)
+        else:
+            billed = c
         hit = run[:, None] & (jnp.arange(m_dim)[None, :] == idx[:, None])
-        y = jnp.where(hit, c[:, None], st["y"])
+        y = jnp.where(hit, billed[:, None], st["y"])
         mask = st["mask"] | hit
-        beta = jnp.where(run, st["beta"] - c, st["beta"])
+        beta = jnp.where(run, st["beta"] - billed, st["beta"])
         pos = jnp.minimum(st["n_exp"], m_dim - 1)
         explored = st["explored"].at[lanes, pos].set(
             jnp.where(run, idx, st["explored"][lanes, pos]))
         n_exp = st["n_exp"] + run.astype(jnp.int32)
         active = run & (beta > 0.0)                         # Alg. 1 line 11
-        return {"key": key, "y": y, "mask": mask, "beta": beta,
-                "explored": explored, "n_exp": n_exp, "active": active,
-                "steps": st["steps"] + 1}
+        out = {"key": key, "y": y, "mask": mask, "beta": beta,
+               "explored": explored, "n_exp": n_exp, "active": active,
+               "steps": st["steps"] + 1}
+        if s.timeout:
+            out["cens"] = st["cens"] | (hit & cut[:, None])
+            out["cexpl"] = st["cexpl"].at[lanes, pos].set(
+                jnp.where(run, cut, st["cexpl"][lanes, pos]))
+            out["bexpl"] = st["bexpl"].at[lanes, pos].set(
+                jnp.where(run, billed, st["bexpl"][lanes, pos]))
+        return out
 
-    st = jax.lax.while_loop(cond, body, {
-        "key": keys, "y": y, "mask": mask, "beta": beta, "explored": explored,
-        "n_exp": n_exp, "active": jnp.ones((r_dim,), bool),
-        "steps": jnp.int32(0)})
-    return st["beta"], st["explored"], st["n_exp"], st["steps"]
+    st0 = {"key": keys, "y": y, "mask": mask, "beta": beta,
+           "explored": explored, "n_exp": n_exp,
+           "active": jnp.ones((r_dim,), bool), "steps": jnp.int32(0)}
+    if s.timeout:
+        st0["cens"] = cens
+        st0["cexpl"] = cexpl
+        st0["bexpl"] = bexpl
+    st = jax.lax.while_loop(cond, body, st0)
+    base = (st["beta"], st["explored"], st["n_exp"], st["steps"])
+    return base + (st["cexpl"], st["bexpl"]) if s.timeout else base
 
 
 def _auto_lane_chunk(job: JobTable, s: lookahead.Settings, n_runs: int) -> int:
@@ -344,6 +452,14 @@ def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
     equivalent branch.  Use ``run_many`` when strict per-run reproduction
     against the oracle is required.
 
+    Timeout-censored exploration (``settings.timeout``) holds the same
+    contract: the censoring compare ``t_run > τ`` and the billed bound
+    ``τ·U`` run on quantized, geometry-hardened values (see
+    ``acquisition.timeout_cap``), the per-config run times are gathered from
+    ``device_view().runtime`` on device, and per-step censor flags are
+    recorded alongside the exploration order so outcomes — including the
+    ``censored`` tuple — stay bit-identical to the sequential oracle.
+
     ``rnd`` has no model to amortize and is driven by host-side numpy RNG, so
     it falls through to the sequential path.  ``lane_chunk`` bounds how many
     runs share one compiled episode (memory control on big spaces); the
@@ -361,11 +477,12 @@ def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
 
     m = job.space.n_points
     budget = job.budget(budget_b)
-    cost32 = job.cost.astype(np.float32)
+    host = job.host_view()
     dev = job.device_view()
     points, left, thresholds, u = lookahead.space_arrays(
         job.space, job.unit_price)
     t_max32 = jnp.float32(job.t_max)
+    tau_boot = _boot_tau(job, settings)
 
     outs: list[Outcome] = []
     for lo in range(0, n_runs, lane_chunk):
@@ -374,27 +491,45 @@ def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
         r_dim = len(chunk_seeds)
 
         # Host-side bootstrap replay, float32 — Alg. 1 lines 6-8, the exact
-        # arithmetic `optimize` performs before its selection loop starts.
+        # arithmetic `optimize` performs before its selection loop starts
+        # (including the constraint-cap censoring of bootstrap runs).
         y0 = np.zeros((r_dim, m), np.float32)
         m0 = np.zeros((r_dim, m), bool)
+        c0 = np.zeros((r_dim, m), bool)
+        cx0 = np.zeros((r_dim, m), bool)
+        bx0 = np.zeros((r_dim, m), np.float32)
         beta0 = np.full(r_dim, np.float32(budget), np.float32)
         expl0 = np.full((r_dim, m), -1, np.int32)
         for r, boot in enumerate(chunk_boots):
             for j, i in enumerate(boot):
                 i = int(i)
-                y0[r, i] = cost32[i]
+                cut = bool(host.runtime[i] > tau_boot)
+                billed = (np.float32(tau_boot * host.unit_price[i]) if cut
+                          else host.cost[i])
+                y0[r, i] = billed
                 m0[r, i] = True
-                beta0[r] = beta0[r] - cost32[i]
+                c0[r, i] = cut
+                cx0[r, j] = cut
+                bx0[r, j] = billed
+                beta0[r] = beta0[r] - billed
                 expl0[r, j] = i
         keys0 = jnp.stack([jax.random.PRNGKey(s) for s in chunk_seeds])
         n_exp0 = np.array([len(b) for b in chunk_boots], np.int32)
 
         t0 = time.perf_counter()
-        beta_f, expl_f, n_exp_f, steps = jax.block_until_ready(
+        res = jax.block_until_ready(
             _batched_episode(keys0, jnp.asarray(y0), jnp.asarray(m0),
                              jnp.asarray(beta0), jnp.asarray(expl0),
-                             jnp.asarray(n_exp0), dev.cost, points, left,
-                             thresholds, u, t_max32, settings))
+                             jnp.asarray(n_exp0),
+                             jnp.asarray(c0) if settings.timeout else None,
+                             jnp.asarray(cx0) if settings.timeout else None,
+                             jnp.asarray(bx0) if settings.timeout else None,
+                             dev.cost,
+                             dev.runtime if settings.timeout else None,
+                             points, left, thresholds, u, t_max32, settings))
+        beta_f, expl_f, n_exp_f, steps = res[:4]
+        cexpl_f = np.asarray(res[4]) if settings.timeout else cx0
+        bexpl_f = np.asarray(res[5]) if settings.timeout else None
         wall = time.perf_counter() - t0
         # Amortized wall time per selection (steps x lanes selections per
         # episode), to stay comparable with the sequential oracle's per-call
@@ -407,14 +542,28 @@ def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
         n_exp_f = np.asarray(n_exp_f)
         for r in range(r_dim):
             explored = [int(i) for i in expl_f[r, :n_exp_f[r]]]
-            rec = _recommend(job, explored)
-            trajectory = [_trajectory_point(job, explored[:j + 1])
+            cflags = [bool(f) for f in cexpl_f[r, :n_exp_f[r]]]
+            billed = (bexpl_f[r, :n_exp_f[r]] if bexpl_f is not None
+                      else host.cost[explored])
+            rec = _recommend(job, explored, cflags)
+            trajectory = [_trajectory_point(job, explored[:j + 1],
+                                            cflags[:j + 1])
                           for j in range(len(explored))]
+            # Replay the lane's float32 budget subtraction host-side — the
+            # same op order the episode executed — so spend_trajectory is
+            # bit-identical to the sequential oracle's inline bookkeeping.
+            beta_r = np.float32(budget)
+            spend_traj = []
+            for b in billed:
+                beta_r = np.float32(beta_r - b)
+                spend_traj.append(float(budget - beta_r))
             outs.append(Outcome(
                 job=job.name, policy=settings.policy, recommended=rec,
                 cno=job.cno(rec), nex=len(explored),
                 spent=float(budget - beta_f[r]), budget=float(budget),
                 found_optimum=(rec == job.optimum_index),
                 explored=tuple(explored), select_seconds=sel_s,
-                trajectory=tuple(trajectory)))
+                trajectory=tuple(trajectory),
+                censored=tuple(i for i, f in zip(explored, cflags) if f),
+                spend_trajectory=tuple(spend_traj)))
     return outs

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.space import DiscreteSpace
 
-__all__ = ["DeviceTables", "JobTable"]
+__all__ = ["DeviceTables", "HostTables", "JobTable"]
 
 
 class DeviceTables(NamedTuple):
@@ -30,6 +30,19 @@ class DeviceTables(NamedTuple):
     unit_price: jax.Array  # [M] f32
     runtime: jax.Array     # [M] f32
     feasible: jax.Array    # [M] bool — T(x) <= t_max
+
+
+class HostTables(NamedTuple):
+    """The same float32 columns as :class:`DeviceTables`, host-resident.
+
+    Alg. 1's budget accounting — and the timeout billing ``min(t, τ)·U`` —
+    must perform the exact IEEE float32 arithmetic on the host (sequential
+    oracle, bootstrap replay) and on the device (batched episode), so both
+    read from one casting of the tables."""
+
+    cost: np.ndarray        # [M] f32
+    unit_price: np.ndarray  # [M] f32
+    runtime: np.ndarray     # [M] f32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +113,20 @@ class JobTable:
                 runtime=jnp.asarray(self.runtime, jnp.float32),
                 feasible=jnp.asarray(self.feasible))
             object.__setattr__(self, "_device_view", cached)
+        return cached
+
+    def host_view(self) -> HostTables:
+        """Float32 table columns for host-side Alg. 1 accounting (cached).
+
+        ``device_view`` exposes the same columns on device — in particular
+        the per-config run times the batched episode gathers to evaluate
+        the censoring compare ``t_run > τ`` without a host round trip."""
+        cached = getattr(self, "_host_view", None)
+        if cached is None:
+            cached = HostTables(cost=self.cost.astype(np.float32),
+                                unit_price=self.unit_price.astype(np.float32),
+                                runtime=self.runtime.astype(np.float32))
+            object.__setattr__(self, "_host_view", cached)
         return cached
 
     # ------------------------------------------------------------------ #

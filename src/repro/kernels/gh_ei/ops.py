@@ -6,15 +6,29 @@ import functools
 
 import jax
 
+from repro.core import acquisition as acq
 from repro.kernels.gh_ei.kernel import gh_ei_call
 from repro.kernels.gh_ei.ref import gh_ei_ref
 
 __all__ = ["gh_ei"]
 
 
-@functools.partial(jax.jit, static_argnames=("conf", "bm", "force"))
-def gh_ei(mu, sigma, u, y_star, t_max, beta, xi, *, conf=0.99, bm=512,
-          force: str | None = None):
+@functools.partial(jax.jit, static_argnames=("conf", "cens_sigma_rel", "bm",
+                                             "force"))
+def gh_ei(mu, sigma, u, y_star, t_max, beta, xi, *, cens=None, y_cens=None,
+          conf=0.99, cens_sigma_rel=0.5, bm=512, force: str | None = None):
+    """Fused EI_c + budget filter + G-H node expansion over the space.
+
+    ``cens``/``y_cens`` opt into timeout-censored observations: the
+    posterior is corrected at censored configs (mean clamped to the billed
+    lower bound ``y_cens``, sigma floored at ``cens_sigma_rel·y_cens`` —
+    see ``acquisition.censored_adjust``) *before* the fused kernel runs.
+    The correction is an elementwise pre-pass, so the pallas kernel itself
+    is unchanged and the pallas/ref parity contract is unaffected.
+    """
+    if cens is not None:
+        mu, sigma = acq.censored_adjust(mu, sigma, y_cens, cens,
+                                        cens_sigma_rel)
     mode = force
     if mode is None:
         mode = "pallas" if jax.default_backend() == "tpu" else "ref"

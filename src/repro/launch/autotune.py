@@ -75,11 +75,12 @@ def decode_point(space, i, is_moe: bool):
 
 
 def real_evaluator(arch, shape, mesh_kind, space, is_moe, profile_steps,
-                   log=print, timeout_s=None):
-    """Dry-run compile + roofline step time -> (runtime, probe cost $).
+                   log=print):
+    """Dry-run compile + roofline step time -> (runtime, full-run cost $).
 
-    ``timeout_s`` mirrors the paper's 10-minute job timeout: a probe is
-    aborted (and billed) at the cap, bounding the worst-case probe cost.
+    Returns the *uncapped* cost of profiling the candidate; probe aborts are
+    the optimizer's job now (``Settings.timeout`` in ``optimize_live`` bills
+    aborted probes pro rata and learns from the censored bound).
     """
     from repro.launch.dryrun import analyze, lower_cell
 
@@ -97,8 +98,7 @@ def real_evaluator(arch, shape, mesh_kind, space, is_moe, profile_steps,
         except Exception as e:                   # invalid config: huge cost
             log(f"[tune] cfg {i} failed: {type(e).__name__}")
             step_s, chips = 3600.0, 256
-        billed = min(step_s, timeout_s) if timeout_s else step_s
-        cost = billed * profile_steps * chips * PRICE_PER_CHIP_HOUR / 3600.0
+        cost = step_s * profile_steps * chips * PRICE_PER_CHIP_HOUR / 3600.0
         log(f"[tune] cfg {i} {flags} {rules}: step {step_s:.3f}s "
             f"probe ${cost:.2f} (compile {time.time()-t0:.0f}s)")
         return step_s, cost
@@ -106,8 +106,7 @@ def real_evaluator(arch, shape, mesh_kind, space, is_moe, profile_steps,
     return evaluate
 
 
-def mock_evaluator(space, is_moe, profile_steps, chips=256, seed=0,
-                   timeout_s=None):
+def mock_evaluator(space, is_moe, profile_steps, chips=256, seed=0):
     """Analytic launch-cost model (for tests/examples; no compiles).
 
     Shape mirrors reality: remat trades memory for +30% recompute flops;
@@ -130,8 +129,7 @@ def mock_evaluator(space, is_moe, profile_steps, chips=256, seed=0,
             comm += 0.1 if flags.get("moe_impl") == "gather" else 0.35
         step = (max(compute, comm) + overhead) * (50.0 if oom else 1.0)
         step *= float(np.exp(rng.normal(0, 0.02)))
-        billed = min(step, timeout_s) if timeout_s else step
-        cost = billed * profile_steps * chips * PRICE_PER_CHIP_HOUR / 3600.0
+        cost = step * profile_steps * chips * PRICE_PER_CHIP_HOUR / 3600.0
         return step, cost
 
     return evaluate
@@ -142,16 +140,18 @@ def tune(arch, shape, mesh_kind, *, budget, slo, profile_steps=100,
     is_moe = arch in ("deepseek-v3-671b", "mixtral-8x22b") if arch else False
     space = build_space(is_moe)
     chips = 512 if mesh_kind == "multi" else 256
-    timeout_s = 10.0 * slo                        # probe abort cap
     unit_price = np.full(space.n_points,
                          chips * PRICE_PER_CHIP_HOUR * profile_steps / 3600.0)
     if mock:
-        ev = mock_evaluator(space, is_moe, profile_steps, chips, seed,
-                            timeout_s=timeout_s)
+        ev = mock_evaluator(space, is_moe, profile_steps, chips, seed)
     else:
         ev = real_evaluator(arch, shape, mesh_kind, space, is_moe,
-                            profile_steps, log, timeout_s=timeout_s)
-    settings = Settings(policy="lynceus", la=la, k_gh=3, refit="frozen")
+                            profile_steps, log)
+    # Censored exploration (paper §3): probes abort at the predictive cap
+    # once an SLO-meeting incumbent exists, and never run past 10x the SLO
+    # (the old evaluator-level hard cap, now budget-aware and model-driven).
+    settings = Settings(policy="lynceus", la=la, k_gh=3, refit="frozen",
+                        timeout=True, timeout_tmax_mult=10.0)
     out = optimize_live(ev, space, unit_price, slo, settings, budget=budget,
                         seed=seed, log=log)
     out["flags"], out["rules"] = decode_point(space, out["recommended"],

@@ -39,6 +39,40 @@ def test_optimize_live_budget_and_recommendation():
     assert out["spent"] <= out["budget"] + max(runtimes) * 0.5 + 1e-6
 
 
+def test_optimize_live_timeout_censors_and_bills_pro_rata():
+    """Probes past the cap are aborted, billed pro rata, and excluded from
+    the recommendation; spend never exceeds the uncapped run's spend."""
+    space = DiscreteSpace.from_grid({"a": list(range(6)),
+                                     "b": list(range(5))})
+    rng = np.random.default_rng(3)
+    runtimes = rng.uniform(0.2, 3.0, space.n_points)
+    ev_calls = []
+
+    def ev(i):
+        ev_calls.append(i)
+        t = float(runtimes[i])
+        return t, t * 0.5
+
+    settings = Settings(policy="lynceus", la=1, k_gh=2, refit="frozen",
+                        timeout=True, timeout_tmax_mult=1.0)
+    out = optimize_live(ev, space, np.full(space.n_points, 0.5), t_max=1.0,
+                        settings=settings, budget=6.0, seed=0)
+    # every explored probe longer than the constraint cap was censored
+    # (the predictive cap can only be tighter than the constraint cap)
+    assert set(out["censored"]) >= {i for i in out["explored"]
+                                    if runtimes[i] > 1.0}
+    # censored probes billed strictly below their full cost (pro rata)
+    cens = set(out["censored"])
+    assert cens, "cap at the SLO must censor something on this landscape"
+    for j, i in enumerate(out["explored"]):
+        if i in cens:
+            assert out["costs"][j] < runtimes[i] * 0.5
+    # the recommendation is an uncensored, SLO-meeting probe
+    assert out["recommended"] not in cens
+    assert runtimes[out["recommended"]] <= 1.0
+    assert out["spent"] == pytest.approx(sum(out["costs"]))
+
+
 def test_mock_autotune_finds_good_launch_config():
     from repro.launch.autotune import build_space, mock_evaluator, tune
     out = tune("mixtral-8x22b", "train_4k", "single", budget=400.0, slo=1.5,
@@ -49,7 +83,7 @@ def test_mock_autotune_finds_good_launch_config():
         out["flags"]["microbatches"] >= 4          # avoided the OOM region
     # compare against exhaustive search of the mock model
     space = build_space(True)
-    ev = mock_evaluator(space, True, 100, timeout_s=15.0)
+    ev = mock_evaluator(space, True, 100)
     all_t = np.array([ev(i)[0] for i in range(space.n_points)])
     best_feasible = all_t[all_t <= 1.5].min()
     assert out["best_runtime"] <= best_feasible * 1.25
@@ -59,7 +93,7 @@ def test_mock_autotune_beats_random_at_parity_budget():
     from repro.launch.autotune import build_space, mock_evaluator, tune
     rng = np.random.default_rng(1)
     space = build_space(True)
-    ev = mock_evaluator(space, True, 100, timeout_s=15.0, seed=0)
+    ev = mock_evaluator(space, True, 100, seed=0)
     lyn = tune("mixtral-8x22b", "train_4k", "single", budget=400.0, slo=1.5,
                mock=True, out_dir=None, log=lambda *a: None)
     # random search under the same budget accounting

@@ -34,6 +34,8 @@ def _assert_outcomes_equal(seq, bat):
         assert a.budget == b.budget, f"run {i}"
         assert a.trajectory == b.trajectory, f"run {i}"
         assert a.found_optimum == b.found_optimum, f"run {i}"
+        assert a.censored == b.censored, f"run {i}: censored sets differ"
+        assert a.spend_trajectory == b.spend_trajectory, f"run {i}"
 
 
 @pytest.mark.parametrize("policy,la,refit", POLICIES)
@@ -69,6 +71,69 @@ def test_explicit_seeds_and_bootstraps_respected():
     _assert_outcomes_equal(seq, bat)
     for o, boot in zip(bat, boots):
         assert o.explored[:len(boot)] == tuple(int(i) for i in boot)
+
+
+TIMEOUT_POLICIES = [
+    ("bo", 0, "exact"),
+    ("la0", 0, "exact"),
+    ("lynceus", 1, "frozen"),
+    ("lynceus", 2, "exact"),
+]
+
+
+@pytest.mark.parametrize("policy,la,refit", TIMEOUT_POLICIES)
+def test_timeout_batched_matches_sequential_bit_exact(policy, la, refit):
+    """Timeout-censored runs hold the same parity contract: identical
+    exploration order, censored sets, billed spend and trajectories.  The
+    censoring compare and the billed bound τ·U both derive from
+    geometry-hardened values (acquisition.timeout_cap)."""
+    job = synthetic_job(3)
+    s = Settings(policy=policy, la=la, k_gh=2, refit=refit, timeout=True)
+    seq = run_many(job, s, n_runs=6, budget_b=3.0, seed=11)
+    bat = run_many_batched(job, s, n_runs=6, budget_b=3.0, seed=11)
+    _assert_outcomes_equal(seq, bat)
+    # the mechanism is actually exercised on this job (t_max at the median
+    # runtime censors about half the probes)
+    assert any(o.censored for o in seq)
+    for o in seq:
+        if len(o.censored) < o.nex:     # degenerate all-censored runs fall
+            assert o.recommended not in o.censored   # back to table cost
+        assert o.spent <= o.budget + float(job.cost.max()) + 1e-6
+
+
+def test_timeout_lane_chunking_does_not_change_outcomes():
+    """Chunked episodes compile per batch width; censoring decisions and
+    billing must not depend on how many lanes share a program."""
+    job = synthetic_job(0)
+    s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen", timeout=True)
+    seq = run_many(job, s, n_runs=7, budget_b=3.0, seed=4)
+    assert any(o.censored for o in seq)
+    for chunk in (1, 3, 7):
+        bat = run_many_batched(job, s, n_runs=7, budget_b=3.0, seed=4,
+                               lane_chunk=chunk)
+        _assert_outcomes_equal(seq, bat)
+
+
+def test_timeout_cuts_cost_per_exploration():
+    """Same seeds/bootstraps: probes bill min(t, τ)·U, so the censored arm
+    pays strictly less per exploration and reinvests the savings in more
+    probes under the same budget B (which its spend never exceeds — the
+    budget cap inside τ truncates the tail the Gamma filter lets through)."""
+    job = synthetic_job(1)
+    base = dict(policy="la0", la=0, k_gh=2)
+    seeds = [31 + r for r in range(6)]
+    boots = _per_run_bootstraps(job, seeds)
+    off = run_many_batched(job, Settings(**base), seeds=seeds,
+                           bootstraps=boots)
+    on = run_many_batched(job, Settings(**base, timeout=True), seeds=seeds,
+                          bootstraps=boots)
+    per_probe = lambda outs: np.mean([o.spent / o.nex for o in outs])
+    assert per_probe(on) < per_probe(off)
+    assert np.mean([o.nex for o in on]) >= np.mean([o.nex for o in off])
+    for o in on:
+        # selection probes are budget-capped; only the (model-less,
+        # tmax-capped) bootstrap can overshoot B, by bounded amounts
+        assert o.spent <= o.budget + float(job.cost.max()) + 1e-6
 
 
 def test_rnd_falls_through_to_sequential():

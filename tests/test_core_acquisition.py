@@ -1,11 +1,14 @@
 """EI closed form, constraint probability, Gauss-Hermite exactness."""
 
 import math
+import os
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 try:
+    if os.environ.get("REPRO_NO_HYPOTHESIS"):
+        raise ImportError("fallback forced by REPRO_NO_HYPOTHESIS")
     from hypothesis import given, settings, strategies as st
 except ImportError:          # no-network CI: deterministic fallback
     from _hypothesis_fallback import given, settings, st

@@ -51,6 +51,26 @@ def test_multi_constraint_respects_joint_feasibility():
         assert cjob.feasible[out["recommended"]]
 
 
+def test_multi_constraint_timeout_censors_and_saves():
+    """Timeout settings abort long runs: billed spend drops vs the uncapped
+    twin, censored runs never get recommended, and the joint-constraint
+    guarantee is preserved."""
+    job = _job(2)
+    rng = np.random.default_rng(5)
+    energy = rng.uniform(0.0, 10.0, job.space.n_points)
+    cjob = ConstrainedJob(job, {"energy": energy},
+                          {"energy": float(np.quantile(energy, 0.6))})
+    s = Settings(policy="la0", n_trees=10, depth=3, timeout=True,
+                 timeout_tmax_mult=1.0)
+    out = optimize_multi_constraint(cjob, budget_b=4.0, seed=0, settings=s)
+    assert out["censored"], "t_max cap must censor on this landscape"
+    assert out["recommended"] not in out["censored"]
+    assert out["cno"] >= 1.0
+    arr = np.array(out["explored"])
+    if (cjob.feasible[arr] & ~np.isin(arr, out["censored"])).any():
+        assert cjob.feasible[out["recommended"]]
+
+
 def test_setup_cost_model():
     job = _job()
     setup = default_setup_cost(job.space, boot_fee=0.01)
