@@ -1,10 +1,19 @@
 """Batched vs sequential simulation harness: parity audit + wall-clock.
 
 The paper's evaluation needs >=100 simulated optimizations per (job, policy,
-budget) cell.  This section runs the same 100-run sweep through both
-harnesses on the synthetic job, verifies the outcomes match run for run, and
-reports the wall-clock speedup of the device-resident lockstep path (warm
-compile, the steady state of a figure sweep).
+budget) cell.  Two sections:
+
+* **parity + speedup** — the same 100-run sweep through the sequential
+  oracle and the batched harness on the synthetic job, verifying the
+  outcomes match run for run and reporting the wall-clock speedup of the
+  device-resident path (warm compile, the steady state of a figure sweep).
+* **tail-heavy sweep** — the lane-compaction case: a mixed-budget x
+  mixed-job work queue (mostly short-budget runs plus a long-budget tail)
+  drained by the compacting scheduler vs the lockstep baseline, which must
+  hold every lane until its slowest run finishes and cannot mix jobs in one
+  episode.  Outcomes must match run for run between the two schedulers
+  (refill order never changes results — see ``_compacting_episode``); the
+  win is aggregate throughput, gated at >=1.5x.
 """
 
 from __future__ import annotations
@@ -12,23 +21,30 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import csv_line, write_json
-from repro.core import Settings, run_many, run_many_batched
+from repro.core import (RunRequest, Settings, run_many, run_many_batched,
+                        run_queue_batched)
 from repro.jobs import synthetic_job
 
 GRID = [("bo", 0, "exact"), ("la0", 0, "exact"), ("lynceus", 1, "frozen"),
         ("lynceus", 2, "frozen")]
 
+# Tail-heavy queue shape: for every LONG-budget run there are TAIL_RATIO
+# short ones, so a lockstep episode idles most lanes while the long runs
+# drain their budgets.
+TAIL_SHORT_B = 1.0
+TAIL_LONG_B = 8.0
+TAIL_RATIO = 5
+
 
 def _outcomes_equal(a, b):
     return (a.explored == b.explored and a.recommended == b.recommended
             and a.cno == b.cno and a.spent == b.spent and a.nex == b.nex
-            and a.trajectory == b.trajectory)
+            and a.trajectory == b.trajectory
+            and a.spend_trajectory == b.spend_trajectory)
 
 
-def main(n_runs=20, quick=False):
+def parity_and_speedup(n, out):
     job = synthetic_job(0)
-    n = 30 if quick else max(n_runs, 100)
-    out = {}
     t_seq_total = t_bat_total = 0.0
     for policy, la, refit in GRID:
         s = Settings(policy=policy, la=la, k_gh=3, refit=refit)
@@ -60,4 +76,85 @@ def main(n_runs=20, quick=False):
     csv_line("batched", "suite", "batched_seconds", round(t_bat_total, 2))
     csv_line("batched", "suite", "speedup", round(agg, 2))
     csv_line("batched", "suite", "speedup_ge_5x", agg >= 5.0)
+
+
+def _tail_queue(jobs, runs_per_job):
+    """Mixed-budget x mixed-job request list: per job, ``runs_per_job`` runs
+    of which every (TAIL_RATIO+1)-th carries the long budget."""
+    reqs = []
+    for k, job in enumerate(jobs):
+        for r in range(runs_per_job):
+            b = TAIL_LONG_B if r % (TAIL_RATIO + 1) == 0 else TAIL_SHORT_B
+            reqs.append(RunRequest(job, seed=90001 + 1000 * k + r,
+                                   budget_b=b))
+    return reqs
+
+
+def tail_heavy(n_jobs, runs_per_job, lane_slots, out):
+    """Lockstep vs compacting scheduler on a tail-heavy work queue.
+
+    The lockstep baseline gets its strongest shape: one episode per job
+    with ALL of that job's mixed-budget runs as lanes (a single compiled
+    program reused across jobs) — its only handicap is the one the
+    compacting scheduler exists to remove, lanes idling in lockstep until
+    the last budget empties.  The compacting path drains the whole
+    cross-job queue through ``lane_slots`` seats in one episode.
+    """
+    jobs = [synthetic_job(10 + k) for k in range(n_jobs)]
+    s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
+    reqs = _tail_queue(jobs, runs_per_job)
+    by_job = [[q for q in reqs if q.job is job] for job in jobs]
+
+    def lockstep():
+        outs = []
+        for group in by_job:
+            outs.extend(run_many_batched(
+                group[0].job, s,
+                seeds=[q.seed for q in group],
+                budget_b=[q.budget_b for q in group],
+                lane_chunk=len(group), scheduler="lockstep"))
+        return outs
+
+    def compact():
+        return run_queue_batched(reqs, s, lane_slots=lane_slots)
+
+    # Warm both compiled episodes on a same-shaped throwaway queue.
+    lockstep()
+    compact()
+
+    t0 = time.perf_counter()
+    lock = lockstep()
+    t_lock = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    comp = compact()
+    t_comp = time.perf_counter() - t0
+
+    # Lockstep groups are per job in queue order, so outcomes align 1:1.
+    drift = sum(not _outcomes_equal(a, b) for a, b in zip(lock, comp))
+    speedup = t_lock / t_comp
+    nex_total = sum(o.nex for o in comp)
+    out["tailheavy"] = {
+        "jobs": len(jobs), "runs": len(reqs), "lane_slots": lane_slots,
+        "short_b": TAIL_SHORT_B, "long_b": TAIL_LONG_B,
+        "seconds_lockstep": t_lock, "seconds_compacting": t_comp,
+        "throughput_lockstep_nex_s": nex_total / t_lock,
+        "throughput_compacting_nex_s": nex_total / t_comp,
+        "speedup": speedup, "drifting_runs": drift,
+    }
+    csv_line("batched", "tailheavy", "runs", len(reqs))
+    csv_line("batched", "tailheavy", "lane_slots", lane_slots)
+    csv_line("batched", "tailheavy", "lockstep_seconds", round(t_lock, 2))
+    csv_line("batched", "tailheavy", "compacting_seconds", round(t_comp, 2))
+    csv_line("batched", "tailheavy", "drifting_runs", drift)
+    csv_line("batched", "tailheavy", "speedup", round(speedup, 2))
+    csv_line("batched", "tailheavy", "speedup_ge_1.5x", speedup >= 1.5)
+
+
+def main(n_runs=20, quick=False):
+    out = {}
+    parity_and_speedup(30 if quick else max(n_runs, 100), out)
+    if quick:
+        tail_heavy(n_jobs=2, runs_per_job=12, lane_slots=8, out=out)
+    else:
+        tail_heavy(n_jobs=4, runs_per_job=24, lane_slots=16, out=out)
     write_json("batched", out)

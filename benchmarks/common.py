@@ -26,6 +26,9 @@ POLICY_SET = [("rnd", 0), ("bo", 0), ("la0", 0), ("lynceus", 1),
 # to "sequential" (benchmarks.run --sequential) to audit any figure against
 # the one-run-at-a-time oracle.
 DEFAULT_BACKEND = "batched"
+# Which batched scheduler drains the sweep: "compact" (lane-compacting work
+# queue, default) or "lockstep" (fixed lanes; benchmarks.run --scheduler).
+DEFAULT_SCHEDULER = "compact"
 
 
 def datasets():
@@ -36,13 +39,17 @@ def datasets():
 def _key(ds, job, policy, la, b, n_runs, refit, backend, timeout):
     # backend is part of the key: a --sequential audit must never be served
     # results the batched harness cached (they agree on audited configs, but
-    # serving one for the other would make the audit vacuous).  Ditto the
-    # timeout flag: fig_timeout's on/off comparison must never alias.  The
-    # v2 schema token shields readers of the newer outcome fields
-    # (spend_trajectory, n_censored) from pre-timeout-era cache files.
+    # serving one for the other would make the audit vacuous).  For the
+    # batched backend the scheduler rides along for the same reason (a
+    # --scheduler lockstep audit must re-run, not read compact's cache).
+    # Ditto the timeout flag: fig_timeout's on/off comparison must never
+    # alias.  The v2 schema token shields readers of the newer outcome
+    # fields (spend_trajectory, n_censored) from pre-timeout-era cache
+    # files.
     to = "__to" if timeout else ""
+    be = backend if backend == "sequential" else f"{backend}-{DEFAULT_SCHEDULER}"
     return (f"{ds}__{job}__{policy}{la}__b{b}__r{n_runs}__{refit}"
-            f"__{backend}{to}__v2")
+            f"__{be}{to}__v2")
 
 
 def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
@@ -53,8 +60,9 @@ def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
     The per-run seeds (7777 + r) and the bootstraps derived from them are
     shared across every policy on a job — the paper's fairness protocol.
     ``backend`` picks the harness: "batched" (default, device-resident
-    lockstep lanes) or "sequential" (the Python-loop oracle).  ``timeout``
-    enables timeout-censored exploration (paper §3, mechanism i).
+    lanes under ``DEFAULT_SCHEDULER``) or "sequential" (the Python-loop
+    oracle).  ``timeout`` enables timeout-censored exploration (paper §3,
+    mechanism i).
     """
     backend = backend or DEFAULT_BACKEND
     CACHE.mkdir(parents=True, exist_ok=True)
@@ -64,8 +72,11 @@ def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
         return json.loads(f.read_text())
     s = Settings(policy=policy, la=la, k_gh=3, refit=refit, timeout=timeout)
     seeds = [7777 + r for r in range(n_runs)]        # shared across policies
-    runner = run_many if backend == "sequential" else run_many_batched
-    outcomes = runner(job, s, budget_b=b, seeds=seeds)
+    if backend == "sequential":
+        outcomes = run_many(job, s, budget_b=b, seeds=seeds)
+    else:
+        outcomes = run_many_batched(job, s, budget_b=b, seeds=seeds,
+                                    scheduler=DEFAULT_SCHEDULER)
     outs = []
     for r, o in enumerate(outcomes):
         outs.append({"cno": o.cno, "nex": o.nex, "spent": o.spent,

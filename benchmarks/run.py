@@ -45,9 +45,15 @@ def main(argv=None):
     ap.add_argument("--sequential", action="store_true",
                     help="drive figure sweeps through the sequential oracle "
                          "instead of the batched harness")
+    ap.add_argument("--scheduler", choices=("compact", "lockstep"),
+                    default="compact",
+                    help="batched-backend scheduler: lane-compacting work "
+                         "queue (default) or the fixed-lane lockstep "
+                         "baseline")
     args = ap.parse_args(argv)
     if args.sequential:
         common.DEFAULT_BACKEND = "sequential"
+    common.DEFAULT_SCHEDULER = args.scheduler
     n_runs = 5 if args.quick else args.runs
     only = args.only.split(",") if args.only else list(SECTIONS)
     for name in only:

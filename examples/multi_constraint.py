@@ -2,13 +2,16 @@
 
 Adds a synthetic per-config energy metric to a Scout-like job and runs the
 multi-constraint optimizer: EI_c becomes EI x P(time ok) x P(energy ok),
-each constraint with its own forest.
+each constraint with its own forest.  ``settings`` opts the loop into the
+same timeout-censored exploration as the core optimizer (paper §3,
+mechanism i).
 
   PYTHONPATH=src python examples/multi_constraint.py
 """
 
 import numpy as np
 
+from repro.core import Settings
 from repro.core.extensions import ConstrainedJob, optimize_multi_constraint
 from repro.jobs import scout_jobs
 
@@ -23,7 +26,9 @@ def main():
               * (1.0 + 0.2 * raw[:, 0]))
     cap = float(np.quantile(energy, 0.5))
     cjob = ConstrainedJob(job, {"energy": energy}, {"energy": cap})
-    out = optimize_multi_constraint(cjob, budget_b=3.0, seed=0)
+    out = optimize_multi_constraint(
+        cjob, budget_b=3.0, seed=0,
+        settings=Settings(policy="la0", timeout=True))
     rec = out["recommended"]
     print(f"job={job.name}  energy cap={cap:.2f}")
     print(f"recommended config #{rec}: cost=${job.cost[rec]:.3f} "

@@ -3,15 +3,18 @@
 Optimizes the cluster + hyper-parameter configuration of a synthetic
 TensorFlow-like training job (384 configs over 5 dims) under a profiling
 budget, and compares against greedy BO and random search — the paper's
-Fig 4 in miniature.
+Fig 4 in miniature.  The policy sweep runs on the batched harness (the
+lane-compacting scheduler), with every policy handed the same per-run
+seeds so bootstraps match across arms (the paper's fairness protocol);
+a final Lynceus arm turns on timeout-censored exploration (paper §3,
+mechanism i) to show the per-probe cost drop.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import Settings, optimize
-from repro.core.space import latin_hypercube_indices
+from repro.core import Settings, optimize, run_many_batched
 from repro.jobs import tensorflow_jobs
 
 
@@ -19,23 +22,29 @@ def main():
     job = tensorflow_jobs(seed=0)[0]                 # tf-cnn analogue
     print(f"job: {job.name} — {job.space.n_points} configs over "
           f"{job.space.n_dims} dims; optimum ${job.optimum_cost:.4f}/run")
+
+    one = optimize(job, Settings(policy="lynceus", la=1, k_gh=3,
+                                 refit="frozen"), budget_b=3.0, seed=0)
+    print(f"single run: recommended config #{one.recommended} "
+          f"(CNO {one.cno:.2f}) after {one.nex} explorations\n")
+
     policies = {
         "random": Settings(policy="rnd"),
         "greedy BO (CherryPick)": Settings(policy="bo", refit="frozen"),
         "Lynceus (LA=2)": Settings(policy="lynceus", la=2, k_gh=3,
                                    refit="frozen"),
+        "Lynceus (LA=2, timeout)": Settings(policy="lynceus", la=2, k_gh=3,
+                                            refit="frozen", timeout=True),
     }
+    seeds = [7777 + r for r in range(3)]             # shared across policies
     for name, s in policies.items():
-        cnos, nexs = [], []
-        for seed in range(3):
-            rng = np.random.default_rng(seed)
-            boot = latin_hypercube_indices(job.space, job.bootstrap_size(),
-                                           rng)
-            out = optimize(job, s, budget_b=3.0, seed=seed, bootstrap=boot)
-            cnos.append(out.cno)
-            nexs.append(out.nex)
-        print(f"{name:24s} mean CNO {np.mean(cnos):5.2f}  "
-              f"(explored {np.mean(nexs):.0f} configs on the same budget)")
+        outs = run_many_batched(job, s, seeds=seeds, budget_b=3.0)
+        cno = np.mean([o.cno for o in outs])
+        nex = np.mean([o.nex for o in outs])
+        per_probe = np.mean([o.spent / o.nex for o in outs])
+        print(f"{name:26s} mean CNO {cno:5.2f}  "
+              f"(explored {nex:.0f} configs, ${per_probe:.3f}/probe "
+              f"on the same budget)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,109 @@
+"""Docs gate: broken-link check + doc-embedded code execution.
+
+Walks ``README.md`` and ``docs/*.md`` and fails (exit 1) on:
+
+* **broken relative links** — any markdown link whose target is neither
+  external (``http(s)://``, ``mailto:``) nor an in-page anchor and does
+  not resolve to an existing file/directory relative to the containing
+  document;
+* **stale doc-embedded code** — every ```` ```python ```` fence is
+  compiled, then *executed* in-process against the current API (cwd = repo
+  root, ``src`` on the path), so snippets that drift from the real
+  signatures break CI instead of readers.  A fence preceded (within two
+  lines) by ``<!-- docs-gate: compile-only -->`` is compiled but not run —
+  reserve that for illustrative pseudo-code.
+
+Fences tagged with any other language (```bash```, plain ``` diagrams) are
+ignored.  Run from anywhere: ``python scripts/check_docs.py``.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+COMPILE_ONLY = "<!-- docs-gate: compile-only -->"
+
+
+def doc_files() -> list[pathlib.Path]:
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links(path: pathlib.Path) -> list[str]:
+    errors = []
+    for n, line in enumerate(path.read_text().splitlines(), 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                errors.append(f"{path.relative_to(ROOT)}:{n}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def python_fences(path: pathlib.Path) -> list[tuple[int, str, bool]]:
+    """(first line number, source, execute?) for every python code fence."""
+    lines = path.read_text().splitlines()
+    fences = []
+    in_fence = False
+    lang = ""
+    buf: list[str] = []
+    start = 0
+    for n, line in enumerate(lines, 1):
+        m = FENCE_RE.match(line)
+        if m and not in_fence:
+            in_fence, lang, buf, start = True, m.group(1), [], n + 1
+        elif m and in_fence:
+            if lang == "python":
+                context = lines[max(0, start - 4):start - 1]
+                run = not any(COMPILE_ONLY in c for c in context)
+                fences.append((start, "\n".join(buf), run))
+            in_fence = False
+        elif in_fence:
+            buf.append(line)
+    return fences
+
+
+def main() -> int:
+    sys.path.insert(0, str(ROOT / "src"))
+    errors: list[str] = []
+    n_links = n_exec = n_compiled = 0
+    for path in doc_files():
+        link_errors = check_links(path)
+        errors += link_errors
+        n_links += len(LINK_RE.findall(path.read_text()))
+        for lineno, src, run in python_fences(path):
+            where = f"{path.relative_to(ROOT)}:{lineno}"
+            try:
+                code = compile(src, where, "exec")
+                n_compiled += 1
+            except SyntaxError as e:
+                errors.append(f"{where}: fence does not compile: {e}")
+                continue
+            if not run:
+                continue
+            try:
+                exec(code, {"__name__": f"__docsgate_{n_exec}__"})
+                n_exec += 1
+            except Exception as e:
+                errors.append(f"{where}: fence raised {type(e).__name__}: "
+                              f"{e}")
+    for e in errors:
+        print(f"docs-gate FAIL {e}")
+    print(f"docs-gate: {len(doc_files())} files, {n_links} links, "
+          f"{n_compiled} python fences compiled, {n_exec} executed, "
+          f"{len(errors)} errors")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 test suite + batched-harness smoke on the synthetic job.
-# Exits nonzero on any test failure, any sequential/batched outcome
-# divergence (timeouts off OR on), or a missing speedup.
+# CI gate: tier-1 test suite + batched-harness smoke on the synthetic job
+# + docs gate.  Exits nonzero on any test failure, any sequential/batched
+# outcome divergence (timeouts off OR on, lockstep AND compacting
+# schedulers), a missing speedup, a broken doc link, or a doc code fence
+# that no longer runs against the current API.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,11 +16,17 @@ REPRO_NO_HYPOTHESIS=1 python -m pytest -q \
     tests/test_censored_properties.py tests/test_xla_wobble_regression.py \
     tests/test_core_acquisition.py
 
+# Docs gate: broken relative links + doc-embedded code executed against
+# the current API (scripts/check_docs.py), and examples stay importable.
+python scripts/check_docs.py
+python -m compileall -q examples benchmarks scripts
+
 PYTHONPATH=src python - <<'PY'
 import sys
 import time
 
-from repro.core import Settings, run_many, run_many_batched
+from repro.core import (RunRequest, Settings, run_many, run_many_batched,
+                        run_queue, run_queue_batched)
 from repro.jobs import synthetic_job
 
 job = synthetic_job(0)
@@ -29,21 +37,39 @@ for timeout in (False, True):
         s = Settings(policy=policy, la=la, k_gh=3, refit=refit,
                      timeout=timeout)
         seq = run_many(job, s, n_runs=25, seed=13)
-        bat = run_many_batched(job, s, n_runs=25, seed=13)
-        bad = sum(a.explored != b.explored or a.spent != b.spent
-                  or a.cno != b.cno or a.trajectory != b.trajectory
-                  or a.censored != b.censored
-                  or a.spend_trajectory != b.spend_trajectory
-                  for a, b in zip(seq, bat))
-        tag = "timeout" if timeout else "full-cost"
-        print(f"ci-smoke {policy}{la}/{refit}/{tag}: "
-              f"{bad}/25 mismatching runs")
-        failures += bad
+        for sched in ("lockstep", "compact"):
+            bat = run_many_batched(job, s, n_runs=25, seed=13,
+                                   scheduler=sched)
+            bad = sum(a.explored != b.explored or a.spent != b.spent
+                      or a.cno != b.cno or a.trajectory != b.trajectory
+                      or a.censored != b.censored
+                      or a.spend_trajectory != b.spend_trajectory
+                      for a, b in zip(seq, bat))
+            tag = "timeout" if timeout else "full-cost"
+            print(f"ci-smoke {policy}{la}/{refit}/{tag}/{sched}: "
+                  f"{bad}/25 mismatching runs")
+            failures += bad
         if timeout and policy == "lynceus":
             ncens = sum(len(o.censored) for o in seq)
             print(f"ci-smoke censoring exercised: {ncens} aborted probes")
             if ncens == 0:
                 failures += 1
+
+# Compaction-parity smoke on a mixed-job, mixed-budget queue: refill order
+# must never leak into outcomes.
+jobs = [synthetic_job(i, name=f"syn{i}") for i in range(2)]
+s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
+reqs = [RunRequest(jobs[r % 2], seed=400 + r,
+                   budget_b=6.0 if r % 3 == 0 else 1.5) for r in range(8)]
+qseq = run_queue(reqs, s)
+for slots in (3, 8):
+    qbat = run_queue_batched(reqs, s, lane_slots=slots)
+    bad = sum(a.explored != b.explored or a.spent != b.spent
+              or a.spend_trajectory != b.spend_trajectory
+              for a, b in zip(qseq, qbat))
+    print(f"ci-smoke queue slots={slots}: {bad}/{len(reqs)} "
+          f"mismatching runs")
+    failures += bad
 
 s = Settings(policy="la0", la=0, k_gh=3)
 run_many(job, s, n_runs=1, seed=999)            # warm compile caches

@@ -14,13 +14,14 @@ The paper's primary contribution.  Layout:
 from repro.core.space import DiscreteSpace, latin_hypercube_indices
 from repro.core.lookahead import (Settings, select_next, select_next_batched,
                                   make_selector, make_batch_selector)
-from repro.core.optimizer import (Outcome, optimize, run_many,
-                                  run_many_batched)
+from repro.core.optimizer import (Outcome, RunRequest, optimize, run_many,
+                                  run_many_batched, run_queue,
+                                  run_queue_batched)
 from repro.core import acquisition, metrics, trees
 
 __all__ = [
     "DiscreteSpace", "latin_hypercube_indices", "Settings", "select_next",
     "select_next_batched", "make_selector", "make_batch_selector", "Outcome",
-    "optimize", "run_many", "run_many_batched", "acquisition", "metrics",
-    "trees",
+    "RunRequest", "optimize", "run_many", "run_many_batched", "run_queue",
+    "run_queue_batched", "acquisition", "metrics", "trees",
 ]

@@ -14,6 +14,14 @@ Implements paper §3 exactly:
   ``conf = 0.99`` (Alg. 1 line 23).
 * Gauss-Hermite discretization of the predictive normal (paper §4.2 (3)):
   ``E[f(c)] ≈ sum_i w_i f(mu + sqrt(2)·sigma·xi_i)`` with normalized weights.
+
+Plus the two ingredients the paper's mechanisms lean on that are *not*
+textbook BO: timeout-censored learning (``censored_adjust`` /
+``timeout_cap`` — paper §3 mechanism i) and the cross-geometry determinism
+toolkit (``quantize_scores``, z-space ``budget_ok``) that keeps every
+batched backend bit-identical to the sequential oracle regardless of how
+many runs share a compiled program.  See docs/ARCHITECTURE.md for where
+each piece sits in the pipeline and docs/KNOBS.md for the knobs.
 """
 
 from __future__ import annotations

@@ -22,6 +22,17 @@ Two refit modes:
   root fit and only the leaf containing the speculated point is updated (an
   exact incremental mean update given the structure).  ~2 orders of magnitude
   cheaper; accuracy/latency trade-off is measured in benchmarks/table3.
+
+Batched entry points
+--------------------
+``select_next_batched`` selects for R independent runs at once and is the
+kernel every harness shares: the sequential oracle is its R = 1 special
+case (see ``make_selector``), the lockstep and lane-compacting episodes in
+``core/optimizer.py`` its R = chunk case.  Selection is *slot-indexed*:
+``u``/``t_max`` may be per-slot ([R, M] / [R]) so a mixed-job work queue
+can seat runs of different jobs — different unit prices and SLOs — in the
+same compiled program.  docs/KNOBS.md documents every ``Settings`` field;
+docs/ARCHITECTURE.md maps the whole selection pipeline onto the paper.
 """
 
 from __future__ import annotations
@@ -318,28 +329,38 @@ select_next = jax.jit(_select_next_impl, static_argnames=("s",))
 @functools.partial(jax.jit, static_argnames=("s",))
 def select_next_batched(keys, y, obs_mask, beta, points, left, thresholds, u,
                         t_max, s: Settings, cens=None):
-    """NextConfig for R independent runs at once (the batched-harness entry).
+    """NextConfig for R independent slots at once (the batched-harness entry).
 
     keys: [R, 2] PRNG keys; y: [R, M]; obs_mask: [R, M]; beta: [R];
     cens: [R, M] censoring mask or None (required iff ``s.timeout``).
-    Returns ([R] indices, [R] valid flags, batched diagnostics).  Per-lane
-    results are bitwise independent of R (each lane is the same elementwise/
+    Returns ([R] indices, [R] valid flags, batched diagnostics).  Per-slot
+    results are bitwise independent of R (each slot is the same elementwise/
     per-slice program), which is what lets the sequential oracle run as the
     R = 1 special case of this very kernel.
+
+    Slot indexing: ``u`` may be ``[M]`` (one job's unit prices, shared by
+    every slot — the historical layout, traced identically to the pre-slot
+    program) or ``[R, M]`` with ``t_max`` ``[R]`` (each slot carries its own
+    job's prices and SLO — the mixed-job work-queue layout, where a slot is
+    a *seat* that different jobs' runs occupy over time).  The space tensors
+    (points/left/thresholds) are always shared: every job in a queue must
+    live on one space geometry.
     """
+    per_slot_u = jnp.ndim(u) == 2
+    per_slot_t = jnp.ndim(t_max) == 1
+    if per_slot_u != per_slot_t:
+        raise ValueError("per-slot u ([R, M]) requires per-slot t_max ([R]) "
+                         "and vice versa")
 
-    if cens is None:
-        def one(k, y_r, m_r, b_r):
-            return _select_next_impl(k, y_r, m_r, b_r, points, left,
-                                     thresholds, u, t_max, s)
-
-        return jax.vmap(one)(keys, y, obs_mask, beta)
-
-    def one(k, y_r, m_r, b_r, c_r):
+    def one(k, y_r, m_r, b_r, c_r, u_r, t_r):
         return _select_next_impl(k, y_r, m_r, b_r, points, left, thresholds,
-                                 u, t_max, s, c_r)
+                                 u_r, t_r, s, c_r)
 
-    return jax.vmap(one)(keys, y, obs_mask, beta, cens)
+    return jax.vmap(one, in_axes=(0, 0, 0, 0,
+                                  None if cens is None else 0,
+                                  0 if per_slot_u else None,
+                                  0 if per_slot_t else None))(
+        keys, y, obs_mask, beta, cens, u, t_max)
 
 
 def space_arrays(space, unit_price: np.ndarray):

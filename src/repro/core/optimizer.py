@@ -1,4 +1,5 @@
-"""The Lynceus optimization loop (paper Alg. 1) and its baselines.
+"""The Lynceus optimization loop (paper Alg. 1), its baselines, and the
+batched execution backends that make figure-scale sweeps cheap.
 
 ``optimize`` drives one full optimization of a :class:`~repro.jobs.tables.
 JobTable` (the paper's simulation substrate): LHS bootstrap, then iterate
@@ -16,6 +17,27 @@ Policies
 
 All policies consume the budget identically (bootstrap included), so CNO/NEX
 comparisons are at parity of spend — exactly the paper's methodology (§5.2).
+
+Execution backends
+------------------
+Three backends run identical Alg. 1 semantics and are pinned bit-identical
+on audited configs (tests/test_batched_harness.py, scripts/ci.sh):
+
+* :func:`run_many` — the sequential oracle, one Python-driven run at a time;
+* :func:`run_many_batched` with ``scheduler="lockstep"`` — fixed lane
+  assignment, one jitted ``lax.while_loop`` per chunk
+  (:func:`_batched_episode`); a chunk ends when its *last* lane's budget
+  empties;
+* ``scheduler="compact"`` (default) / :func:`run_queue_batched` — the
+  lane-compacting work queue (:func:`_compacting_episode`): lanes are
+  *slots* that bank a finished run's state into run-indexed output buffers
+  and immediately load the next pending run from a device-side queue head,
+  so short runs never idle behind long ones.  Queues built from
+  :class:`RunRequest` entries may mix budgets and jobs (shared space
+  geometry required).
+
+See docs/ARCHITECTURE.md for the data-flow picture and the determinism
+contract, and docs/KNOBS.md for every tuning knob.
 """
 
 from __future__ import annotations
@@ -35,7 +57,8 @@ from repro.core.space import latin_hypercube_indices
 if TYPE_CHECKING:  # avoid the core <-> jobs import cycle at runtime
     from repro.jobs.tables import JobTable
 
-__all__ = ["Outcome", "optimize", "run_many", "run_many_batched"]
+__all__ = ["Outcome", "RunRequest", "optimize", "run_many",
+           "run_many_batched", "run_queue", "run_queue_batched"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -316,15 +339,29 @@ def run_many(job: JobTable, settings: lookahead.Settings, *, n_runs: int = 100,
     outcomes; keep this one as the reference the batched harness is audited
     against.  ``seeds``/``bootstraps`` override the derived per-run values
     (both length n_runs; ``seeds`` alone re-derives the bootstraps from it).
+    ``budget_b`` may be a scalar or a per-run sequence — tail-heavy sweeps
+    mix long- and short-budget runs in one call.
     """
     seeds, bootstraps = _resolve_runs(job, seed, n_runs, seeds, bootstraps)
+    budgets_b = _resolve_budget_b(budget_b, len(seeds))
     selector = None
     if settings.policy != "rnd":
         selector = lookahead.make_selector(
             job.space, job.unit_price, job.t_max, settings)
-    return [optimize(job, settings, budget_b=budget_b, seed=s, bootstrap=boot,
+    return [optimize(job, settings, budget_b=b, seed=s, bootstrap=boot,
                      selector=selector)
-            for s, boot in zip(seeds, bootstraps)]
+            for s, boot, b in zip(seeds, bootstraps, budgets_b)]
+
+
+def _resolve_budget_b(budget_b, n_runs: int) -> list[float]:
+    """Scalar -> broadcast; sequence -> validated per-run b multipliers."""
+    if np.ndim(budget_b) == 0:
+        return [float(budget_b)] * n_runs
+    budgets = [float(b) for b in budget_b]
+    if len(budgets) != n_runs:
+        raise ValueError(f"{n_runs} runs but {len(budgets)} budget_b values; "
+                         "pass a scalar or a matching sequence")
+    return budgets
 
 
 def _resolve_runs(job: JobTable, seed: int, n_runs: int, seeds, bootstraps):
@@ -342,6 +379,48 @@ def _resolve_runs(job: JobTable, seed: int, n_runs: int, seeds, bootstraps):
 # --------------------------------------------------------------------------- #
 # Batched, device-resident harness
 # --------------------------------------------------------------------------- #
+def _alg1_step(st, idx, c, t_run, u_at, valid, tau, s: lookahead.Settings,
+               lanes, m_dim):
+    """One masked Alg. 1 step on lane-stacked state — the piece both
+    episode bodies (:func:`_batched_episode`, :func:`_compacting_episode`)
+    share, factored out so the billing/censoring semantics cannot drift
+    between the lockstep baseline and the compacting scheduler.
+
+    ``st`` carries y/mask/beta/explored/n_exp/active (+ cens/cexpl/bexpl
+    when ``s.timeout``); ``idx``/``valid`` come from the caller's selection,
+    ``c``/``t_run``/``u_at`` are the per-lane table rows of the selected
+    configs (t_run/u_at/tau only consulted when ``s.timeout``).  Returns
+    the updated fields plus ``alive`` (Alg. 1 line 11: still active after
+    this step).
+    """
+    run = st["active"] & valid                          # Gamma empty -> stop
+    if s.policy == "bo":
+        # Cost-unaware greedy stops when its pick is unaffordable.
+        run = run & (c <= st["beta"])
+    if s.timeout:
+        # Abort at the predictive cap: bill τ·U, learn the lower bound.
+        cut = run & (t_run > tau)
+        billed = jnp.where(cut, tau * u_at, c)
+    else:
+        billed = c
+    hit = run[:, None] & (jnp.arange(m_dim)[None, :] == idx[:, None])
+    pos = jnp.minimum(st["n_exp"], m_dim - 1)
+    nxt = {"y": jnp.where(hit, billed[:, None], st["y"]),
+           "mask": st["mask"] | hit,
+           "beta": jnp.where(run, st["beta"] - billed, st["beta"]),
+           "explored": st["explored"].at[lanes, pos].set(
+               jnp.where(run, idx, st["explored"][lanes, pos])),
+           "n_exp": st["n_exp"] + run.astype(jnp.int32)}
+    if s.timeout:
+        nxt["cens"] = st["cens"] | (hit & cut[:, None])
+        nxt["cexpl"] = st["cexpl"].at[lanes, pos].set(
+            jnp.where(run, cut, st["cexpl"][lanes, pos]))
+        nxt["bexpl"] = st["bexpl"].at[lanes, pos].set(
+            jnp.where(run, billed, st["bexpl"][lanes, pos]))
+    alive = run & (nxt["beta"] > 0.0)                   # Alg. 1 line 11
+    return nxt, alive
+
+
 @functools.partial(jax.jit, static_argnames=("s",))
 def _batched_episode(keys, y, mask, beta, explored, n_exp, cens, cexpl,
                      bexpl, cost, runtime, points, left, thresholds, u, t_max,
@@ -378,35 +457,12 @@ def _batched_episode(keys, y, mask, beta, explored, n_exp, cens, cexpl,
             points, left, thresholds, u, t_max, s,
             st["cens"] if s.timeout else None)
         c = cost[idx]                                       # [R] f32
-        run = st["active"] & valid                          # Gamma empty -> stop
-        if s.policy == "bo":
-            # Cost-unaware greedy stops when its pick is unaffordable.
-            run = run & (c <= st["beta"])
-        if s.timeout:
-            # Abort at the predictive cap: bill τ·U, learn the lower bound.
-            cut = run & (runtime[idx] > diag["timeout"])
-            billed = jnp.where(cut, diag["timeout"] * u[idx], c)
-        else:
-            billed = c
-        hit = run[:, None] & (jnp.arange(m_dim)[None, :] == idx[:, None])
-        y = jnp.where(hit, billed[:, None], st["y"])
-        mask = st["mask"] | hit
-        beta = jnp.where(run, st["beta"] - billed, st["beta"])
-        pos = jnp.minimum(st["n_exp"], m_dim - 1)
-        explored = st["explored"].at[lanes, pos].set(
-            jnp.where(run, idx, st["explored"][lanes, pos]))
-        n_exp = st["n_exp"] + run.astype(jnp.int32)
-        active = run & (beta > 0.0)                         # Alg. 1 line 11
-        out = {"key": key, "y": y, "mask": mask, "beta": beta,
-               "explored": explored, "n_exp": n_exp, "active": active,
-               "steps": st["steps"] + 1}
-        if s.timeout:
-            out["cens"] = st["cens"] | (hit & cut[:, None])
-            out["cexpl"] = st["cexpl"].at[lanes, pos].set(
-                jnp.where(run, cut, st["cexpl"][lanes, pos]))
-            out["bexpl"] = st["bexpl"].at[lanes, pos].set(
-                jnp.where(run, billed, st["bexpl"][lanes, pos]))
-        return out
+        nxt, alive = _alg1_step(
+            st, idx, c, runtime[idx] if s.timeout else None,
+            u[idx] if s.timeout else None, valid,
+            diag["timeout"] if s.timeout else None, s, lanes, m_dim)
+        nxt.update(key=key, active=alive, steps=st["steps"] + 1)
+        return nxt
 
     st0 = {"key": keys, "y": y, "mask": mask, "beta": beta,
            "explored": explored, "n_exp": n_exp,
@@ -421,36 +477,396 @@ def _batched_episode(keys, y, mask, beta, explored, n_exp, cens, cexpl,
 
 
 def _auto_lane_chunk(job: JobTable, s: lookahead.Settings, n_runs: int) -> int:
-    """Bound the deepest speculative tensor (n_trees × M × M·k^la per lane)."""
+    """Slot-count sizing: bound the deepest speculative tensor
+    (n_trees × M × M·k^la per slot).  Used both as the lockstep chunk width
+    and as the compacting scheduler's seat count."""
     m = job.space.n_points
     states = m * (s.k_gh ** max(s.la, 0) if s.policy == "lynceus" else 1)
     budget_elems = 1.5e8
     return int(max(1, min(n_runs, budget_elems // (s.n_trees * m * states))))
 
 
+@dataclasses.dataclass(frozen=True)
+class RunRequest:
+    """One pending simulated optimization in a work queue.
+
+    ``bootstrap`` is derived from ``seed`` when None — the same
+    ``latin_hypercube_indices(space, N, default_rng(seed))`` derivation
+    :func:`optimize` performs, so a queue and the sequential oracle replay
+    identical bootstraps for the same seed (paper fairness protocol).
+    Queued jobs may differ per request as long as they share one space
+    geometry (points + thresholds); budgets may differ freely.
+    """
+
+    job: JobTable
+    seed: int
+    budget_b: float = 3.0
+    bootstrap: np.ndarray | None = None
+
+    def resolved_bootstrap(self) -> np.ndarray:
+        if self.bootstrap is not None:
+            return np.asarray(self.bootstrap)
+        return latin_hypercube_indices(
+            self.job.space, self.job.bootstrap_size(),
+            np.random.default_rng(self.seed))
+
+
+def _init_run_states(requests: list[RunRequest],
+                     settings: lookahead.Settings) -> dict:
+    """Host-side bootstrap replay for a batch of pending runs, float32 —
+    Alg. 1 lines 6-8, the exact arithmetic `optimize` performs before its
+    selection loop starts (including the constraint-cap censoring of
+    bootstrap runs).  Returns [R, ...] numpy/JAX initial-state arrays plus
+    the per-run budgets the outcome reconstruction needs.
+    """
+    r_tot = len(requests)
+    m = requests[0].job.space.n_points
+    y0 = np.zeros((r_tot, m), np.float32)
+    m0 = np.zeros((r_tot, m), bool)
+    c0 = np.zeros((r_tot, m), bool)
+    cx0 = np.zeros((r_tot, m), bool)
+    bx0 = np.zeros((r_tot, m), np.float32)
+    beta0 = np.zeros(r_tot, np.float32)
+    expl0 = np.full((r_tot, m), -1, np.int32)
+    n_exp0 = np.zeros(r_tot, np.int32)
+    budgets = np.zeros(r_tot, np.float64)
+    for r, req in enumerate(requests):
+        host = req.job.host_view()
+        tau_boot = _boot_tau(req.job, settings)
+        budget = req.job.budget(req.budget_b)
+        budgets[r] = budget
+        beta0[r] = np.float32(budget)
+        boot = req.resolved_bootstrap()
+        for j, i in enumerate(boot):
+            i = int(i)
+            cut = bool(host.runtime[i] > tau_boot)
+            billed = (np.float32(tau_boot * host.unit_price[i]) if cut
+                      else host.cost[i])
+            y0[r, i] = billed
+            m0[r, i] = True
+            c0[r, i] = cut
+            cx0[r, j] = cut
+            bx0[r, j] = billed
+            beta0[r] = beta0[r] - billed
+            expl0[r, j] = i
+        n_exp0[r] = len(boot)
+    keys0 = jnp.stack([jax.random.PRNGKey(req.seed) for req in requests])
+    return {"keys": keys0, "y": y0, "mask": m0, "beta": beta0,
+            "explored": expl0, "n_exp": n_exp0, "cens": c0, "cexpl": cx0,
+            "bexpl": bx0, "budgets": budgets}
+
+
+def _reconstruct_outcome(job: JobTable, settings: lookahead.Settings,
+                         budget: float, explored: list[int],
+                         cflags: list[bool], billed, beta_final: float,
+                         sel_s: float) -> Outcome:
+    """Post-hoc :class:`Outcome` from a recorded exploration trace — pure
+    table math, identical to what the sequential loop computes inline.
+
+    ``spend_trajectory`` replays the run's float32 budget subtraction
+    host-side — the same op order the episode executed — so it is
+    bit-identical to the sequential oracle's inline bookkeeping.
+    """
+    rec = _recommend(job, explored, cflags)
+    trajectory = [_trajectory_point(job, explored[:j + 1], cflags[:j + 1])
+                  for j in range(len(explored))]
+    beta_r = np.float32(budget)
+    spend_traj = []
+    for b in billed:
+        beta_r = np.float32(beta_r - b)
+        spend_traj.append(float(budget - beta_r))
+    return Outcome(
+        job=job.name, policy=settings.policy, recommended=rec,
+        cno=job.cno(rec), nex=len(explored),
+        spent=float(budget - beta_final), budget=float(budget),
+        found_optimum=(rec == job.optimum_index),
+        explored=tuple(explored), select_seconds=sel_s,
+        trajectory=tuple(trajectory),
+        censored=tuple(i for i, f in zip(explored, cflags) if f),
+        spend_trajectory=tuple(spend_traj))
+
+
+# --------------------------------------------------------------------------- #
+# Lane-compacting work-queue scheduler
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("s", "l_dim"))
+def _compacting_episode(queue, job_ids, cost, runtime, points, left,
+                        thresholds, u, t_max, s: lookahead.Settings,
+                        l_dim: int):
+    """Drain a queue of R pending runs through ``l_dim`` lane *slots*.
+
+    One ``lax.while_loop``; each iteration selects for every slot at once
+    (same vmapped kernel as the lockstep episode) and applies Alg. 1's
+    budget accounting and stopping rule as masked updates.  The difference
+    from :func:`_batched_episode`: a slot holds a *seat*, not a fixed run.
+    When its run terminates (Gamma empty, unaffordable BO pick, or budget
+    empty), the slot scatters the run's final state into the [R]-indexed
+    output buffers and immediately gathers the next pending run's initial
+    state from the device-resident queue head — fixed-width selector
+    programs throughout, so the loop never recompiles as lanes repack.  The
+    loop exits only when the queue is drained *and* every slot is idle.
+
+    ``queue``: dict of [R, ...] initial run states (bootstrap prefix already
+    replayed); timeout keys (cens/cexpl/bexpl) are only consulted when
+    ``s.timeout`` — the no-timeout program carries none of them.
+
+    ``job_ids`` is None for a single-job queue (``cost``/``runtime``/``u``
+    are [M] rows and ``t_max`` a scalar, shared by every slot — the same
+    selector geometry as the lockstep episode).  For a mixed-job queue it
+    is [R] int32 into [J, M]-stacked tables, and each slot gathers its
+    *current* run's job row every iteration (slot-indexed selection: per-slot
+    ``u``/``t_max``).
+
+    Refill order is deterministic (queue order by slot index) but — because
+    every run's PRNG chain, budget arithmetic and decision pipeline are
+    functions of its own state only — outcomes are independent of it; the
+    caller re-keys results by run id, never by slot.
+    """
+    r_tot, m_dim = queue["y"].shape
+    lanes = jnp.arange(l_dim)
+
+    def cond(st):
+        return st["active"].any()
+
+    def body(st):
+        split = jax.vmap(jax.random.split)(st["key"])       # [L, 2, 2]
+        key, sub = split[:, 0], split[:, 1]
+        rid_safe = jnp.maximum(st["rid"], 0)
+        if job_ids is None:
+            u_l, t_l = u, t_max
+        else:
+            jid = job_ids[rid_safe]                         # [L]
+            u_l, t_l = u[jid], t_max[jid]                   # [L, M], [L]
+        idx, valid, diag = lookahead.select_next_batched(
+            sub, st["y"], st["mask"], jnp.maximum(st["beta"], 0.0),
+            points, left, thresholds, u_l, t_l, s,
+            st["cens"] if s.timeout else None)
+        if job_ids is None:
+            c = cost[idx]
+            t_run = runtime[idx] if s.timeout else None
+            u_at = u[idx] if s.timeout else None
+        else:
+            pick = lambda tab: jnp.take_along_axis(
+                tab[jid], idx[:, None], axis=1)[:, 0]
+            c = pick(cost)
+            t_run = pick(runtime) if s.timeout else None
+            u_at = pick(u) if s.timeout else None
+        step, alive = _alg1_step(
+            st, idx, c, t_run, u_at, valid,
+            diag["timeout"] if s.timeout else None, s, lanes, m_dim)
+
+        # A slot's run terminated this step -> bank it by run id.
+        finished = st["active"] & ~alive
+        tgt = jnp.where(finished, rid_safe, r_tot)          # OOB rows dropped
+        out = {"out_beta": st["out_beta"].at[tgt].set(step["beta"],
+                                                      mode="drop"),
+               "out_nexp": st["out_nexp"].at[tgt].set(step["n_exp"],
+                                                      mode="drop"),
+               "out_expl": st["out_expl"].at[tgt].set(step["explored"],
+                                                      mode="drop")}
+        if s.timeout:
+            out["out_cexpl"] = st["out_cexpl"].at[tgt].set(step["cexpl"],
+                                                           mode="drop")
+            out["out_bexpl"] = st["out_bexpl"].at[tgt].set(step["bexpl"],
+                                                           mode="drop")
+
+        # Refill freed slots from the queue head, in slot order: the k-th
+        # finished slot (k = rank among finished) takes run qhead + k.
+        rank = jnp.cumsum(finished.astype(jnp.int32)) - 1
+        cand = st["qhead"] + rank
+        got = finished & (cand < r_tot)
+        src = jnp.where(got, cand, 0)
+        fill = lambda init, cur: jnp.where(
+            got.reshape((l_dim,) + (1,) * (cur.ndim - 1)), init[src], cur)
+        nxt = {"key": fill(queue["keys"], key),
+               "rid": jnp.where(got, cand,
+                                jnp.where(finished, -1, st["rid"])),
+               "active": alive | got,
+               "qhead": st["qhead"] + got.sum(dtype=jnp.int32),
+               "steps": st["steps"] + 1}
+        for k, v in step.items():
+            nxt[k] = fill(queue[k], v)
+        nxt.update(out)
+        return nxt
+
+    load = lambda a: jnp.asarray(a)[:l_dim]
+    st0 = {"key": load(queue["keys"]), "y": load(queue["y"]),
+           "mask": load(queue["mask"]), "beta": load(queue["beta"]),
+           "explored": load(queue["explored"]), "n_exp": load(queue["n_exp"]),
+           "rid": jnp.arange(l_dim, dtype=jnp.int32),
+           "active": jnp.ones((l_dim,), bool),
+           "qhead": jnp.int32(l_dim), "steps": jnp.int32(0),
+           "out_beta": jnp.zeros((r_tot,), jnp.float32),
+           "out_nexp": jnp.zeros((r_tot,), jnp.int32),
+           "out_expl": jnp.full((r_tot, m_dim), -1, jnp.int32)}
+    if s.timeout:
+        st0["cens"] = load(queue["cens"])
+        st0["cexpl"] = load(queue["cexpl"])
+        st0["bexpl"] = load(queue["bexpl"])
+        st0["out_cexpl"] = jnp.zeros((r_tot, m_dim), bool)
+        st0["out_bexpl"] = jnp.zeros((r_tot, m_dim), jnp.float32)
+    st = jax.lax.while_loop(cond, body, st0)
+    base = (st["out_beta"], st["out_expl"], st["out_nexp"], st["steps"])
+    if s.timeout:
+        return base + (st["out_cexpl"], st["out_bexpl"])
+    return base
+
+
+def _check_shared_space(jobs: list[JobTable]) -> None:
+    ref = jobs[0].space
+    for job in jobs[1:]:
+        if (job.space.n_points != ref.n_points
+                or not np.array_equal(job.space.points, ref.points)
+                or not np.array_equal(job.space.thresholds, ref.thresholds)):
+            raise ValueError(
+                f"queued jobs must share one space geometry; {job.name} "
+                f"differs from {jobs[0].name} (fixed-width selector programs "
+                "cannot mix spaces)")
+
+
+def run_queue(requests: list[RunRequest],
+              settings: lookahead.Settings) -> list[Outcome]:
+    """Sequential oracle over a heterogeneous work queue — one
+    :func:`optimize` call per request, selectors cached per job.  The
+    reference :func:`run_queue_batched` is audited against."""
+    selectors: dict[int, Callable] = {}
+    outs = []
+    for req in requests:
+        sel = None
+        if settings.policy != "rnd":
+            sel = selectors.get(id(req.job))
+            if sel is None:
+                sel = lookahead.make_selector(
+                    req.job.space, req.job.unit_price, req.job.t_max,
+                    settings)
+                selectors[id(req.job)] = sel
+        outs.append(optimize(req.job, settings, budget_b=req.budget_b,
+                             seed=req.seed,
+                             bootstrap=req.resolved_bootstrap(),
+                             selector=sel))
+    return outs
+
+
+def run_queue_batched(requests: list[RunRequest],
+                      settings: lookahead.Settings, *,
+                      lane_slots: int | None = None) -> list[Outcome]:
+    """Drain a mixed-budget, mixed-job run queue through compacting lanes.
+
+    The device-resident counterpart of :func:`run_queue`: R pending runs,
+    ``lane_slots`` seats, one jitted episode (see
+    :func:`_compacting_episode`).  Jobs may differ per request as long as
+    they share one space geometry; budgets may differ freely — this is the
+    tail-heavy-sweep entry point, where lockstep lanes would idle behind
+    the longest run.  Outcomes are returned in request order and are
+    bit-identical to :func:`run_queue` on the audited configurations (same
+    contract, and the same caveats, as :func:`run_many_batched`).
+    """
+    if not requests:
+        return []
+    if settings.policy == "rnd":
+        return run_queue(requests, settings)
+    jobs: list[JobTable] = []
+    for req in requests:
+        if not any(req.job is j for j in jobs):
+            jobs.append(req.job)
+    _check_shared_space(jobs)
+    job0 = jobs[0]
+    r_tot = len(requests)
+    if lane_slots is None:
+        lane_slots = _auto_lane_chunk(job0, settings, r_tot)
+    lane_slots = max(1, min(lane_slots, r_tot))
+
+    queue = _init_run_states(requests, settings)
+    budgets = queue.pop("budgets")
+    points, left, thresholds, u0 = lookahead.space_arrays(
+        job0.space, job0.unit_price)
+    if len(jobs) == 1:
+        # Single-table mode: shared [M] rows, the lockstep selector geometry.
+        job_ids = None
+        dev = job0.device_view()
+        cost_t, runtime_t, u_t = dev.cost, dev.runtime, u0
+        tmax_t = jnp.float32(job0.t_max)
+    else:
+        index_of = {id(j): k for k, j in enumerate(jobs)}
+        job_ids = jnp.asarray([index_of[id(req.job)] for req in requests],
+                              jnp.int32)
+        devs = [j.device_view() for j in jobs]
+        cost_t = jnp.stack([d.cost for d in devs])
+        runtime_t = jnp.stack([d.runtime for d in devs])
+        u_t = jnp.stack([d.unit_price for d in devs])
+        tmax_t = jnp.asarray([j.t_max for j in jobs], jnp.float32)
+
+    t0 = time.perf_counter()
+    res = jax.block_until_ready(_compacting_episode(
+        {k: jnp.asarray(v) for k, v in queue.items()
+         if settings.timeout or k not in ("cens", "cexpl", "bexpl")},
+        job_ids, cost_t, runtime_t if settings.timeout else None, points,
+        left, thresholds, u_t, tmax_t, settings, lane_slots))
+    beta_f, expl_f, n_exp_f, steps = res[:4]
+    cexpl_f = np.asarray(res[4]) if settings.timeout else None
+    bexpl_f = np.asarray(res[5]) if settings.timeout else None
+    wall = time.perf_counter() - t0
+    # Amortized wall time per selection (steps x slots selections per
+    # episode), comparable with the sequential oracle's per-call mean.
+    # Caveats: includes the queue refill machinery, and a cold call folds
+    # in XLA compilation.
+    sel_s = wall / max(int(steps) * lane_slots, 1)
+
+    beta_f = np.asarray(beta_f)
+    expl_f = np.asarray(expl_f)
+    n_exp_f = np.asarray(n_exp_f)
+    outs: list[Outcome] = []
+    for r, req in enumerate(requests):
+        explored = [int(i) for i in expl_f[r, :n_exp_f[r]]]
+        if settings.timeout:
+            cflags = [bool(f) for f in cexpl_f[r, :n_exp_f[r]]]
+            billed = bexpl_f[r, :n_exp_f[r]]
+        else:
+            cflags = [False] * len(explored)
+            billed = req.job.host_view().cost[explored]
+        outs.append(_reconstruct_outcome(
+            req.job, settings, float(budgets[r]), explored, cflags, billed,
+            beta_f[r], sel_s))
+    return outs
+
+
 def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
                      n_runs: int = 100, budget_b: float = 3.0, seed: int = 0,
-                     seeds=None, bootstraps=None,
-                     lane_chunk: int | None = None) -> list[Outcome]:
-    """Batched ``run_many``: R device-resident runs advanced in lockstep.
+                     seeds=None, bootstraps=None, lane_chunk: int | None = None,
+                     scheduler: str = "compact") -> list[Outcome]:
+    """Batched ``run_many``: R device-resident runs on shared lane slots.
 
-    Each lane executes the exact Alg. 1 semantics of the sequential oracle —
+    Each run executes the exact Alg. 1 semantics of the sequential oracle —
     identical PRNG key schedule, float32 budget accounting, bootstrap replay
     and stopping rule — but the whole sweep is a handful of compiled XLA
     programs instead of a Python loop with host<->device sync points per
     exploration step.
 
+    Two schedulers share that contract:
+
+    * ``"compact"`` (default) — the lane-compacting work queue
+      (:func:`_compacting_episode`): runs are queued, ``lane_chunk`` slots
+      drain the queue, and a slot whose run terminates immediately loads the
+      next pending run inside the same ``lax.while_loop``.  The episode ends
+      when the queue is drained and every slot is idle, so short runs never
+      hold the device hostage to the longest lane — the tail-heavy win is
+      measured in ``benchmarks/batched_vs_sequential.py``.
+    * ``"lockstep"`` — the PR-1 fixed-assignment episode
+      (:func:`_batched_episode`): each chunk of ``lane_chunk`` runs advances
+      in lockstep until the *last* lane's budget empties.  Kept as the
+      refill-free baseline the compacting scheduler is audited against.
+
     Equivalence contract: outcomes are bit-identical to :func:`run_many` on
     the audited configurations (the synthetic job is exact across thousands
-    of runs for every policy; see tests/test_batched_harness.py and
-    scripts/ci.sh).  XLA recompiles the selector per batch geometry and its
-    fusion choices wobble scores in the last ulps; every *decision* in the
-    pipeline is hardened against that (z-space budget filter,
-    cancellation-free split gains, quantized argmaxes — see
-    ``acquisition.quantize_scores``), but on larger spaces a sub-percent
-    fraction of runs can still step onto a near-tied, statistically
-    equivalent branch.  Use ``run_many`` when strict per-run reproduction
-    against the oracle is required.
+    of runs for every policy and both schedulers; see
+    tests/test_batched_harness.py and scripts/ci.sh).  XLA recompiles the
+    selector per batch geometry and its fusion choices wobble scores in the
+    last ulps; every *decision* in the pipeline is hardened against that
+    (z-space budget filter, cancellation-free split gains, quantized
+    argmaxes — see ``acquisition.quantize_scores``), but on larger spaces a
+    sub-percent fraction of runs can still step onto a near-tied,
+    statistically equivalent branch.  Use ``run_many`` when strict per-run
+    reproduction against the oracle is required.
 
     Timeout-censored exploration (``settings.timeout``) holds the same
     contract: the censoring compare ``t_run > τ`` and the billed bound
@@ -463,72 +879,59 @@ def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
     ``rnd`` has no model to amortize and is driven by host-side numpy RNG, so
     it falls through to the sequential path.  ``lane_chunk`` bounds how many
     runs share one compiled episode (memory control on big spaces); the
-    default is sized from the lookahead state tensor.  ``trajectory``, CNO
+    default is sized from the lookahead state tensor.  ``budget_b`` may be a
+    scalar or a per-run sequence (mixed-budget sweeps).  ``trajectory``, CNO
     and NEX are reconstructed post hoc from the recorded exploration order —
     pure table math, identical to what the sequential loop computes inline.
     """
+    if scheduler not in ("compact", "lockstep"):
+        raise ValueError(f"unknown scheduler {scheduler!r}; "
+                         "expected 'compact' or 'lockstep'")
     if settings.policy == "rnd":
         return run_many(job, settings, n_runs=n_runs, budget_b=budget_b,
                         seed=seed, seeds=seeds, bootstraps=bootstraps)
     seeds, bootstraps = _resolve_runs(job, seed, n_runs, seeds, bootstraps)
+    budgets_b = _resolve_budget_b(budget_b, len(seeds))
     n_runs = len(seeds)
+    requests = [RunRequest(job, s, b, boot)
+                for s, b, boot in zip(seeds, budgets_b, bootstraps)]
     if lane_chunk is None:
         lane_chunk = _auto_lane_chunk(job, settings, n_runs)
+    if scheduler == "compact":
+        return run_queue_batched(requests, settings, lane_slots=lane_chunk)
 
     m = job.space.n_points
-    budget = job.budget(budget_b)
     host = job.host_view()
     dev = job.device_view()
     points, left, thresholds, u = lookahead.space_arrays(
         job.space, job.unit_price)
     t_max32 = jnp.float32(job.t_max)
-    tau_boot = _boot_tau(job, settings)
 
     outs: list[Outcome] = []
     for lo in range(0, n_runs, lane_chunk):
-        chunk_seeds = seeds[lo:lo + lane_chunk]
-        chunk_boots = bootstraps[lo:lo + lane_chunk]
-        r_dim = len(chunk_seeds)
-
-        # Host-side bootstrap replay, float32 — Alg. 1 lines 6-8, the exact
-        # arithmetic `optimize` performs before its selection loop starts
-        # (including the constraint-cap censoring of bootstrap runs).
-        y0 = np.zeros((r_dim, m), np.float32)
-        m0 = np.zeros((r_dim, m), bool)
-        c0 = np.zeros((r_dim, m), bool)
-        cx0 = np.zeros((r_dim, m), bool)
-        bx0 = np.zeros((r_dim, m), np.float32)
-        beta0 = np.full(r_dim, np.float32(budget), np.float32)
-        expl0 = np.full((r_dim, m), -1, np.int32)
-        for r, boot in enumerate(chunk_boots):
-            for j, i in enumerate(boot):
-                i = int(i)
-                cut = bool(host.runtime[i] > tau_boot)
-                billed = (np.float32(tau_boot * host.unit_price[i]) if cut
-                          else host.cost[i])
-                y0[r, i] = billed
-                m0[r, i] = True
-                c0[r, i] = cut
-                cx0[r, j] = cut
-                bx0[r, j] = billed
-                beta0[r] = beta0[r] - billed
-                expl0[r, j] = i
-        keys0 = jnp.stack([jax.random.PRNGKey(s) for s in chunk_seeds])
-        n_exp0 = np.array([len(b) for b in chunk_boots], np.int32)
+        chunk = requests[lo:lo + lane_chunk]
+        r_dim = len(chunk)
+        st = _init_run_states(chunk, settings)
+        budgets = st["budgets"]
 
         t0 = time.perf_counter()
         res = jax.block_until_ready(
-            _batched_episode(keys0, jnp.asarray(y0), jnp.asarray(m0),
-                             jnp.asarray(beta0), jnp.asarray(expl0),
-                             jnp.asarray(n_exp0),
-                             jnp.asarray(c0) if settings.timeout else None,
-                             jnp.asarray(cx0) if settings.timeout else None,
-                             jnp.asarray(bx0) if settings.timeout else None,
+            _batched_episode(st["keys"], jnp.asarray(st["y"]),
+                             jnp.asarray(st["mask"]),
+                             jnp.asarray(st["beta"]),
+                             jnp.asarray(st["explored"]),
+                             jnp.asarray(st["n_exp"]),
+                             jnp.asarray(st["cens"]) if settings.timeout
+                             else None,
+                             jnp.asarray(st["cexpl"]) if settings.timeout
+                             else None,
+                             jnp.asarray(st["bexpl"]) if settings.timeout
+                             else None,
                              dev.cost,
                              dev.runtime if settings.timeout else None,
                              points, left, thresholds, u, t_max32, settings))
         beta_f, expl_f, n_exp_f, steps = res[:4]
-        cexpl_f = np.asarray(res[4]) if settings.timeout else cx0
+        cexpl_f = np.asarray(res[4]) if settings.timeout else st["cexpl"]
         bexpl_f = np.asarray(res[5]) if settings.timeout else None
         wall = time.perf_counter() - t0
         # Amortized wall time per selection (steps x lanes selections per
@@ -545,25 +948,7 @@ def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
             cflags = [bool(f) for f in cexpl_f[r, :n_exp_f[r]]]
             billed = (bexpl_f[r, :n_exp_f[r]] if bexpl_f is not None
                       else host.cost[explored])
-            rec = _recommend(job, explored, cflags)
-            trajectory = [_trajectory_point(job, explored[:j + 1],
-                                            cflags[:j + 1])
-                          for j in range(len(explored))]
-            # Replay the lane's float32 budget subtraction host-side — the
-            # same op order the episode executed — so spend_trajectory is
-            # bit-identical to the sequential oracle's inline bookkeeping.
-            beta_r = np.float32(budget)
-            spend_traj = []
-            for b in billed:
-                beta_r = np.float32(beta_r - b)
-                spend_traj.append(float(budget - beta_r))
-            outs.append(Outcome(
-                job=job.name, policy=settings.policy, recommended=rec,
-                cno=job.cno(rec), nex=len(explored),
-                spent=float(budget - beta_f[r]), budget=float(budget),
-                found_optimum=(rec == job.optimum_index),
-                explored=tuple(explored), select_seconds=sel_s,
-                trajectory=tuple(trajectory),
-                censored=tuple(i for i, f in zip(explored, cflags) if f),
-                spend_trajectory=tuple(spend_traj)))
+            outs.append(_reconstruct_outcome(
+                job, settings, float(budgets[r]), explored, cflags, billed,
+                beta_f[r], sel_s))
     return outs

@@ -10,9 +10,12 @@ synthetic job (audited clean across thousands of runs; see
 import numpy as np
 import pytest
 
-from repro.core import Settings, run_many, run_many_batched
+from repro.core import (RunRequest, Settings, run_many, run_many_batched,
+                        run_queue, run_queue_batched)
 from repro.core.optimizer import _per_run_bootstraps, _per_run_seeds
 from repro.jobs import synthetic_job
+
+SCHEDULERS = ("lockstep", "compact")
 
 POLICIES = [
     ("bo", 0, "exact"),
@@ -47,16 +50,94 @@ def test_batched_matches_sequential_bit_exact(policy, la, refit):
     _assert_outcomes_equal(seq, bat)
 
 
-def test_lane_chunking_does_not_change_outcomes():
-    """Chunked episodes (different compiled batch widths) agree with the
-    oracle — the decision pipeline is geometry-hardened."""
+@pytest.mark.parametrize("timeout", [False, True])
+def test_refill_order_invariance(timeout):
+    """The refill-order invariance pin: the same run set under the
+    sequential oracle, the lockstep scheduler, and the compacting scheduler
+    — and across lane-chunk/slot counts, i.e. across compiled batch widths
+    AND refill orders — yields bit-identical per-run Outcomes, including
+    ``spend_trajectory``.  With one slot the compacting episode degenerates
+    to fully serial draining; with seven, to lockstep-like occupancy; three
+    forces mid-episode refills in arbitrary interleavings."""
     job = synthetic_job(0)
-    s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
+    s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen",
+                 timeout=timeout)
     seq = run_many(job, s, n_runs=7, budget_b=3.0, seed=4)
-    for chunk in (1, 3, 7):
-        bat = run_many_batched(job, s, n_runs=7, budget_b=3.0, seed=4,
-                               lane_chunk=chunk)
+    if timeout:
+        assert any(o.censored for o in seq)
+    for sched in SCHEDULERS:
+        for chunk in (1, 3, 7):
+            bat = run_many_batched(job, s, n_runs=7, budget_b=3.0, seed=4,
+                                   lane_chunk=chunk, scheduler=sched)
+            _assert_outcomes_equal(seq, bat)
+
+
+def test_mixed_budget_parity():
+    """Per-run ``budget_b`` (the tail-heavy sweep shape): both schedulers
+    reproduce the oracle bit-exactly, and each Outcome carries its own B."""
+    job = synthetic_job(1)
+    s = Settings(policy="la0", la=0, k_gh=2)
+    budgets = [1.0, 6.0, 1.5, 8.0, 1.0]
+    seq = run_many(job, s, n_runs=5, budget_b=budgets, seed=2)
+    assert [o.budget for o in seq] == [job.budget(b) for b in budgets]
+    for sched in SCHEDULERS:
+        bat = run_many_batched(job, s, n_runs=5, budget_b=budgets, seed=2,
+                               scheduler=sched)
         _assert_outcomes_equal(seq, bat)
+    bat = run_many_batched(job, s, n_runs=5, budget_b=budgets, seed=2,
+                           scheduler="compact", lane_chunk=2)
+    _assert_outcomes_equal(seq, bat)
+
+
+def test_budget_b_length_mismatch_rejected():
+    job = synthetic_job(0)
+    with pytest.raises(ValueError, match="budget_b"):
+        run_many(job, Settings(policy="la0"), n_runs=3, budget_b=[1.0, 2.0])
+
+
+@pytest.mark.parametrize("timeout", [False, True])
+def test_mixed_job_queue_matches_sequential(timeout):
+    """A mixed-job, mixed-budget work queue (slot-indexed selection: every
+    slot carries its current run's unit prices and SLO) drains to the same
+    per-run Outcomes as running each request through the oracle — in
+    request order, regardless of slot count / refill interleaving."""
+    jobs = [synthetic_job(i, name=f"syn{i}") for i in range(3)]
+    s = Settings(policy="lynceus", la=1, k_gh=2, refit="frozen",
+                 timeout=timeout)
+    reqs = [RunRequest(jobs[r % 3], seed=100 + r,
+                       budget_b=5.0 if r % 3 == 0 else 1.5)
+            for r in range(8)]
+    seq = run_queue(reqs, s)
+    assert [o.job for o in seq] == [q.job.name for q in reqs]
+    for slots in (2, 8):
+        bat = run_queue_batched(reqs, s, lane_slots=slots)
+        _assert_outcomes_equal(seq, bat)
+        assert [o.job for o in bat] == [q.job.name for q in reqs]
+
+
+def test_queue_rejects_mismatched_spaces():
+    a = synthetic_job(0)
+    b = synthetic_job(0, n_a=3, n_b=3)
+    with pytest.raises(ValueError, match="space geometry"):
+        run_queue_batched([RunRequest(a, 1), RunRequest(b, 2)],
+                          Settings(policy="la0", k_gh=2))
+
+
+def test_unknown_scheduler_rejected():
+    with pytest.raises(ValueError, match="scheduler"):
+        run_many_batched(synthetic_job(0), Settings(policy="la0"),
+                         n_runs=2, scheduler="nope")
+
+
+def test_more_slots_than_runs():
+    """lane_chunk above the queue length clamps instead of tracing dead
+    slots; outcomes unchanged."""
+    job = synthetic_job(2)
+    s = Settings(policy="la0", la=0, k_gh=2)
+    seq = run_many(job, s, n_runs=2, seed=3)
+    bat = run_many_batched(job, s, n_runs=2, seed=3, lane_chunk=64,
+                           scheduler="compact")
+    _assert_outcomes_equal(seq, bat)
 
 
 def test_explicit_seeds_and_bootstraps_respected():
@@ -99,19 +180,6 @@ def test_timeout_batched_matches_sequential_bit_exact(policy, la, refit):
         if len(o.censored) < o.nex:     # degenerate all-censored runs fall
             assert o.recommended not in o.censored   # back to table cost
         assert o.spent <= o.budget + float(job.cost.max()) + 1e-6
-
-
-def test_timeout_lane_chunking_does_not_change_outcomes():
-    """Chunked episodes compile per batch width; censoring decisions and
-    billing must not depend on how many lanes share a program."""
-    job = synthetic_job(0)
-    s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen", timeout=True)
-    seq = run_many(job, s, n_runs=7, budget_b=3.0, seed=4)
-    assert any(o.censored for o in seq)
-    for chunk in (1, 3, 7):
-        bat = run_many_batched(job, s, n_runs=7, budget_b=3.0, seed=4,
-                               lane_chunk=chunk)
-        _assert_outcomes_equal(seq, bat)
 
 
 def test_timeout_cuts_cost_per_exploration():
