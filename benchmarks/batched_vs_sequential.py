@@ -12,7 +12,7 @@ budget) cell.  Two sections:
   drained by the compacting scheduler vs the lockstep baseline, which must
   hold every lane until its slowest run finishes and cannot mix jobs in one
   episode.  Outcomes must match run for run between the two schedulers
-  (refill order never changes results — see ``_compacting_episode``); the
+  (refill order never changes results — see ``_episode_segment``); the
   win is aggregate throughput, gated at >=1.5x.
 """
 
@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import csv_line, write_json
+from benchmarks.common import csv_line, outcomes_equal, write_json
 from repro.core import (RunRequest, Settings, run_many, run_many_batched,
                         run_queue_batched)
 from repro.jobs import synthetic_job
@@ -34,13 +34,6 @@ GRID = [("bo", 0, "exact"), ("la0", 0, "exact"), ("lynceus", 1, "frozen"),
 TAIL_SHORT_B = 1.0
 TAIL_LONG_B = 8.0
 TAIL_RATIO = 5
-
-
-def _outcomes_equal(a, b):
-    return (a.explored == b.explored and a.recommended == b.recommended
-            and a.cno == b.cno and a.spent == b.spent and a.nex == b.nex
-            and a.trajectory == b.trajectory
-            and a.spend_trajectory == b.spend_trajectory)
 
 
 def parity_and_speedup(n, out):
@@ -59,7 +52,7 @@ def parity_and_speedup(n, out):
         bat = run_many_batched(job, s, n_runs=n, seed=5)
         t_bat = time.perf_counter() - t0
 
-        mismatches = sum(not _outcomes_equal(a, b) for a, b in zip(seq, bat))
+        mismatches = sum(not outcomes_equal(a, b) for a, b in zip(seq, bat))
         tag = f"{policy}{la}_{refit}"
         out[tag] = {"runs": n, "seconds_sequential": t_seq,
                     "seconds_batched": t_bat, "speedup": t_seq / t_bat,
@@ -130,7 +123,7 @@ def tail_heavy(n_jobs, runs_per_job, lane_slots, out):
     t_comp = time.perf_counter() - t0
 
     # Lockstep groups are per job in queue order, so outcomes align 1:1.
-    drift = sum(not _outcomes_equal(a, b) for a, b in zip(lock, comp))
+    drift = sum(not outcomes_equal(a, b) for a, b in zip(lock, comp))
     speedup = t_lock / t_comp
     nex_total = sum(o.nex for o in comp)
     out["tailheavy"] = {

@@ -3,7 +3,8 @@
 Every figure pulls from one memoized outcome store, so e.g. Fig 4/6/7 reuse
 the same simulated optimizations (the paper does the same: one experiment,
 several views).  Cache key = (dataset, job, policy, la, refit, b, n_runs,
-backend).
+backend) — where backend carries the scheduler (batched) or the segment/
+service knobs (stream), so no backend is ever served another's files.
 """
 
 from __future__ import annotations
@@ -13,7 +14,8 @@ import pathlib
 
 import numpy as np
 
-from repro.core import Settings, metrics, run_many, run_many_batched
+from repro.core import (RunRequest, Settings, metrics, run_many,
+                        run_many_batched)
 from repro.jobs import cherrypick_jobs, scout_jobs, tensorflow_jobs
 
 CACHE = pathlib.Path("results/benchmarks/cache")
@@ -24,11 +26,26 @@ POLICY_SET = [("rnd", 0), ("bo", 0), ("la0", 0), ("lynceus", 1),
 
 # Figure sweeps run on the batched device-resident harness by default; flip
 # to "sequential" (benchmarks.run --sequential) to audit any figure against
-# the one-run-at-a-time oracle.
+# the one-run-at-a-time oracle, or to "stream" (--stream) to audit the
+# streaming tuning service end to end.
 DEFAULT_BACKEND = "batched"
 # Which batched scheduler drains the sweep: "compact" (lane-compacting work
 # queue, default) or "lockstep" (fixed lanes; benchmarks.run --scheduler).
 DEFAULT_SCHEDULER = "compact"
+# Segment/service knobs the "stream" backend sweeps run under.  Part of the
+# stream cache key: pacing must never alias across knob settings (the whole
+# point of a --stream audit is that it doesn't matter — serving a compact
+# cache file, or a differently paced stream file, would make it vacuous).
+DEFAULT_STREAM = None  # lazily a repro.service.ServiceConfig (jax import)
+
+
+def _stream_config():
+    global DEFAULT_STREAM
+    if DEFAULT_STREAM is None:
+        from repro.service import ServiceConfig
+        DEFAULT_STREAM = ServiceConfig(lane_slots=8, queue_capacity=16,
+                                       step_quota=16)
+    return DEFAULT_STREAM
 
 
 def datasets():
@@ -36,20 +53,50 @@ def datasets():
             "cherrypick": cherrypick_jobs(0)}
 
 
+# Every Outcome field that determinism pins (everything except the
+# wall-clock select_seconds).  THE comparator for backend/scheduler/
+# streaming parity — shared by the benchmark gates and the scripts/ci.sh
+# smokes so a new Outcome field cannot silently drop out of one copy.
+OUTCOME_FIELDS = ("explored", "recommended", "cno", "nex", "spent",
+                  "budget", "found_optimum", "trajectory",
+                  "spend_trajectory", "censored")
+
+
+def outcomes_equal(a, b) -> bool:
+    return all(getattr(a, f) == getattr(b, f) for f in OUTCOME_FIELDS)
+
+
+def _backend_key(backend: str) -> str:
+    """The backend component of the cache key, carrying every knob of that
+    backend that an audit must not alias across."""
+    if backend == "sequential":
+        return "sequential"
+    if backend == "stream":
+        # The streaming/segment knobs ride along: lane seats, device queue
+        # capacity, low-water mark, step quota.  Pacing cannot change
+        # outcomes (the service determinism contract), but a stream audit
+        # at one pacing must never silently read files cached at another —
+        # or, worse, the compact-batch files cached by PR 3.
+        c = _stream_config()
+        return (f"stream-l{c.lane_slots}-c{c.queue_capacity}"
+                f"-w{c.resolved_low_water()}-q{c.step_quota}")
+    return f"{backend}-{DEFAULT_SCHEDULER}"
+
+
 def _key(ds, job, policy, la, b, n_runs, refit, backend, timeout):
     # backend is part of the key: a --sequential audit must never be served
     # results the batched harness cached (they agree on audited configs, but
     # serving one for the other would make the audit vacuous).  For the
     # batched backend the scheduler rides along for the same reason (a
-    # --scheduler lockstep audit must re-run, not read compact's cache).
+    # --scheduler lockstep audit must re-run, not read compact's cache), and
+    # the stream backend carries its segment/service knobs (_backend_key).
     # Ditto the timeout flag: fig_timeout's on/off comparison must never
     # alias.  The v2 schema token shields readers of the newer outcome
     # fields (spend_trajectory, n_censored) from pre-timeout-era cache
     # files.
     to = "__to" if timeout else ""
-    be = backend if backend == "sequential" else f"{backend}-{DEFAULT_SCHEDULER}"
     return (f"{ds}__{job}__{policy}{la}__b{b}__r{n_runs}__{refit}"
-            f"__{be}{to}__v2")
+            f"__{_backend_key(backend)}{to}__v2")
 
 
 def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
@@ -60,11 +107,18 @@ def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
     The per-run seeds (7777 + r) and the bootstraps derived from them are
     shared across every policy on a job — the paper's fairness protocol.
     ``backend`` picks the harness: "batched" (default, device-resident
-    lanes under ``DEFAULT_SCHEDULER``) or "sequential" (the Python-loop
-    oracle).  ``timeout`` enables timeout-censored exploration (paper §3,
+    lanes under ``DEFAULT_SCHEDULER``), "sequential" (the Python-loop
+    oracle), or "stream" (submit every run to a ``StreamingTuner`` under
+    the ``DEFAULT_STREAM`` pacing and drain — the service audit mode).
+    ``timeout`` enables timeout-censored exploration (paper §3,
     mechanism i).
     """
     backend = backend or DEFAULT_BACKEND
+    if backend == "stream" and policy == "rnd":
+        # rnd is host-driven (no device program to stream): it runs — and
+        # must be cache-keyed — as the batched fallthrough, not as a
+        # vacuous "stream" audit of batched results.
+        backend = "batched"
     CACHE.mkdir(parents=True, exist_ok=True)
     f = CACHE / (_key(ds_name, job.name, policy, la, b, n_runs, refit,
                       backend, timeout) + ".json")
@@ -74,6 +128,12 @@ def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
     seeds = [7777 + r for r in range(n_runs)]        # shared across policies
     if backend == "sequential":
         outcomes = run_many(job, s, budget_b=b, seeds=seeds)
+    elif backend == "stream":
+        from repro.service import StreamingTuner
+        svc = StreamingTuner(job, s, _stream_config())
+        tickets = [svc.submit(RunRequest(job, seed, b)) for seed in seeds]
+        svc.drain()
+        outcomes = [t.result() for t in tickets]
     else:
         outcomes = run_many_batched(job, s, budget_b=b, seeds=seeds,
                                     scheduler=DEFAULT_SCHEDULER)

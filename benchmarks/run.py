@@ -16,8 +16,8 @@ import time
 from benchmarks import (batched_vs_sequential, common, fig1a_landscape,
                         fig1b_disjoint, fig4_cno_tf, fig5_cno_scout_cp,
                         fig6_la_ablation, fig7_cno_vs_nex, fig8_budget,
-                        fig9_nex, fig_timeout, table3_latency, roofline,
-                        kernels_bench)
+                        fig9_nex, fig_timeout, streaming_throughput,
+                        table3_latency, roofline, kernels_bench)
 
 SECTIONS = {
     "fig1a": fig1a_landscape.main,
@@ -31,6 +31,7 @@ SECTIONS = {
     "fig_timeout": fig_timeout.main,
     "table3": table3_latency.main,
     "batched": batched_vs_sequential.main,
+    "streaming": streaming_throughput.main,
     "roofline": roofline.main,
     "kernels": kernels_bench.main,
 }
@@ -45,14 +46,22 @@ def main(argv=None):
     ap.add_argument("--sequential", action="store_true",
                     help="drive figure sweeps through the sequential oracle "
                          "instead of the batched harness")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive figure sweeps through the streaming tuning "
+                         "service (audit mode for repro.service; outcomes "
+                         "must match the batched backend)")
     ap.add_argument("--scheduler", choices=("compact", "lockstep"),
                     default="compact",
                     help="batched-backend scheduler: lane-compacting work "
                          "queue (default) or the fixed-lane lockstep "
                          "baseline")
     args = ap.parse_args(argv)
+    if args.sequential and args.stream:
+        ap.error("--sequential and --stream are mutually exclusive")
     if args.sequential:
         common.DEFAULT_BACKEND = "sequential"
+    elif args.stream:
+        common.DEFAULT_BACKEND = "stream"
     common.DEFAULT_SCHEDULER = args.scheduler
     n_runs = 5 if args.quick else args.runs
     only = args.only.split(",") if args.only else list(SECTIONS)

@@ -2,10 +2,19 @@
 # CI gate: tier-1 test suite + batched-harness smoke on the synthetic job
 # + docs gate.  Exits nonzero on any test failure, any sequential/batched
 # outcome divergence (timeouts off OR on, lockstep AND compacting
-# schedulers), a missing speedup, a broken doc link, or a doc code fence
-# that no longer runs against the current API.
+# schedulers), any streamed-vs-oracle divergence on the arrival-trace
+# smoke, a missing speedup, a tracked .pyc file, a broken doc link, or a
+# doc code fence that no longer runs against the current API.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# Tracked-bytecode gate: compiled caches must never be committed again
+# (.gitignore covers __pycache__/*.pyc; PR 4 untracked the strays).
+if [ -n "$(git ls-files '*.pyc')" ]; then
+    echo "ERROR: tracked .pyc files:" >&2
+    git ls-files '*.pyc' >&2
+    exit 1
+fi
 
 python -m pytest -q
 
@@ -25,6 +34,9 @@ PYTHONPATH=src python - <<'PY'
 import sys
 import time
 
+# THE determinism comparator (every Outcome field except wall clock),
+# shared with the benchmark gates so no smoke drifts out of sync.
+from benchmarks.common import outcomes_equal
 from repro.core import (RunRequest, Settings, run_many, run_many_batched,
                         run_queue, run_queue_batched)
 from repro.jobs import synthetic_job
@@ -40,11 +52,7 @@ for timeout in (False, True):
         for sched in ("lockstep", "compact"):
             bat = run_many_batched(job, s, n_runs=25, seed=13,
                                    scheduler=sched)
-            bad = sum(a.explored != b.explored or a.spent != b.spent
-                      or a.cno != b.cno or a.trajectory != b.trajectory
-                      or a.censored != b.censored
-                      or a.spend_trajectory != b.spend_trajectory
-                      for a, b in zip(seq, bat))
+            bad = sum(not outcomes_equal(a, b) for a, b in zip(seq, bat))
             tag = "timeout" if timeout else "full-cost"
             print(f"ci-smoke {policy}{la}/{refit}/{tag}/{sched}: "
                   f"{bad}/25 mismatching runs")
@@ -64,12 +72,33 @@ reqs = [RunRequest(jobs[r % 2], seed=400 + r,
 qseq = run_queue(reqs, s)
 for slots in (3, 8):
     qbat = run_queue_batched(reqs, s, lane_slots=slots)
-    bad = sum(a.explored != b.explored or a.spent != b.spent
-              or a.spend_trajectory != b.spend_trajectory
-              for a, b in zip(qseq, qbat))
+    bad = sum(not outcomes_equal(a, b) for a, b in zip(qseq, qbat))
     print(f"ci-smoke queue slots={slots}: {bad}/{len(reqs)} "
           f"mismatching runs")
     failures += bad
+
+# Streaming smoke: a small arrival trace through the resident-episode
+# service (compact segments, mid-episode submits, timeout censoring on)
+# must resolve every ticket to the oracle's exact outcome.
+from repro.service import ServiceConfig, StreamingTuner
+s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen", timeout=True)
+streq = [RunRequest(jobs[r % 2], seed=500 + r,
+                    budget_b=5.0 if r % 3 == 0 else 1.5) for r in range(6)]
+stseq = run_queue(streq, s)
+svc = StreamingTuner(jobs, s, ServiceConfig(lane_slots=2, queue_capacity=3,
+                                            step_quota=6))
+tix = [svc.submit(q) for q in streq[:3]]
+svc.pump()                                       # later submits land mid-episode
+tix += [svc.submit(q) for q in streq[3:]]
+svc.drain()
+bad = sum(not outcomes_equal(a, t.result()) for a, t in zip(stseq, tix))
+m = svc.metrics()
+print(f"ci-smoke streaming: {bad}/{len(streq)} mismatching runs over "
+      f"{m.segments} segments, occupancy {m.lane_occupancy:.2f}")
+failures += bad
+if sum(len(o.censored) for o in stseq) == 0:
+    print("ci-smoke streaming: censoring not exercised")
+    failures += 1
 
 s = Settings(policy="la0", la=0, k_gh=3)
 run_many(job, s, n_runs=1, seed=999)            # warm compile caches

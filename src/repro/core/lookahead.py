@@ -48,7 +48,7 @@ from repro.core import acquisition as acq
 from repro.core import trees
 
 __all__ = ["Settings", "select_next", "select_next_batched", "make_selector",
-           "make_batch_selector", "space_arrays"]
+           "make_batch_selector", "space_arrays", "slot_price_rows"]
 
 _EPS = 1e-9
 
@@ -361,6 +361,33 @@ def select_next_batched(keys, y, obs_mask, beta, points, left, thresholds, u,
                                   0 if per_slot_u else None,
                                   0 if per_slot_t else None))(
         keys, y, obs_mask, beta, cens, u, t_max)
+
+
+def slot_price_rows(job_ids, rid, u, t_max):
+    """Resolve each lane slot's price row and SLO for slot-indexed selection.
+
+    The segment-exit plumbing of the lane-compacting episode
+    (``core/optimizer.py``) made slots long-lived *seats* that different
+    runs — of different jobs — occupy over time, including across segment
+    boundaries in the streaming service; this helper is the selection-input
+    half of that seat reuse, shared so the one-shot and streaming drivers
+    cannot drift.
+
+    ``job_ids`` is None for a single-job episode: every slot shares the one
+    ``u [M]`` row and scalar ``t_max`` (returned untouched — the lockstep
+    selector geometry).  Otherwise ``job_ids`` ([N] int32) maps *run ids*
+    to job indices and ``rid`` ([R], already clamped non-negative) holds
+    each slot's current run id: slots gather their run's ``u [R, M]`` row
+    and ``t_max [R]`` entry, and the per-slot job index ``jid`` rides along
+    for the caller's cost/runtime table gathers.
+
+    Returns ``(u_slots, t_max_slots, jid_or_None)`` ready to feed
+    :func:`select_next_batched`.
+    """
+    if job_ids is None:
+        return u, t_max, None
+    jid = job_ids[rid]                                       # [R]
+    return u[jid], t_max[jid], jid
 
 
 def space_arrays(space, unit_price: np.ndarray):

@@ -29,12 +29,19 @@ on audited configs (tests/test_batched_harness.py, scripts/ci.sh):
   (:func:`_batched_episode`); a chunk ends when its *last* lane's budget
   empties;
 * ``scheduler="compact"`` (default) / :func:`run_queue_batched` — the
-  lane-compacting work queue (:func:`_compacting_episode`): lanes are
+  lane-compacting work queue (:func:`_episode_segment`): lanes are
   *slots* that bank a finished run's state into run-indexed output buffers
   and immediately load the next pending run from a device-side queue head,
   so short runs never idle behind long ones.  Queues built from
   :class:`RunRequest` entries may mix budgets and jobs (shared space
   geometry required).
+
+The compacting episode runs as bounded *segments* (low-water-mark and
+step-quota exits next to the natural queue-drained exit) so a host-side
+broker can inject new :class:`RunRequest`\\ s and harvest finished
+:class:`Outcome`\\ s while the episode state stays device-resident — that
+streaming front-end lives in ``src/repro/service/``; the one-shot entry
+points here simply run a single unbounded segment.
 
 See docs/ARCHITECTURE.md for the data-flow picture and the determinism
 contract, and docs/KNOBS.md for every tuning knob.
@@ -382,7 +389,7 @@ def _resolve_runs(job: JobTable, seed: int, n_runs: int, seeds, bootstraps):
 def _alg1_step(st, idx, c, t_run, u_at, valid, tau, s: lookahead.Settings,
                lanes, m_dim):
     """One masked Alg. 1 step on lane-stacked state — the piece both
-    episode bodies (:func:`_batched_episode`, :func:`_compacting_episode`)
+    episode bodies (:func:`_batched_episode`, :func:`_episode_segment`)
     share, factored out so the billing/censoring semantics cannot drift
     between the lockstep baseline and the compacting scheduler.
 
@@ -587,61 +594,133 @@ def _reconstruct_outcome(job: JobTable, settings: lookahead.Settings,
 
 
 # --------------------------------------------------------------------------- #
-# Lane-compacting work-queue scheduler
+# Lane-compacting work-queue scheduler (segment-driven)
 # --------------------------------------------------------------------------- #
-@functools.partial(jax.jit, static_argnames=("s", "l_dim"))
-def _compacting_episode(queue, job_ids, cost, runtime, points, left,
-                        thresholds, u, t_max, s: lookahead.Settings,
-                        l_dim: int):
-    """Drain a queue of R pending runs through ``l_dim`` lane *slots*.
+# A step quota that a terminating queue can never hit: "run to completion".
+_STEPS_UNBOUNDED = np.int32(np.iinfo(np.int32).max)
+
+# Slot-carry fields present only when ``s.timeout`` (the no-timeout
+# program carries none of them, leaving its compiled episode unchanged).
+_CARRY_TIMEOUT_KEYS = ("cens", "cexpl", "bexpl")
+
+
+def _fresh_slot_carry(l_dim: int, m_dim: int, s: lookahead.Settings) -> dict:
+    """All-idle slot carry for a segment-driven episode: every seat empty
+    (``rid = -1``, inactive), queue head at 0.  The streaming service starts
+    from this and keeps the carry device-resident between segments."""
+    carry = {"key": jnp.zeros((l_dim, 2), jnp.uint32),
+             "y": jnp.zeros((l_dim, m_dim), jnp.float32),
+             "mask": jnp.zeros((l_dim, m_dim), bool),
+             "beta": jnp.zeros((l_dim,), jnp.float32),
+             "explored": jnp.full((l_dim, m_dim), -1, jnp.int32),
+             "n_exp": jnp.zeros((l_dim,), jnp.int32),
+             "rid": jnp.full((l_dim,), -1, jnp.int32),
+             "active": jnp.zeros((l_dim,), bool),
+             "qhead": jnp.int32(0)}
+    if s.timeout:
+        carry["cens"] = jnp.zeros((l_dim, m_dim), bool)
+        carry["cexpl"] = jnp.zeros((l_dim, m_dim), bool)
+        carry["bexpl"] = jnp.zeros((l_dim, m_dim), jnp.float32)
+    return carry
+
+
+def _seed_carry_from_queue(queue: dict, l_dim: int,
+                           s: lookahead.Settings) -> dict:
+    """Seat the first ``l_dim`` queue rows in the slots (``qhead = l_dim``,
+    ``rid = l_dim + row``) — the one-shot entry's initial state, equivalent
+    to the streaming broker's host-side seating of idle slots."""
+    load = lambda a: jnp.asarray(a)[:l_dim]
+    carry = {"key": load(queue["keys"]), "y": load(queue["y"]),
+             "mask": load(queue["mask"]), "beta": load(queue["beta"]),
+             "explored": load(queue["explored"]),
+             "n_exp": load(queue["n_exp"]),
+             "rid": l_dim + jnp.arange(l_dim, dtype=jnp.int32),
+             "active": jnp.ones((l_dim,), bool),
+             "qhead": jnp.int32(l_dim)}
+    if s.timeout:
+        for k in _CARRY_TIMEOUT_KEYS:
+            carry[k] = load(queue[k])
+    return carry
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def _episode_segment(carry, queue, qtail, low_water, step_quota, job_ids,
+                     cost, runtime, points, left, thresholds, u, t_max,
+                     s: lookahead.Settings):
+    """Advance ``l_dim`` lane *slots* through one bounded episode segment.
 
     One ``lax.while_loop``; each iteration selects for every slot at once
     (same vmapped kernel as the lockstep episode) and applies Alg. 1's
-    budget accounting and stopping rule as masked updates.  The difference
-    from :func:`_batched_episode`: a slot holds a *seat*, not a fixed run.
-    When its run terminates (Gamma empty, unaffordable BO pick, or budget
-    empty), the slot scatters the run's final state into the [R]-indexed
-    output buffers and immediately gathers the next pending run's initial
-    state from the device-resident queue head — fixed-width selector
-    programs throughout, so the loop never recompiles as lanes repack.  The
-    loop exits only when the queue is drained *and* every slot is idle.
+    budget accounting and stopping rule as masked updates.  A slot holds a
+    *seat*, not a fixed run: when its run terminates (Gamma empty,
+    unaffordable BO pick, or budget empty), the slot scatters the run's
+    final state into run-id-indexed output buffers and immediately gathers
+    the next pending run's initial state from the device-resident queue
+    head — fixed-width selector programs throughout, so nothing recompiles
+    as lanes repack.
 
-    ``queue``: dict of [R, ...] initial run states (bootstrap prefix already
-    replayed); timeout keys (cens/cexpl/bexpl) are only consulted when
-    ``s.timeout`` — the no-timeout program carries none of them.
+    The segment exits when any of these holds (`cond`):
+
+    * **drained** — the queue head passed ``qtail`` and every slot is idle
+      (the one-shot entry :func:`run_queue_batched` runs exactly one such
+      segment to completion);
+    * **low water** — fewer than ``low_water`` pending rows remain, giving
+      the host a chance to refill the device queue from its admission
+      backlog (pass 0 to disable; a segment always runs at least one step
+      so a host driving segments in a loop cannot livelock);
+    * **step quota** — ``step_quota`` iterations elapsed (the streaming
+      service's responsiveness bound: the host harvests finished runs and
+      admits new ones between segments).
+
+    ``carry`` holds the persistent slot state (:func:`_fresh_slot_carry` /
+    :func:`_seed_carry_from_queue`); ``queue`` holds [C, ...] pending
+    initial run states of which rows ``qhead..qtail`` are still unconsumed;
+    ``qtail``/``low_water``/``step_quota`` are traced scalars so segment
+    pacing never recompiles.  A run seated from queue row ``j`` banks into
+    output row ``l_dim + j``; rows below ``l_dim`` are banking targets for
+    runs already seated at segment start (the streaming broker re-keys
+    in-flight runs to their slot index between segments).
 
     ``job_ids`` is None for a single-job queue (``cost``/``runtime``/``u``
     are [M] rows and ``t_max`` a scalar, shared by every slot — the same
     selector geometry as the lockstep episode).  For a mixed-job queue it
-    is [R] int32 into [J, M]-stacked tables, and each slot gathers its
-    *current* run's job row every iteration (slot-indexed selection: per-slot
-    ``u``/``t_max``).
+    is [l_dim + C] int32 over *run ids* into [J, M]-stacked tables, and
+    each slot gathers its current run's job row every iteration
+    (slot-indexed selection: per-slot ``u``/``t_max`` via
+    :func:`lookahead.slot_price_rows`).
 
-    Refill order is deterministic (queue order by slot index) but — because
-    every run's PRNG chain, budget arithmetic and decision pipeline are
-    functions of its own state only — outcomes are independent of it; the
-    caller re-keys results by run id, never by slot.
+    Returns ``(carry', report)``: the updated persistent slot state and the
+    per-segment report (``out_done``/``out_beta``/``out_nexp``/``out_expl``
+    [+ ``out_cexpl``/``out_bexpl`` with timeouts] banking buffers, plus
+    ``steps`` and ``busy`` — active-slot-steps, the lane-occupancy
+    numerator).  Seating order is deterministic (queue order by slot index)
+    but — because every run's PRNG chain, budget arithmetic and decision
+    pipeline are functions of its own state only — outcomes are independent
+    of seating *and* arrival order; the caller re-keys results by run id,
+    never by slot.
     """
-    r_tot, m_dim = queue["y"].shape
+    l_dim, m_dim = carry["y"].shape
+    c_dim = queue["y"].shape[0]
+    n_out = l_dim + c_dim
     lanes = jnp.arange(l_dim)
 
     def cond(st):
-        return st["active"].any()
+        pending = qtail - st["qhead"]
+        has_work = st["active"].any() | (pending > 0)
+        return (has_work & (st["steps"] < step_quota)
+                & ((st["steps"] == 0) | (pending >= low_water)))
 
     def body(st):
         split = jax.vmap(jax.random.split)(st["key"])       # [L, 2, 2]
         key, sub = split[:, 0], split[:, 1]
         rid_safe = jnp.maximum(st["rid"], 0)
-        if job_ids is None:
-            u_l, t_l = u, t_max
-        else:
-            jid = job_ids[rid_safe]                         # [L]
-            u_l, t_l = u[jid], t_max[jid]                   # [L, M], [L]
+        u_l, t_l, jid = lookahead.slot_price_rows(job_ids, rid_safe, u,
+                                                  t_max)
         idx, valid, diag = lookahead.select_next_batched(
             sub, st["y"], st["mask"], jnp.maximum(st["beta"], 0.0),
             points, left, thresholds, u_l, t_l, s,
             st["cens"] if s.timeout else None)
-        if job_ids is None:
+        if jid is None:
             c = cost[idx]
             t_run = runtime[idx] if s.timeout else None
             u_at = u[idx] if s.timeout else None
@@ -657,8 +736,9 @@ def _compacting_episode(queue, job_ids, cost, runtime, points, left,
 
         # A slot's run terminated this step -> bank it by run id.
         finished = st["active"] & ~alive
-        tgt = jnp.where(finished, rid_safe, r_tot)          # OOB rows dropped
-        out = {"out_beta": st["out_beta"].at[tgt].set(step["beta"],
+        tgt = jnp.where(finished, rid_safe, n_out)          # OOB rows dropped
+        out = {"out_done": st["out_done"].at[tgt].set(True, mode="drop"),
+               "out_beta": st["out_beta"].at[tgt].set(step["beta"],
                                                       mode="drop"),
                "out_nexp": st["out_nexp"].at[tgt].set(step["n_exp"],
                                                       mode="drop"),
@@ -670,46 +750,41 @@ def _compacting_episode(queue, job_ids, cost, runtime, points, left,
             out["out_bexpl"] = st["out_bexpl"].at[tgt].set(step["bexpl"],
                                                            mode="drop")
 
-        # Refill freed slots from the queue head, in slot order: the k-th
-        # finished slot (k = rank among finished) takes run qhead + k.
-        rank = jnp.cumsum(finished.astype(jnp.int32)) - 1
+        # Refill seatless slots (just finished, or idle from an earlier
+        # drain) from the queue head, in slot order: the k-th seatable slot
+        # (k = rank among seatable) takes queue row qhead + k.
+        seatable = ~alive
+        rank = jnp.cumsum(seatable.astype(jnp.int32)) - 1
         cand = st["qhead"] + rank
-        got = finished & (cand < r_tot)
+        got = seatable & (cand < qtail)
         src = jnp.where(got, cand, 0)
         fill = lambda init, cur: jnp.where(
             got.reshape((l_dim,) + (1,) * (cur.ndim - 1)), init[src], cur)
         nxt = {"key": fill(queue["keys"], key),
-               "rid": jnp.where(got, cand,
+               "rid": jnp.where(got, l_dim + cand,
                                 jnp.where(finished, -1, st["rid"])),
                "active": alive | got,
                "qhead": st["qhead"] + got.sum(dtype=jnp.int32),
-               "steps": st["steps"] + 1}
+               "steps": st["steps"] + 1,
+               "busy": st["busy"] + st["active"].sum(dtype=jnp.int32)}
         for k, v in step.items():
             nxt[k] = fill(queue[k], v)
         nxt.update(out)
         return nxt
 
-    load = lambda a: jnp.asarray(a)[:l_dim]
-    st0 = {"key": load(queue["keys"]), "y": load(queue["y"]),
-           "mask": load(queue["mask"]), "beta": load(queue["beta"]),
-           "explored": load(queue["explored"]), "n_exp": load(queue["n_exp"]),
-           "rid": jnp.arange(l_dim, dtype=jnp.int32),
-           "active": jnp.ones((l_dim,), bool),
-           "qhead": jnp.int32(l_dim), "steps": jnp.int32(0),
-           "out_beta": jnp.zeros((r_tot,), jnp.float32),
-           "out_nexp": jnp.zeros((r_tot,), jnp.int32),
-           "out_expl": jnp.full((r_tot, m_dim), -1, jnp.int32)}
+    st0 = dict(carry)
+    st0.update(steps=jnp.int32(0), busy=jnp.int32(0),
+               out_done=jnp.zeros((n_out,), bool),
+               out_beta=jnp.zeros((n_out,), jnp.float32),
+               out_nexp=jnp.zeros((n_out,), jnp.int32),
+               out_expl=jnp.full((n_out, m_dim), -1, jnp.int32))
     if s.timeout:
-        st0["cens"] = load(queue["cens"])
-        st0["cexpl"] = load(queue["cexpl"])
-        st0["bexpl"] = load(queue["bexpl"])
-        st0["out_cexpl"] = jnp.zeros((r_tot, m_dim), bool)
-        st0["out_bexpl"] = jnp.zeros((r_tot, m_dim), jnp.float32)
+        st0["out_cexpl"] = jnp.zeros((n_out, m_dim), bool)
+        st0["out_bexpl"] = jnp.zeros((n_out, m_dim), jnp.float32)
     st = jax.lax.while_loop(cond, body, st0)
-    base = (st["out_beta"], st["out_expl"], st["out_nexp"], st["steps"])
-    if s.timeout:
-        return base + (st["out_cexpl"], st["out_bexpl"])
-    return base
+    report = {k: st.pop(k) for k in list(st)
+              if k.startswith("out_") or k in ("steps", "busy")}
+    return st, report
 
 
 def _check_shared_space(jobs: list[JobTable]) -> None:
@@ -722,6 +797,27 @@ def _check_shared_space(jobs: list[JobTable]) -> None:
                 f"queued jobs must share one space geometry; {job.name} "
                 f"differs from {jobs[0].name} (fixed-width selector programs "
                 "cannot mix spaces)")
+
+
+def _queue_tables(jobs: list[JobTable], u0):
+    """Device job tables for a (possibly mixed-job) queue — shared by the
+    one-shot entry and the streaming service engine so the two drivers
+    cannot drift.
+
+    Single job: shared [M] rows and a scalar t_max — the lockstep selector
+    geometry (``u0`` is the space-bound price row from
+    ``lookahead.space_arrays``).  Multiple jobs: [J, M]-stacked tables and
+    [J] t_max for run-id-indexed gathers.  Returns
+    ``(cost, runtime, u, t_max, single)``.
+    """
+    if len(jobs) == 1:
+        dev = jobs[0].device_view()
+        return dev.cost, dev.runtime, u0, jnp.float32(jobs[0].t_max), True
+    devs = [j.device_view() for j in jobs]
+    return (jnp.stack([d.cost for d in devs]),
+            jnp.stack([d.runtime for d in devs]),
+            jnp.stack([d.unit_price for d in devs]),
+            jnp.asarray([j.t_max for j in jobs], jnp.float32), False)
 
 
 def run_queue(requests: list[RunRequest],
@@ -753,8 +849,8 @@ def run_queue_batched(requests: list[RunRequest],
     """Drain a mixed-budget, mixed-job run queue through compacting lanes.
 
     The device-resident counterpart of :func:`run_queue`: R pending runs,
-    ``lane_slots`` seats, one jitted episode (see
-    :func:`_compacting_episode`).  Jobs may differ per request as long as
+    ``lane_slots`` seats, one jitted episode segment run to completion (see
+    :func:`_episode_segment`).  Jobs may differ per request as long as
     they share one space geometry; budgets may differ freely — this is the
     tail-heavy-sweep entry point, where lockstep lanes would idle behind
     the longest run.  Outcomes are returned in request order and are
@@ -780,41 +876,44 @@ def run_queue_batched(requests: list[RunRequest],
     budgets = queue.pop("budgets")
     points, left, thresholds, u0 = lookahead.space_arrays(
         job0.space, job0.unit_price)
-    if len(jobs) == 1:
-        # Single-table mode: shared [M] rows, the lockstep selector geometry.
+    cost_t, runtime_t, u_t, tmax_t, single = _queue_tables(jobs, u0)
+    if single:
         job_ids = None
-        dev = job0.device_view()
-        cost_t, runtime_t, u_t = dev.cost, dev.runtime, u0
-        tmax_t = jnp.float32(job0.t_max)
     else:
         index_of = {id(j): k for k, j in enumerate(jobs)}
-        job_ids = jnp.asarray([index_of[id(req.job)] for req in requests],
-                              jnp.int32)
-        devs = [j.device_view() for j in jobs]
-        cost_t = jnp.stack([d.cost for d in devs])
-        runtime_t = jnp.stack([d.runtime for d in devs])
-        u_t = jnp.stack([d.unit_price for d in devs])
-        tmax_t = jnp.asarray([j.t_max for j in jobs], jnp.float32)
+        # Run-id indexed: rows below lane_slots are seat-section padding
+        # (the one-shot entry seats straight from the queue, so in-flight
+        # runs keep their queue-row run id l_dim + r).
+        job_ids = jnp.asarray(
+            [0] * lane_slots + [index_of[id(req.job)] for req in requests],
+            jnp.int32)
 
+    qarrays = {k: jnp.asarray(v) for k, v in queue.items()
+               if settings.timeout or k not in _CARRY_TIMEOUT_KEYS}
+    carry = _seed_carry_from_queue(qarrays, lane_slots, settings)
     t0 = time.perf_counter()
-    res = jax.block_until_ready(_compacting_episode(
-        {k: jnp.asarray(v) for k, v in queue.items()
-         if settings.timeout or k not in ("cens", "cexpl", "bexpl")},
+    # One unbounded segment (no low-water mark, no step quota) drains the
+    # whole queue — the streaming service drives the same compiled body in
+    # bounded slices instead (src/repro/service/).
+    _, report = jax.block_until_ready(_episode_segment(
+        carry, qarrays, np.int32(r_tot), np.int32(0), _STEPS_UNBOUNDED,
         job_ids, cost_t, runtime_t if settings.timeout else None, points,
-        left, thresholds, u_t, tmax_t, settings, lane_slots))
-    beta_f, expl_f, n_exp_f, steps = res[:4]
-    cexpl_f = np.asarray(res[4]) if settings.timeout else None
-    bexpl_f = np.asarray(res[5]) if settings.timeout else None
+        left, thresholds, u_t, tmax_t, settings))
+    steps = int(report["steps"])
     wall = time.perf_counter() - t0
     # Amortized wall time per selection (steps x slots selections per
     # episode), comparable with the sequential oracle's per-call mean.
     # Caveats: includes the queue refill machinery, and a cold call folds
     # in XLA compilation.
-    sel_s = wall / max(int(steps) * lane_slots, 1)
+    sel_s = wall / max(steps * lane_slots, 1)
 
-    beta_f = np.asarray(beta_f)
-    expl_f = np.asarray(expl_f)
-    n_exp_f = np.asarray(n_exp_f)
+    # Runs seated from queue row r bank into report row lane_slots + r.
+    beta_f = np.asarray(report["out_beta"])[lane_slots:]
+    expl_f = np.asarray(report["out_expl"])[lane_slots:]
+    n_exp_f = np.asarray(report["out_nexp"])[lane_slots:]
+    if settings.timeout:
+        cexpl_f = np.asarray(report["out_cexpl"])[lane_slots:]
+        bexpl_f = np.asarray(report["out_bexpl"])[lane_slots:]
     outs: list[Outcome] = []
     for r, req in enumerate(requests):
         explored = [int(i) for i in expl_f[r, :n_exp_f[r]]]
@@ -845,9 +944,10 @@ def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
     Two schedulers share that contract:
 
     * ``"compact"`` (default) — the lane-compacting work queue
-      (:func:`_compacting_episode`): runs are queued, ``lane_chunk`` slots
+      (:func:`_episode_segment`, run as one unbounded segment): runs are
+      queued, ``lane_chunk`` slots
       drain the queue, and a slot whose run terminates immediately loads the
-      next pending run inside the same ``lax.while_loop``.  The episode ends
+      next pending run inside the same ``lax.while_loop``.  The segment ends
       when the queue is drained and every slot is idle, so short runs never
       hold the device hostage to the longest lane — the tail-heavy win is
       measured in ``benchmarks/batched_vs_sequential.py``.

@@ -1,0 +1,37 @@
+"""Streaming tuning service: live RunRequests into a resident episode.
+
+The one-shot batched entry points (``repro.core.run_queue_batched``) snap-
+shot their queue before the jitted episode starts.  This package turns the
+same lane-compacting episode into a long-lived endpoint: the episode runs
+as bounded jitted *segments* (``_episode_segment`` in
+``core/optimizer.py``), and between segments a host-side broker injects
+newly submitted runs into the device-resident pending queue and harvests
+finished outcomes — so tuning traffic streams in and out while the device
+keeps working.
+
+Layout:
+
+* ``config``  — :class:`ServiceConfig`: seats, device queue capacity,
+  low-water mark, step quota, admission backpressure
+* ``engine``  — :class:`SegmentEngine`: the resident device state and the
+  seat/inject/dispatch/harvest cycle around each segment
+* ``broker``  — :class:`StreamingTuner`: admission buffer (double-buffered,
+  priority-ordered), ``submit() -> TuningTicket`` futures, ``drain()``,
+  optional background pump thread
+* ``metrics`` — :class:`ServiceMetrics`: throughput, lane occupancy, queue
+  depth, per-request latency
+
+Determinism contract: streamed outcomes are bit-identical to the
+sequential oracle — arrival order, priorities, and segment pacing decide
+*when* a run executes, never *what* it computes
+(``tests/test_streaming_service.py``; docs/ARCHITECTURE.md).
+"""
+
+from repro.service.broker import QueueFull, StreamingTuner, TuningTicket
+from repro.service.config import ServiceConfig
+from repro.service.engine import SegmentEngine, SegmentReport
+from repro.service.metrics import MetricsRecorder, ServiceMetrics
+
+__all__ = ["QueueFull", "ServiceConfig", "ServiceMetrics", "SegmentEngine",
+           "SegmentReport", "MetricsRecorder", "StreamingTuner",
+           "TuningTicket"]

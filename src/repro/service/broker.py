@@ -1,0 +1,400 @@
+"""Host-side broker of the streaming tuner: admission, futures, pumping.
+
+:class:`StreamingTuner` is the service front door.  Callers ``submit()``
+:class:`~repro.core.RunRequest`\\ s (getting a :class:`TuningTicket` future
+back) while a lane-compacting episode stays resident on device; between
+bounded jitted segments the broker refills the device queue from its
+admission buffer, banks finished runs out of the segment's output buffers,
+and resolves tickets.  Determinism contract: an outcome is a function of
+its request alone — bit-identical to the sequential oracle no matter the
+arrival order, priorities, segment pacing, or what else shared the lanes
+(``tests/test_streaming_service.py`` pins it).
+
+Two driving modes share all of that:
+
+* **synchronous** — no thread: ``pump()`` runs one segment on the calling
+  thread; ``ticket.result()`` and ``drain()`` pump inline until satisfied.
+* **background** — ``start()`` (or entering the context manager) spawns a
+  worker that pumps while work is outstanding; ``submit`` is then fully
+  asynchronous and ``result()``/``drain()`` just wait.
+
+All JAX work happens on whichever thread pumps (serialized by a pump
+lock); submission itself touches only numpy/heapq state.
+"""
+
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+
+from repro.core.optimizer import Outcome, RunRequest
+from repro.jobs.tables import JobTable
+from repro.service.config import ServiceConfig
+from repro.service.engine import SegmentEngine, SegmentReport
+from repro.service.metrics import MetricsRecorder, ServiceMetrics
+
+__all__ = ["QueueFull", "StreamingTuner", "TuningTicket"]
+
+
+class QueueFull(RuntimeError):
+    """Backpressure: ``max_pending`` outstanding requests already admitted."""
+
+
+class TuningTicket:
+    """Future for one submitted tuning run.
+
+    ``result()`` blocks until the run's :class:`~repro.core.Outcome` is
+    banked out of a segment (pumping inline when the service has no
+    background worker).  Tickets compare by id, which is also the
+    admission FIFO tie-break within a priority class.
+    """
+
+    def __init__(self, tid: int, request: RunRequest, priority: int,
+                 tuner: "StreamingTuner"):
+        self.id = tid
+        self.request = request
+        self.priority = priority
+        self.submitted_at = time.perf_counter()
+        self.resolved_at: float | None = None
+        # Engine-managed: replayed bootstrap rows, budget B, job index.
+        self.rows = None
+        self.budget: float | None = None
+        self.jid = 0
+        self._tuner = tuner
+        self._event = threading.Event()
+        self._outcome: Outcome | None = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> Outcome:
+        if not self._event.is_set():
+            self._tuner._wait_for(self, timeout)
+        if self._error is not None:
+            raise RuntimeError("tuning service failed while this ticket "
+                               "was outstanding") from self._error
+        if self._outcome is None:
+            if self._tuner._failure is not None:
+                raise RuntimeError("tuning service failed while this "
+                                   "ticket was outstanding") \
+                    from self._tuner._failure
+            raise TimeoutError(f"ticket {self.id} not resolved within "
+                               f"{timeout}s")
+        return self._outcome
+
+    def __repr__(self):
+        state = "done" if self.done() else "pending"
+        return (f"TuningTicket(id={self.id}, job={self.request.job.name!r}, "
+                f"seed={self.request.seed}, {state})")
+
+
+class _AdmissionBuffer:
+    """Double-buffered priority queue of ``(priority, ticket_id, ticket)``.
+
+    Producers push into the *front* heap under a short lock; the single
+    pump thread swaps front into its privately owned *back* heap and pops
+    from the merged backlog without holding the submit lock.  Lower
+    ``priority`` values stage first; ticket id breaks ties FIFO.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._front: list = []   # producers, lock-guarded
+        self._back: list = []    # pump thread only
+
+    def push(self, ticket: TuningTicket) -> None:
+        with self._lock:
+            heapq.heappush(self._front, (ticket.priority, ticket.id, ticket))
+
+    def stage(self, k: int) -> list[TuningTicket]:
+        """Move up to ``k`` highest-priority tickets to the caller.  Pump
+        thread only."""
+        with self._lock:
+            front, self._front = self._front, []
+        if front:
+            self._back.extend(front)
+            heapq.heapify(self._back)
+        out = [heapq.heappop(self._back)[2]
+               for _ in range(min(k, len(self._back)))]
+        return out
+
+    def restage(self, tickets: list[TuningTicket]) -> None:
+        """Return staged-but-unstarted tickets to the backlog.  Pump thread
+        only."""
+        for t in tickets:
+            heapq.heappush(self._back, (t.priority, t.id, t))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._front) + len(self._back)
+
+
+class StreamingTuner:
+    """A long-lived tuning endpoint over a device-resident episode.
+
+    Args:
+      jobs: one :class:`JobTable` or a sequence of them — the jobs this
+        service can tune.  Registered once: their tables are stacked into
+        the compiled segment program, and all must share one space
+        geometry (the ``run_queue_batched`` contract).
+      settings: selector knobs (static — one service, one policy program).
+      config: :class:`ServiceConfig` pacing/capacity knobs.
+    """
+
+    def __init__(self, jobs, settings, config: ServiceConfig | None = None):
+        jobs = [jobs] if isinstance(jobs, JobTable) else list(jobs)
+        self.config = config or ServiceConfig()
+        self.settings = settings
+        self._engine = SegmentEngine(jobs, settings, self.config)
+        self._admission = _AdmissionBuffer()
+        self._metrics = MetricsRecorder(self.config.lane_slots)
+        self._cond = threading.Condition()
+        self._pump_lock = threading.RLock()
+        self._outstanding = 0
+        self._next_id = 0
+        self._unharvested: list[TuningTicket] = []
+        self._worker: threading.Thread | None = None
+        self._stopping = False
+        self._failure: BaseException | None = None
+
+    # ------------------------------------------------------------------ #
+    # Admission
+    # ------------------------------------------------------------------ #
+    def submit(self, request: RunRequest | None = None, *, job=None,
+               seed: int | None = None, budget_b: float = 3.0,
+               bootstrap=None, priority: int = 0, block: bool = True,
+               timeout: float | None = None) -> TuningTicket:
+        """Admit one tuning run; returns its :class:`TuningTicket` future.
+
+        Pass a prebuilt :class:`RunRequest`, or its fields (``job``,
+        ``seed``, ``budget_b``, ``bootstrap``).  Lower ``priority`` values
+        are seated first; arrival order breaks ties.  When the
+        ``max_pending`` backpressure cap is reached, ``submit`` blocks
+        until space frees (pumping inline if no background worker runs) —
+        or raises :class:`QueueFull` immediately with ``block=False``.
+        Priorities and admission timing never change a run's outcome, only
+        when it runs.
+        """
+        if self._failure is not None:
+            raise RuntimeError("tuning service already failed") \
+                from self._failure
+        if request is None:
+            if job is None or seed is None:
+                raise ValueError("pass a RunRequest, or at least job= and "
+                                 "seed=")
+            request = RunRequest(job, seed, budget_b, bootstrap)
+        self._engine.job_index(request.job)      # eager registration check
+        deadline = (time.perf_counter() + timeout) if timeout is not None \
+            else None
+        cap = self.config.max_pending
+        while True:
+            with self._cond:
+                if self._failure is not None:
+                    raise RuntimeError("tuning service failed") \
+                        from self._failure
+                if cap is None or self._outstanding < cap:
+                    self._next_id += 1
+                    ticket = TuningTicket(self._next_id, request, priority,
+                                          self)
+                    self._outstanding += 1
+                    break
+                if not block:
+                    raise QueueFull(f"{self._outstanding} outstanding >= "
+                                    f"max_pending={cap}")
+                if self._worker_alive():
+                    self._cond.wait(timeout=0.05)
+                    self._check_deadline(deadline, "submit")
+                    continue
+            # No worker: make room ourselves (outstanding >= 1, so a pump
+            # always progresses toward resolution).
+            self._check_deadline(deadline, "submit")
+            self.pump()
+        self._admission.push(ticket)
+        self._metrics.record_submit()
+        with self._cond:
+            if self._failure is not None:
+                # The worker died between our admission-counter increment
+                # and the push: its failure sweep could not see this
+                # ticket, so fail it here.
+                ticket._error = self._failure
+                ticket._event.set()
+            self._cond.notify_all()              # wake the worker
+        return ticket
+
+    @staticmethod
+    def _check_deadline(deadline, what: str) -> None:
+        if deadline is not None and time.perf_counter() > deadline:
+            raise TimeoutError(f"{what} timed out")
+
+    # ------------------------------------------------------------------ #
+    # Pumping
+    # ------------------------------------------------------------------ #
+    def pump(self) -> SegmentReport:
+        """Run one bounded segment: refill the device queue from the
+        admission buffer, advance up to ``step_quota`` steps, harvest and
+        resolve finished runs.  Safe to call concurrently with submits;
+        segment execution itself is serialized."""
+        with self._pump_lock:
+            if self._failure is not None:
+                # A failed service must not re-fill the device: the worker's
+                # failure sweep may still be flagging tickets, and any it
+                # has swept must stay failed.
+                raise RuntimeError("tuning service already failed") \
+                    from self._failure
+            depth = len(self._admission)      # admitted, not yet staged
+            staged = self._admission.stage(
+                self._engine.c_dim + self.config.lane_slots
+                - self._engine.in_flight())
+            # Early-exit at the low-water mark only pays off if there is
+            # backlog left to inject afterwards; otherwise run the segment
+            # to its quota (or to drained).
+            low = (self.config.resolved_low_water()
+                   if len(self._admission) else 0)
+            try:
+                resolved, leftover, rep = self._engine.run_segment(
+                    staged, low, self.config.step_quota)
+            except BaseException:
+                # Don't strand staged tickets: whatever was not seated goes
+                # back to the backlog (seated ones live in the engine's
+                # slot bookkeeping, which the failure paths cover).
+                seated = self._engine._slot_tickets
+                self._admission.restage(
+                    [t for t in staged
+                     if not any(t is s for s in seated)])
+                raise
+            self._admission.restage(leftover)
+            now = time.perf_counter()
+            for ticket, outcome in resolved:
+                ticket._outcome = outcome
+                ticket.resolved_at = now
+                self._metrics.record_resolve(now - ticket.submitted_at,
+                                             outcome.nex)
+                ticket._event.set()
+            if rep.steps:
+                self._metrics.record_segment(rep.steps, rep.busy_slot_steps,
+                                             rep.wall_seconds, depth)
+            with self._cond:
+                self._outstanding -= len(resolved)
+                self._unharvested.extend(t for t, _ in resolved)
+                self._cond.notify_all()
+            return rep
+
+    def drain(self, timeout: float | None = None) -> list[Outcome]:
+        """Block until every outstanding request is resolved (pumping
+        inline when no background worker runs); returns the outcomes
+        resolved since the last drain, in submission (ticket-id) order."""
+        deadline = (time.perf_counter() + timeout) if timeout is not None \
+            else None
+        while True:
+            with self._cond:
+                if self._failure is not None:
+                    raise RuntimeError("tuning service failed") \
+                        from self._failure
+                if self._outstanding == 0:
+                    done, self._unharvested = self._unharvested, []
+                    return [t._outcome
+                            for t in sorted(done, key=lambda t: t.id)]
+                if self._worker_alive():
+                    self._cond.wait(timeout=0.05)
+                    self._check_deadline(deadline, "drain")
+                    continue
+            self._check_deadline(deadline, "drain")
+            self.pump()
+
+    def _wait_for(self, ticket: TuningTicket, timeout: float | None) -> None:
+        """Progress until ``ticket`` resolves: wait on the worker while one
+        runs, pump inline otherwise.  Re-checks worker liveness so a waiter
+        is never stranded by a ``stop()`` (or worker death) that happens
+        mid-wait — outstanding tickets stay drivable by inline pumps."""
+        deadline = (time.perf_counter() + timeout) if timeout is not None \
+            else None
+        while not ticket.done() and self._failure is None:
+            self._check_deadline(deadline, f"ticket {ticket.id}")
+            if self._worker_alive():
+                ticket._event.wait(0.05)
+            else:
+                self.pump()
+
+    # ------------------------------------------------------------------ #
+    # Background worker
+    # ------------------------------------------------------------------ #
+    def _worker_alive(self) -> bool:
+        return self._worker is not None and self._worker.is_alive()
+
+    def start(self) -> "StreamingTuner":
+        """Spawn the background pump thread (idempotent)."""
+        with self._cond:
+            if self._worker_alive():
+                return self
+            self._stopping = False
+            self._worker = threading.Thread(target=self._worker_loop,
+                                            name="streaming-tuner",
+                                            daemon=True)
+            self._worker.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop the background worker (outstanding tickets stay valid and
+        can still be driven by inline pumps)."""
+        with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
+            worker = self._worker
+        if worker is not None:
+            worker.join()
+        self._worker = None
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._stopping and self._outstanding == 0:
+                    self._cond.wait()
+                if self._stopping:
+                    return
+            try:
+                rep = self.pump()
+                if rep.steps == 0:
+                    # Outstanding tickets exist but none were admitted yet
+                    # (a submitter sits between its counter increment and
+                    # its admission push) — yield instead of spinning.
+                    with self._cond:
+                        self._cond.wait(timeout=0.01)
+            except BaseException as e:      # fail every waiter, loudly
+                with self._cond:
+                    self._failure = e
+                    self._cond.notify_all()
+                # The pump lock serializes this sweep against any inline
+                # pump already mutating the back buffer; _failure being
+                # set keeps later submits/pumps from re-filling it.
+                with self._pump_lock:
+                    backlog = self._admission.stage(
+                        len(self._admission) + 2 * self.config.lane_slots)
+                    seated = list(self._engine._slot_tickets)
+                for t in backlog + seated:
+                    # Skip tickets an interleaved inline pump already
+                    # resolved — their outcomes are valid.
+                    if t is not None and not t._event.is_set():
+                        t._error = e
+                        t._event.set()
+                return
+
+    def __enter__(self) -> "StreamingTuner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------------ #
+    def metrics(self) -> ServiceMetrics:
+        return self._metrics.snapshot()
+
+    def reset_metrics(self) -> None:
+        """Zero the counters (keeps compiled programs and episode state) —
+        call after a warmup pass so gates measure steady state."""
+        self._metrics.reset()
+
+    @property
+    def outstanding(self) -> int:
+        return self._outstanding

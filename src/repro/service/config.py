@@ -1,0 +1,72 @@
+"""Streaming-service knobs: segment pacing, device queue sizing, admission.
+
+All knobs here are *host-side pacing and capacity* controls — none of them
+can change a run's Outcome (the determinism contract in
+docs/ARCHITECTURE.md: outcomes are bit-identical to the sequential oracle
+regardless of arrival order, seating order, or segment boundaries).  They
+trade device utilization against admission latency instead.  docs/KNOBS.md
+documents each field with tuning guidance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["ServiceConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs of a :class:`~repro.service.StreamingTuner`.
+
+    ``lane_slots`` and ``queue_capacity`` are compile-time shapes: one
+    episode-segment program is compiled per (slots, capacity, space,
+    settings) combination and reused for the service's lifetime.  The
+    pacing knobs (``low_water``, ``step_quota``) are traced scalars — tune
+    them per segment without recompiling.
+    """
+
+    lane_slots: int = 8
+    """Device lane seats advancing concurrently (the compacting episode's
+    slot count).  Size like ``lane_chunk``: each slot pays the speculative
+    lookahead state tensor (``n_trees x M x M*k_gh^la``)."""
+
+    queue_capacity: int = 32
+    """Device-side pending rows refilled per segment.  Bounds how many
+    admitted runs ride each segment beyond the seated ones; admitted
+    requests beyond it simply wait in the host admission buffer."""
+
+    low_water: int | None = None
+    """Segment early-exit: yield to the host when fewer than this many
+    pending rows remain on device AND the host still holds backlog to
+    inject.  None defaults to ``lane_slots`` (refill before seats starve).
+    0 disables the early exit."""
+
+    step_quota: int = 64
+    """Max exploration steps per segment — the responsiveness bound: the
+    host harvests finished runs and admits new arrivals between segments,
+    so a smaller quota means lower admission/result latency and more host
+    round trips."""
+
+    max_pending: int | None = None
+    """Admission backpressure: cap on outstanding (submitted, unresolved)
+    requests.  ``submit`` blocks — or raises with ``block=False`` — while
+    the cap is reached.  None disables backpressure."""
+
+    def __post_init__(self):
+        if self.lane_slots < 1:
+            raise ValueError("lane_slots must be >= 1")
+        if self.queue_capacity < 1:
+            raise ValueError("queue_capacity must be >= 1")
+        if self.step_quota < 1:
+            raise ValueError("step_quota must be >= 1")
+        if self.low_water is not None and self.low_water < 0:
+            raise ValueError("low_water must be >= 0 (or None for auto)")
+        if self.max_pending is not None and self.max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None)")
+
+    def resolved_low_water(self) -> int:
+        """The effective low-water mark (auto = lane_slots, capped at the
+        device queue capacity so the exit condition is satisfiable)."""
+        low = self.lane_slots if self.low_water is None else self.low_water
+        return min(low, self.queue_capacity)

@@ -1,0 +1,279 @@
+"""Device-side half of the streaming tuner: a resident segment engine.
+
+One :class:`SegmentEngine` owns the persistent slot carry of a
+lane-compacting episode (``_episode_segment`` in ``core/optimizer.py``)
+and, per pump, performs the host/device handshake around one bounded
+segment:
+
+1. **seat** — copy the head of the staged admission list straight into
+   idle lane slots (pure array copies of the exact per-run initial states
+   ``_init_run_states`` replays; no arithmetic, so no parity risk);
+2. **inject** — materialize the remaining staged runs as the device-side
+   pending queue (up to ``queue_capacity`` rows);
+3. **dispatch** — run one jitted segment (low-water + step-quota exits are
+   traced scalars: pacing never recompiles);
+4. **harvest** — pull the ``out_*`` banking buffers, rebuild each finished
+   run's :class:`~repro.core.Outcome` via ``_reconstruct_outcome`` (the
+   same post-hoc table math every other backend uses), and re-key in-flight
+   runs to their slot index so the next segment's banking targets stay
+   stable while queue rows are recycled.
+
+Everything here runs on the broker's pump thread; the engine itself is not
+thread-safe (see ``broker.py`` for the locking story).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lookahead
+from repro.core.optimizer import (_CARRY_TIMEOUT_KEYS, _check_shared_space,
+                                  _episode_segment, _fresh_slot_carry,
+                                  _init_run_states, _queue_tables,
+                                  _reconstruct_outcome)
+
+if TYPE_CHECKING:  # service <-> jobs import hygiene mirrors core's
+    from repro.core.optimizer import Outcome
+    from repro.jobs.tables import JobTable
+    from repro.service.config import ServiceConfig
+
+__all__ = ["SegmentEngine", "SegmentReport"]
+
+_STATE_FIELDS = ("keys", "y", "mask", "beta", "explored", "n_exp")
+# queue-row field -> slot-carry field (only "keys" differs)
+_CARRY_NAME = {"keys": "key"}
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentReport:
+    """Host-visible facts about one executed segment."""
+
+    steps: int              # while-loop iterations this segment
+    busy_slot_steps: int    # sum over iterations of seated slots
+    lane_slots: int
+    wall_seconds: float
+    seated: int             # staged runs copied into idle slots host-side
+    injected: int           # staged runs materialized as device queue rows
+    consumed: int           # device queue rows seated on device mid-segment
+    completed: int          # runs banked + reconstructed this segment
+    in_flight: int          # seats still holding a live run afterwards
+
+    @property
+    def occupancy(self) -> float:
+        """Seated-slot fraction of this segment's slot-steps."""
+        return self.busy_slot_steps / max(self.steps * self.lane_slots, 1)
+
+
+class SegmentEngine:
+    """Resident episode state + the seat/inject/dispatch/harvest cycle.
+
+    ``jobs`` fixes the table stack (and therefore the compiled segment
+    geometry) for the service's lifetime: every submitted request must
+    reference one of these :class:`JobTable` objects, and all of them must
+    share one space geometry — the same contract as ``run_queue_batched``,
+    held eagerly at registration instead of per call.
+    """
+
+    def __init__(self, jobs: list[JobTable], settings,
+                 config: ServiceConfig):
+        if not jobs:
+            raise ValueError("register at least one JobTable")
+        _check_shared_space(jobs)
+        if settings.policy == "rnd":
+            raise ValueError(
+                "policy 'rnd' is host-driven (no model to keep device-"
+                "resident); stream it through run_queue instead")
+        self.jobs = list(jobs)
+        self.settings = settings
+        self.config = config
+        job0 = self.jobs[0]
+        self.m_dim = job0.space.n_points
+        self.l_dim = config.lane_slots
+        self.c_dim = config.queue_capacity
+
+        pts, left, thr, u0 = lookahead.space_arrays(job0.space,
+                                                    job0.unit_price)
+        self._space = (pts, left, thr)
+        (self._cost, self._runtime, self._u, self._tmax,
+         self._single) = _queue_tables(self.jobs, u0)
+
+        self._carry = _fresh_slot_carry(self.l_dim, self.m_dim, settings)
+        self._slot_tickets: list = [None] * self.l_dim
+        self._slot_jids = np.zeros(self.l_dim, np.int32)
+        # Cumulative wall/steps for the Outcome.select_seconds amortization
+        # (same estimator as run_queue_batched's, accrued across segments).
+        self._wall = 0.0
+        self._steps = 0
+
+    # ------------------------------------------------------------------ #
+    def job_index(self, job) -> int:
+        for k, j in enumerate(self.jobs):
+            if job is j:
+                return k
+        raise ValueError(
+            f"job {job.name!r} is not registered with this service; pass "
+            "every JobTable at construction (the segment program stacks "
+            "their tables once)")
+
+    def prepare(self, tickets) -> None:
+        """Replay bootstraps for newly staged tickets (Alg. 1 lines 6-8 via
+        ``_init_run_states``, batched) and pin their per-run rows host-side.
+        Idempotent per ticket — a ticket returned to the backlog keeps its
+        rows."""
+        fresh = [t for t in tickets if t.rows is None]
+        if not fresh:
+            return
+        states = _init_run_states([t.request for t in fresh], self.settings)
+        budgets = states.pop("budgets")
+        states["keys"] = np.asarray(states["keys"])
+        fields = _STATE_FIELDS + (_CARRY_TIMEOUT_KEYS
+                                  if self.settings.timeout else ())
+        for r, t in enumerate(fresh):
+            t.rows = {f: np.asarray(states[f][r:r + 1]) for f in fields}
+            t.budget = float(budgets[r])
+            t.jid = self.job_index(t.request.job)
+
+    def in_flight(self) -> int:
+        return sum(t is not None for t in self._slot_tickets)
+
+    # ------------------------------------------------------------------ #
+    def _seat(self, staged: list) -> tuple[list, int]:
+        """Copy staged runs into idle slots host-side; returns the
+        remainder (destined for the device queue) and the seat count."""
+        idle = [i for i, t in enumerate(self._slot_tickets) if t is None]
+        n = min(len(idle), len(staged))
+        if n == 0:
+            return staged, 0
+        slots, seated = idle[:n], staged[:n]
+        sl = jnp.asarray(slots, jnp.int32)
+        carry = self._carry
+        for f in seated[0].rows:
+            name = _CARRY_NAME.get(f, f)
+            stack = jnp.asarray(np.concatenate([t.rows[f] for t in seated]))
+            carry[name] = carry[name].at[sl].set(stack)
+        # A host-seated run banks into its slot's own output row.
+        carry["rid"] = carry["rid"].at[sl].set(sl)
+        carry["active"] = carry["active"].at[sl].set(True)
+        for i, t in zip(slots, seated):
+            self._slot_tickets[i] = t
+            self._slot_jids[i] = t.jid
+        return staged[n:], n
+
+    def _queue_arrays(self, staged: list) -> dict:
+        """Materialize staged runs as the fixed-shape [C, ...] device queue
+        (zero-padded; padding rows sit beyond qtail and are never read)."""
+        c, m = self.c_dim, self.m_dim
+        pad = {"keys": ((c, 2), np.uint32), "y": ((c, m), np.float32),
+               "mask": ((c, m), bool), "beta": ((c,), np.float32),
+               "explored": ((c, m), np.int32), "n_exp": ((c,), np.int32),
+               "cens": ((c, m), bool), "cexpl": ((c, m), bool),
+               "bexpl": ((c, m), np.float32)}
+        fields = _STATE_FIELDS + (_CARRY_TIMEOUT_KEYS
+                                  if self.settings.timeout else ())
+        queue = {}
+        for f in fields:
+            shape, dtype = pad[f]
+            buf = np.zeros(shape, dtype)
+            if staged:
+                buf[:len(staged)] = np.concatenate([t.rows[f]
+                                                    for t in staged])
+            queue[f] = jnp.asarray(buf)
+        return queue
+
+    def run_segment(self, staged: list, low_water: int,
+                    step_quota: int) -> tuple[list, list, SegmentReport]:
+        """One seat/inject/dispatch/harvest cycle.
+
+        ``staged`` must hold at most ``queue_capacity + idle slots``
+        prepared tickets, in admission (priority) order.  Returns
+        ``(resolved, leftover, report)``: finished ``(ticket, Outcome)``
+        pairs, the staged tickets that neither seated nor started (they go
+        back to the broker's backlog), and the segment facts.
+        """
+        self.prepare(staged)
+        t0 = time.perf_counter()
+        staged_q, seated = self._seat(staged)
+        if len(staged_q) > self.c_dim:
+            raise ValueError(f"staged {len(staged_q)} queue rows but device "
+                             f"capacity is {self.c_dim}")
+        if not staged_q and self.in_flight() == 0:
+            return [], [], SegmentReport(0, 0, self.l_dim, 0.0, seated,
+                                         0, 0, 0, 0)
+        queue = self._queue_arrays(staged_q)
+        if self._single:
+            job_ids = None
+        else:
+            job_ids = jnp.asarray(np.concatenate(
+                [self._slot_jids,
+                 np.array([t.jid for t in staged_q], np.int32),
+                 np.zeros(self.c_dim - len(staged_q), np.int32)]))
+        carry, report = jax.block_until_ready(_episode_segment(
+            self._carry, queue, np.int32(len(staged_q)),
+            np.int32(low_water), np.int32(step_quota), job_ids,
+            self._cost, self._runtime if self.settings.timeout else None,
+            *self._space, self._u, self._tmax, self.settings))
+        wall = time.perf_counter() - t0
+        report = {k: np.asarray(v) for k, v in report.items()}
+
+        steps = int(report["steps"])
+        self._wall += wall
+        self._steps += steps
+        sel_s = self._wall / max(self._steps * self.l_dim, 1)
+
+        # Harvest banked runs: out row i < L is the run seated in slot i at
+        # segment start, row L + j the run injected as queue row j.
+        done = np.asarray(report["out_done"])
+        rid = np.asarray(carry["rid"])
+        active = np.asarray(carry["active"])
+        consumed = int(carry["qhead"])
+        row_ticket = dict(enumerate(self._slot_tickets))
+        for j, t in enumerate(staged_q):
+            row_ticket[self.l_dim + j] = t
+        resolved = []
+        for r in np.nonzero(done)[0]:
+            t = row_ticket[int(r)]
+            resolved.append((t, self._outcome_from_row(t, report, int(r),
+                                                       sel_s)))
+
+        # Re-key in-flight runs to their seat and recycle the queue rows.
+        tickets = [row_ticket[int(rid[i])] if active[i] else None
+                   for i in range(self.l_dim)]
+        self._slot_tickets = tickets
+        self._slot_jids = np.array([t.jid if t else 0 for t in tickets],
+                                   np.int32)
+        carry["rid"] = jnp.where(jnp.asarray(active),
+                                 jnp.arange(self.l_dim, dtype=jnp.int32),
+                                 jnp.int32(-1))
+        carry["qhead"] = jnp.int32(0)
+        self._carry = carry
+
+        leftover = staged_q[consumed:]
+        rep = SegmentReport(
+            steps=steps, busy_slot_steps=int(report["busy"]),
+            lane_slots=self.l_dim, wall_seconds=wall, seated=seated,
+            injected=len(staged_q), consumed=consumed,
+            completed=len(resolved), in_flight=self.in_flight())
+        return resolved, leftover, rep
+
+    def _outcome_from_row(self, t, report, r: int, sel_s: float) -> Outcome:
+        n = int(report["out_nexp"][r])
+        explored = [int(i) for i in np.asarray(report["out_expl"][r, :n])]
+        if self.settings.timeout:
+            cflags = [bool(f)
+                      for f in np.asarray(report["out_cexpl"][r, :n])]
+            billed = np.asarray(report["out_bexpl"][r, :n])
+        else:
+            cflags = [False] * len(explored)
+            billed = t.request.job.host_view().cost[explored]
+        # beta stays an np.float32 scalar: _reconstruct_outcome's
+        # ``budget - beta_final`` must run under the same f32 promotion the
+        # sequential oracle's bookkeeping uses.
+        return _reconstruct_outcome(t.request.job, self.settings, t.budget,
+                                    explored, cflags, billed,
+                                    report["out_beta"][r], sel_s)

@@ -1,0 +1,124 @@
+"""Service observability: throughput, lane occupancy, queue depth, latency.
+
+A :class:`MetricsRecorder` accrues counters on the broker's threads (one
+short lock per event); :meth:`MetricsRecorder.snapshot` freezes them into a
+:class:`ServiceMetrics` value object.  Time denominators use *serve*
+seconds — wall time spent inside segments — so a service idling between
+bursts reports the throughput and occupancy of the work it actually did,
+not of the silence in between (the benchmark gates lean on that:
+``benchmarks/streaming_throughput.py``).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+
+import numpy as np
+
+__all__ = ["MetricsRecorder", "ServiceMetrics"]
+
+# Latency percentiles are computed over a sliding window of the most
+# recent resolutions (the mean runs over the full history via running
+# sums) — a long-lived endpoint must not grow state per request.
+_LATENCY_WINDOW = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceMetrics:
+    """Frozen snapshot of a streaming tuner's counters."""
+
+    lane_slots: int
+    segments: int            # segments dispatched
+    steps: int               # exploration loop iterations across segments
+    busy_slot_steps: int     # seated-slot iterations (occupancy numerator)
+    lane_occupancy: float    # busy_slot_steps / (steps * lane_slots)
+    submitted: int
+    resolved: int
+    outstanding: int         # submitted - resolved
+    explorations: int        # sum of resolved runs' NEX
+    serve_seconds: float     # wall time inside segments (excludes idle)
+    runs_per_second: float   # resolved / serve_seconds
+    explorations_per_second: float
+    queue_depth_max: int     # admitted-not-seated runs at segment dispatch
+    queue_depth_mean: float
+    latency_mean_s: float    # submit -> outcome resolution (full history)
+    latency_p50_s: float     # percentiles over the recent window
+    latency_p95_s: float
+
+
+class MetricsRecorder:
+    """Thread-safe accumulator behind :class:`ServiceMetrics`."""
+
+    def __init__(self, lane_slots: int):
+        self._lane_slots = lane_slots
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        """Zero all counters (e.g. after a warmup pass, so benchmark gates
+        measure steady state rather than compile time)."""
+        with self._lock:
+            self._segments = 0
+            self._steps = 0
+            self._busy = 0
+            self._submitted = 0
+            self._resolved = 0
+            self._explorations = 0
+            self._serve_seconds = 0.0
+            self._depth_sum = 0
+            self._depth_max = 0
+            self._latency_sum = 0.0
+            self._latencies: collections.deque[float] = collections.deque(
+                maxlen=_LATENCY_WINDOW)
+
+    def record_submit(self) -> None:
+        with self._lock:
+            self._submitted += 1
+
+    def record_segment(self, steps: int, busy_slot_steps: int,
+                       wall_seconds: float, queue_depth: int) -> None:
+        with self._lock:
+            self._segments += 1
+            self._steps += steps
+            self._busy += busy_slot_steps
+            self._serve_seconds += wall_seconds
+            self._depth_sum += queue_depth
+            self._depth_max = max(self._depth_max, queue_depth)
+
+    def record_resolve(self, latency_seconds: float, nex: int) -> None:
+        with self._lock:
+            self._resolved += 1
+            self._explorations += nex
+            self._latency_sum += latency_seconds
+            self._latencies.append(latency_seconds)
+
+    def snapshot(self) -> ServiceMetrics:
+        with self._lock:
+            lat = np.asarray(self._latencies, np.float64)
+            serve = self._serve_seconds
+            return ServiceMetrics(
+                lane_slots=self._lane_slots,
+                segments=self._segments,
+                steps=self._steps,
+                busy_slot_steps=self._busy,
+                lane_occupancy=self._busy / max(self._steps
+                                                * self._lane_slots, 1),
+                submitted=self._submitted,
+                resolved=self._resolved,
+                outstanding=self._submitted - self._resolved,
+                explorations=self._explorations,
+                serve_seconds=serve,
+                runs_per_second=self._resolved / serve if serve else 0.0,
+                explorations_per_second=(self._explorations / serve
+                                         if serve else 0.0),
+                queue_depth_max=self._depth_max,
+                queue_depth_mean=(self._depth_sum / self._segments
+                                  if self._segments else 0.0),
+                latency_mean_s=(self._latency_sum / self._resolved
+                                if self._resolved else 0.0),
+                latency_p50_s=(float(np.percentile(lat, 50))
+                               if lat.size else 0.0),
+                latency_p95_s=(float(np.percentile(lat, 95))
+                               if lat.size else 0.0))

@@ -1,0 +1,250 @@
+"""Streaming tuning service: arrival-order invariance + broker mechanics.
+
+The service's determinism contract extends the refill-order invariance pin
+(tests/test_batched_harness.py) to *arrival* order: however runs reach the
+device — one batch, shuffled priorities, bursts straddling segment
+boundaries, submits landing mid-episode — every run's Outcome (including
+``spend_trajectory``) is bit-identical to the sequential oracle's.  The
+broker mechanics (backpressure, priorities, futures, background worker,
+metrics) are pinned alongside.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import RunRequest, Settings, run_queue, run_queue_batched
+from repro.jobs import synthetic_job
+from repro.service import (QueueFull, ServiceConfig, StreamingTuner,
+                           TuningTicket)
+from tests.test_batched_harness import _assert_outcomes_equal
+
+CFG = ServiceConfig(lane_slots=3, queue_capacity=4, step_quota=8)
+
+
+def _jobs(n=2):
+    return [synthetic_job(i, name=f"syn{i}") for i in range(n)]
+
+
+def _requests(jobs, n=7, seed0=300):
+    return [RunRequest(jobs[r % len(jobs)], seed=seed0 + r,
+                       budget_b=5.0 if r % 3 == 0 else 1.5)
+            for r in range(n)]
+
+
+def _stream(jobs, settings, reqs, arrival, config=CFG):
+    """Drive one service through an arrival schedule; outcomes return in
+    request order regardless of how they arrived."""
+    svc = StreamingTuner(jobs, settings, config)
+    tickets: dict[int, TuningTicket] = {}
+    for batch in arrival:
+        for r in batch:
+            tickets[r] = svc.submit(reqs[r])
+        svc.pump()                      # later batches land mid-episode
+    svc.drain()
+    return [tickets[r].result() for r in range(len(reqs))]
+
+
+@pytest.mark.parametrize("timeout", [False, True])
+def test_arrival_order_invariance(timeout):
+    """>= 3 arrival orders (single batch, shuffled mid-episode submits,
+    reversed bursts) against the sequential oracle: bit-identical Outcomes
+    and spend trajectories, with and without timeout censoring."""
+    jobs = _jobs()
+    s = Settings(policy="lynceus", la=1, k_gh=2, refit="frozen",
+                 timeout=timeout)
+    reqs = _requests(jobs)
+    seq = run_queue(reqs, s)
+    if timeout:
+        assert any(o.censored for o in seq)
+    arrivals = [
+        [[0, 1, 2, 3, 4, 5, 6]],                  # one batch, then drain
+        [[3, 0, 6], [2, 5], [1, 4]],              # shuffled, mid-episode
+        [[6, 5], [4, 3], [2, 1], [0]],            # reversed bursts
+    ]
+    for arrival in arrivals:
+        outs = _stream(jobs, s, reqs, arrival)
+        _assert_outcomes_equal(seq, outs)
+
+
+def test_streamed_matches_compact_batch():
+    """The service and the one-shot compacting entry drain the same queue
+    to identical outcomes (they share the segment body by construction)."""
+    jobs = _jobs(3)
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = _requests(jobs, n=8, seed0=900)
+    bat = run_queue_batched(reqs, s, lane_slots=3)
+    outs = _stream(jobs, s, reqs, [[2, 7, 0], [5, 1], [3, 6, 4]])
+    _assert_outcomes_equal(bat, outs)
+
+
+def test_single_job_service():
+    """One registered job keeps the shared-[M] selector geometry."""
+    job = synthetic_job(1)
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = [RunRequest(job, seed=50 + r, budget_b=1.5) for r in range(4)]
+    seq = run_queue(reqs, s)
+    outs = _stream([job], s, reqs, [[1, 0], [3, 2]],
+                   ServiceConfig(lane_slots=2, queue_capacity=2,
+                                 step_quota=6))
+    _assert_outcomes_equal(seq, outs)
+
+
+def test_priorities_reorder_seating_not_outcomes():
+    """Priorities decide when a run is seated, never what it computes; a
+    high-priority latecomer overtakes the backlog."""
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = _requests(jobs, n=6, seed0=700)
+    seq = run_queue(reqs, s)
+    svc = StreamingTuner(jobs, s, ServiceConfig(lane_slots=2,
+                                                queue_capacity=2,
+                                                step_quota=6))
+    tickets = [svc.submit(q, priority=len(reqs) - r)
+               for r, q in enumerate(reqs[:-1])]
+    urgent = svc.submit(reqs[-1], priority=-1)
+    svc.pump()
+    assert urgent.done() or svc._engine._slot_tickets.count(urgent) == 1
+    svc.drain()
+    _assert_outcomes_equal(seq, [t.result() for t in tickets + [urgent]])
+
+
+def test_backpressure_max_pending():
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = _requests(jobs, n=5, seed0=810)
+    svc = StreamingTuner(jobs, s,
+                         ServiceConfig(lane_slots=2, queue_capacity=2,
+                                       step_quota=32, max_pending=2))
+    t0 = svc.submit(reqs[0])
+    t1 = svc.submit(reqs[1])
+    with pytest.raises(QueueFull):
+        svc.submit(reqs[2], block=False)
+    # block=True makes room by pumping inline (no worker running).
+    t2 = svc.submit(reqs[2], block=True)
+    assert t0.done() or t1.done()
+    rest = [svc.submit(q) for q in reqs[3:]]
+    svc.drain()
+    _assert_outcomes_equal(run_queue(reqs, s),
+                           [t.result() for t in [t0, t1, t2] + rest])
+
+
+def test_background_worker_resolves_futures():
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = _requests(jobs, n=4, seed0=610)
+    with StreamingTuner(jobs, s, CFG).start() as svc:
+        tickets = [svc.submit(q) for q in reqs]
+        outs = [t.result(timeout=300) for t in tickets]
+        assert svc.drain(timeout=300) is not None
+    assert svc.outstanding == 0
+    _assert_outcomes_equal(run_queue(reqs, s), outs)
+
+
+def test_step_quota_bounds_segments():
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = _requests(jobs, n=6, seed0=420)
+    svc = StreamingTuner(jobs, s, ServiceConfig(lane_slots=2,
+                                                queue_capacity=4,
+                                                step_quota=3))
+    tickets = [svc.submit(q) for q in reqs]
+    svc.drain()
+    m = svc.metrics()
+    assert m.segments >= 2                    # quota forced multiple slices
+    assert m.steps <= m.segments * 3
+    _assert_outcomes_equal(run_queue(reqs, s),
+                           [t.result() for t in tickets])
+
+
+def test_metrics_accounting():
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = _requests(jobs, n=5, seed0=530)
+    svc = StreamingTuner(jobs, s, CFG)
+    tickets = [svc.submit(q) for q in reqs]
+    outs = svc.drain()
+    m = svc.metrics()
+    assert m.submitted == m.resolved == len(reqs)
+    assert m.outstanding == 0
+    assert 0.0 < m.lane_occupancy <= 1.0
+    assert m.busy_slot_steps <= m.steps * m.lane_slots
+    assert m.explorations == sum(o.nex for o in outs)
+    assert m.serve_seconds > 0 and m.runs_per_second > 0
+    assert m.latency_p50_s <= m.latency_p95_s
+    assert m.queue_depth_max >= 0
+    # drain returned the same outcomes the tickets hold, in ticket order
+    assert [o.explored for o in outs] == [t.result().explored
+                                          for t in tickets]
+    svc.reset_metrics()
+    assert svc.metrics().segments == 0
+
+
+def test_pump_failure_restages_staged_tickets(monkeypatch):
+    """A segment that dies must not strand admitted tickets: unstarted
+    staged tickets return to the backlog and a later pump drains them."""
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = _requests(jobs, n=3, seed0=222)
+    svc = StreamingTuner(jobs, s, CFG)
+    tickets = [svc.submit(q) for q in reqs]
+    orig = svc._engine.run_segment
+    calls = {"n": 0}
+
+    def boom(staged, low, quota):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient device failure")
+        return orig(staged, low, quota)
+
+    monkeypatch.setattr(svc._engine, "run_segment", boom)
+    with pytest.raises(RuntimeError, match="transient"):
+        svc.pump()
+    svc.drain()                               # retry drains the restaged work
+    _assert_outcomes_equal(run_queue(reqs, s),
+                           [t.result() for t in tickets])
+
+
+def test_unregistered_job_rejected():
+    jobs = _jobs()
+    svc = StreamingTuner(jobs, Settings(policy="la0", k_gh=2), CFG)
+    stranger = synthetic_job(9, name="stranger")
+    with pytest.raises(ValueError, match="not registered"):
+        svc.submit(job=stranger, seed=1)
+
+
+def test_rnd_policy_rejected():
+    with pytest.raises(ValueError, match="rnd"):
+        StreamingTuner(_jobs(), Settings(policy="rnd"), CFG)
+
+
+def test_mismatched_spaces_rejected():
+    a = synthetic_job(0)
+    b = synthetic_job(0, n_a=3, n_b=3)
+    with pytest.raises(ValueError, match="space geometry"):
+        StreamingTuner([a, b], Settings(policy="la0", k_gh=2), CFG)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="lane_slots"):
+        ServiceConfig(lane_slots=0)
+    with pytest.raises(ValueError, match="step_quota"):
+        ServiceConfig(step_quota=0)
+    with pytest.raises(ValueError, match="max_pending"):
+        ServiceConfig(max_pending=0)
+    assert ServiceConfig(lane_slots=4, queue_capacity=2,
+                         low_water=None).resolved_low_water() == 2
+
+
+def test_bootstrap_prefix_respected():
+    """Submitted runs replay the same seed-derived bootstrap the oracle
+    uses (paper fairness protocol), and explicit bootstraps are honored."""
+    job = synthetic_job(2)
+    s = Settings(policy="la0", la=0, k_gh=2)
+    req = RunRequest(job, seed=77, budget_b=1.5)
+    svc = StreamingTuner([job], s, ServiceConfig(lane_slots=1,
+                                                 queue_capacity=1,
+                                                 step_quota=64))
+    t = svc.submit(req)
+    out = t.result()
+    boot = tuple(int(i) for i in req.resolved_bootstrap())
+    assert out.explored[:len(boot)] == boot
