@@ -14,15 +14,24 @@ budget) cell.  Two sections:
   episode.  Outcomes must match run for run between the two schedulers
   (refill order never changes results — see ``_episode_segment``); the
   win is aggregate throughput, gated at >=1.5x.
+* **mixed-geometry queue** — the geometry-bucket case: a queue mixing jobs
+  of *distinct* [M, F, T] space geometries, padded into one
+  ``GeometryBucket`` and drained as ONE compiled episode, vs the only
+  native alternative (split the queue by geometry, compile and drain one
+  episode per geometry).  Gates: zero drift vs the sequential oracle,
+  exactly one episode compile for the bucketed drain (vs one per geometry
+  for the split), and a cold-start (compile-included) win for the bucket.
 """
 
 from __future__ import annotations
 
 import time
 
+import jax
+
 from benchmarks.common import csv_line, outcomes_equal, write_json
-from repro.core import (RunRequest, Settings, run_many, run_many_batched,
-                        run_queue_batched)
+from repro.core import (RunRequest, Settings, episode_cache_size, run_many,
+                        run_many_batched, run_queue, run_queue_batched)
 from repro.jobs import synthetic_job
 
 GRID = [("bo", 0, "exact"), ("la0", 0, "exact"), ("lynceus", 1, "frozen"),
@@ -143,11 +152,103 @@ def tail_heavy(n_jobs, runs_per_job, lane_slots, out):
     csv_line("batched", "tailheavy", "speedup_ge_1.5x", speedup >= 1.5)
 
 
+def _geometry_queue(runs_per_job):
+    """Requests over three jobs with pairwise-distinct [M, F, T] space
+    geometries (the mixed-fleet shape: Flora/UDAO-style heterogeneous
+    workloads through one optimizer)."""
+    jobs = [synthetic_job(40, n_a=6, n_b=4, name="geo24"),
+            synthetic_job(41, n_a=5, n_b=3, name="geo15"),
+            synthetic_job(42, n_a=4, n_b=8, name="geo32")]
+    assert len({j.space.geometry for j in jobs}) == 3
+    reqs = []
+    for k, job in enumerate(jobs):
+        for r in range(runs_per_job):
+            b = TAIL_LONG_B if r % (TAIL_RATIO + 1) == 0 else TAIL_SHORT_B
+            reqs.append(RunRequest(job, seed=95001 + 1000 * k + r,
+                                   budget_b=b))
+    return jobs, reqs
+
+
+def mixed_geometry(runs_per_job, lane_slots, out):
+    """Geometry-bucketed queue vs per-geometry split: parity with the
+    sequential oracle, compile count (1 per bucket vs 1 per geometry), and
+    cold-start wall clock including compilation.
+
+    ``jax.clear_caches()`` before each cold drain makes the compile-count
+    deltas and cold timings honest (nothing warmed earlier in the process
+    leaks in); the oracle runs first so its outcomes are computed before
+    any cache surgery.
+    """
+    jobs, reqs = _geometry_queue(runs_per_job)
+    s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
+    seq = run_queue(reqs, s)
+    by_geom = [[q for q in reqs if q.job is job] for job in jobs]
+
+    # Bucketed: the whole cross-geometry queue, one episode program.
+    jax.clear_caches()
+    e0 = episode_cache_size()
+    t0 = time.perf_counter()
+    bucketed = run_queue_batched(reqs, s, lane_slots=lane_slots)
+    t_cold_bucket = time.perf_counter() - t0
+    compiles_bucket = episode_cache_size() - e0
+    t0 = time.perf_counter()
+    bucketed_warm = run_queue_batched(reqs, s, lane_slots=lane_slots)
+    t_warm_bucket = time.perf_counter() - t0
+
+    # Split: the only native alternative — one episode per geometry.
+    jax.clear_caches()
+    e0 = episode_cache_size()
+    t0 = time.perf_counter()
+    split = []
+    for group in by_geom:
+        split.extend(run_queue_batched(group, s, lane_slots=lane_slots))
+    t_cold_split = time.perf_counter() - t0
+    compiles_split = episode_cache_size() - e0
+
+    order = [q for group in by_geom for q in group]
+    seq_of = {id(q): o for q, o in zip(reqs, seq)}
+    drift_bucket = sum(not outcomes_equal(seq_of[id(q)], o)
+                       for q, o in zip(reqs, bucketed))
+    drift_bucket += sum(not outcomes_equal(a, b)
+                        for a, b in zip(bucketed, bucketed_warm))
+    drift_split = sum(not outcomes_equal(seq_of[id(q)], o)
+                      for q, o in zip(order, split))
+    warmup_reduction = t_cold_split / t_cold_bucket
+    out["mixed_geometry"] = {
+        "jobs": len(jobs), "geometries": len(by_geom), "runs": len(reqs),
+        "lane_slots": lane_slots,
+        "episode_compiles_bucketed": compiles_bucket,
+        "episode_compiles_split": compiles_split,
+        "seconds_cold_bucketed": t_cold_bucket,
+        "seconds_cold_split": t_cold_split,
+        "seconds_warm_bucketed": t_warm_bucket,
+        "warmup_reduction": warmup_reduction,
+        "drifting_runs_bucketed": drift_bucket,
+        "drifting_runs_split": drift_split,
+    }
+    csv_line("batched", "mixedgeo", "runs", len(reqs))
+    csv_line("batched", "mixedgeo", "drifting_runs", drift_bucket)
+    csv_line("batched", "mixedgeo", "episode_compiles_bucketed",
+             compiles_bucket)
+    csv_line("batched", "mixedgeo", "episode_compiles_split", compiles_split)
+    csv_line("batched", "mixedgeo", "one_compile_per_bucket",
+             compiles_bucket == 1)
+    csv_line("batched", "mixedgeo", "cold_bucketed_seconds",
+             round(t_cold_bucket, 2))
+    csv_line("batched", "mixedgeo", "cold_split_seconds",
+             round(t_cold_split, 2))
+    csv_line("batched", "mixedgeo", "warmup_reduction",
+             round(warmup_reduction, 2))
+    csv_line("batched", "mixedgeo", "warmup_reduced", warmup_reduction > 1.0)
+
+
 def main(n_runs=20, quick=False):
     out = {}
     parity_and_speedup(30 if quick else max(n_runs, 100), out)
     if quick:
         tail_heavy(n_jobs=2, runs_per_job=12, lane_slots=8, out=out)
+        mixed_geometry(runs_per_job=4, lane_slots=4, out=out)
     else:
         tail_heavy(n_jobs=4, runs_per_job=24, lane_slots=16, out=out)
+        mixed_geometry(runs_per_job=8, lane_slots=6, out=out)
     write_json("batched", out)

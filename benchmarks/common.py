@@ -32,6 +32,12 @@ DEFAULT_BACKEND = "batched"
 # Which batched scheduler drains the sweep: "compact" (lane-compacting work
 # queue, default) or "lockstep" (fixed lanes; benchmarks.run --scheduler).
 DEFAULT_SCHEDULER = "compact"
+# Geometry bucket (m, f, t) the batched/stream sweeps pad every job into,
+# or None for native geometry (benchmarks.run --bucket m,f,t — the padded
+# audit mode).  Part of the cache key: padded runs are bit-identical to
+# native ones on audited configs, but an audit that silently read native
+# (PR 3/4-era) cache files would be vacuous.
+DEFAULT_BUCKET = None
 # Segment/service knobs the "stream" backend sweeps run under.  Part of the
 # stream cache key: pacing must never alias across knob settings (the whole
 # point of a --stream audit is that it doesn't matter — serving a compact
@@ -45,6 +51,10 @@ def _stream_config():
         from repro.service import ServiceConfig
         DEFAULT_STREAM = ServiceConfig(lane_slots=8, queue_capacity=16,
                                        step_quota=16)
+    if DEFAULT_STREAM.bucket != DEFAULT_BUCKET:
+        import dataclasses
+        DEFAULT_STREAM = dataclasses.replace(DEFAULT_STREAM,
+                                             bucket=DEFAULT_BUCKET)
     return DEFAULT_STREAM
 
 
@@ -66,10 +76,21 @@ def outcomes_equal(a, b) -> bool:
     return all(getattr(a, f) == getattr(b, f) for f in OUTCOME_FIELDS)
 
 
-def _backend_key(backend: str) -> str:
+def _bucket_key(bucket) -> str:
+    """Cache-key component of the active geometry bucket ('' when native):
+    a padded sweep must never alias the native files (nor one bucket's
+    files another's)."""
+    if bucket is None:
+        return ""
+    return "__pad" + "x".join(str(int(w)) for w in bucket)
+
+
+def _backend_key(backend: str, bucket) -> str:
     """The backend component of the cache key, carrying every knob of that
     backend that an audit must not alias across."""
     if backend == "sequential":
+        # The oracle always runs native: a bucket audit compares padded
+        # batched/stream runs against these same sequential files.
         return "sequential"
     if backend == "stream":
         # The streaming/segment knobs ride along: lane seats, device queue
@@ -79,11 +100,12 @@ def _backend_key(backend: str) -> str:
         # or, worse, the compact-batch files cached by PR 3.
         c = _stream_config()
         return (f"stream-l{c.lane_slots}-c{c.queue_capacity}"
-                f"-w{c.resolved_low_water()}-q{c.step_quota}")
-    return f"{backend}-{DEFAULT_SCHEDULER}"
+                f"-w{c.resolved_low_water()}-q{c.step_quota}"
+                + _bucket_key(bucket))
+    return f"{backend}-{DEFAULT_SCHEDULER}{_bucket_key(bucket)}"
 
 
-def _key(ds, job, policy, la, b, n_runs, refit, backend, timeout):
+def _key(ds, job, policy, la, b, n_runs, refit, backend, timeout, bucket):
     # backend is part of the key: a --sequential audit must never be served
     # results the batched harness cached (they agree on audited configs, but
     # serving one for the other would make the audit vacuous).  For the
@@ -91,12 +113,15 @@ def _key(ds, job, policy, la, b, n_runs, refit, backend, timeout):
     # --scheduler lockstep audit must re-run, not read compact's cache), and
     # the stream backend carries its segment/service knobs (_backend_key).
     # Ditto the timeout flag: fig_timeout's on/off comparison must never
-    # alias.  The v2 schema token shields readers of the newer outcome
-    # fields (spend_trajectory, n_censored) from pre-timeout-era cache
-    # files.
+    # alias.  The version token shields readers from cache files whose
+    # contents the current code could not reproduce: v2 fenced off
+    # pre-timeout-era files (no spend_trajectory/n_censored); v3 fences
+    # off pre-geometry-bucket files — PR 5 changed the bootstrap-weight
+    # derivation (trees.bootstrap_weights: padding-invariant per-point
+    # fold_in draws), which shifts every simulated outcome.
     to = "__to" if timeout else ""
     return (f"{ds}__{job}__{policy}{la}__b{b}__r{n_runs}__{refit}"
-            f"__{_backend_key(backend)}{to}__v2")
+            f"__{_backend_key(backend, bucket)}{to}__v3")
 
 
 def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
@@ -114,14 +139,17 @@ def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
     mechanism i).
     """
     backend = backend or DEFAULT_BACKEND
-    if backend == "stream" and policy == "rnd":
-        # rnd is host-driven (no device program to stream): it runs — and
-        # must be cache-keyed — as the batched fallthrough, not as a
-        # vacuous "stream" audit of batched results.
-        backend = "batched"
+    bucket = DEFAULT_BUCKET
+    if policy == "rnd":
+        # rnd is host-driven (no device program to stream OR pad): it
+        # runs — and must be cache-keyed — as the native batched
+        # fallthrough, never as a vacuous "stream"/"padded" audit of
+        # results no service or bucket ever touched.
+        backend = "batched" if backend == "stream" else backend
+        bucket = None
     CACHE.mkdir(parents=True, exist_ok=True)
     f = CACHE / (_key(ds_name, job.name, policy, la, b, n_runs, refit,
-                      backend, timeout) + ".json")
+                      backend, timeout, bucket) + ".json")
     if f.exists():
         return json.loads(f.read_text())
     s = Settings(policy=policy, la=la, k_gh=3, refit=refit, timeout=timeout)
@@ -136,7 +164,8 @@ def run_policy(ds_name, job, policy, la, *, b=3.0, n_runs=20,
         outcomes = [t.result() for t in tickets]
     else:
         outcomes = run_many_batched(job, s, budget_b=b, seeds=seeds,
-                                    scheduler=DEFAULT_SCHEDULER)
+                                    scheduler=DEFAULT_SCHEDULER,
+                                    bucket=bucket)
     outs = []
     for r, o in enumerate(outcomes):
         outs.append({"cno": o.cno, "nex": o.nex, "spent": o.spent,

@@ -55,9 +55,26 @@ def main(argv=None):
                     help="batched-backend scheduler: lane-compacting work "
                          "queue (default) or the fixed-lane lockstep "
                          "baseline")
+    ap.add_argument("--bucket", default=None, metavar="M,F,T",
+                    help="pad every job into this geometry bucket (padded "
+                         "audit mode: outcomes must match the native "
+                         "backend; cached under a distinct key)")
     args = ap.parse_args(argv)
     if args.sequential and args.stream:
         ap.error("--sequential and --stream are mutually exclusive")
+    if args.bucket is not None:
+        if args.sequential:
+            ap.error("--bucket pads the batched/stream backends; the "
+                     "sequential oracle always runs native")
+        if args.scheduler == "lockstep":
+            ap.error("--bucket requires the compact scheduler")
+        try:
+            widths = tuple(int(w) for w in args.bucket.split(","))
+        except ValueError:
+            widths = ()
+        if len(widths) != 3 or any(w < 1 for w in widths):
+            ap.error("--bucket expects three positive integers: M,F,T")
+        common.DEFAULT_BUCKET = widths
     if args.sequential:
         common.DEFAULT_BACKEND = "sequential"
     elif args.stream:

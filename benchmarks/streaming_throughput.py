@@ -18,6 +18,11 @@ Two gates (the ISSUE-4 acceptance criteria):
 
 Outcomes must also match run for run — arrival batching never changes
 results (the determinism contract; ``tests/test_streaming_service.py``).
+
+A third section streams a **mixed-geometry** trace: jobs of distinct
+[M, F, T] space geometries, auto-padded into one ``GeometryBucket``,
+served by ONE compiled segment program.  Gates: zero drift vs the
+sequential oracle and exactly one episode compile for the whole fleet.
 """
 
 from __future__ import annotations
@@ -25,7 +30,8 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import csv_line, outcomes_equal, write_json
-from repro.core import RunRequest, Settings, run_queue_batched
+from repro.core import (RunRequest, Settings, episode_cache_size, run_queue,
+                        run_queue_batched)
 from repro.jobs import synthetic_job
 from repro.service import ServiceConfig, StreamingTuner
 
@@ -80,6 +86,46 @@ def _run_stream(svc, bursts):
     return [t.result() for t in tickets]
 
 
+def mixed_geometry_stream(n_bursts, out):
+    """A mixed-geometry arrival trace through one resident service: three
+    registered jobs of distinct [M, F, T], one bucket, one compiled
+    segment program, every ticket bit-identical to the sequential oracle."""
+    jobs = [synthetic_job(50, n_a=10, n_b=8, name="geo80"),
+            synthetic_job(51, n_a=8, n_b=6, name="geo48"),
+            synthetic_job(52, n_a=6, n_b=11, name="geo66")]
+    assert len({j.space.geometry for j in jobs}) == 3
+    s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
+    bursts = _trace(jobs, n_bursts, seed0=80001)
+    reqs = [q for burst in bursts for q in burst]
+    seq = run_queue(reqs, s)
+
+    cfg = ServiceConfig(lane_slots=LANE_SLOTS,
+                        queue_capacity=4 * LANE_SLOTS, step_quota=4)
+    svc = StreamingTuner(jobs, s, cfg)
+    e0 = episode_cache_size()
+    t0 = time.perf_counter()
+    outs = _run_stream(svc, bursts)
+    wall = time.perf_counter() - t0
+    compiles = episode_cache_size() - e0
+
+    m = svc.metrics()
+    drift = sum(not outcomes_equal(a, b) for a, b in zip(seq, outs))
+    out["mixed_geometry_stream"] = {
+        "requests": len(reqs), "bursts": n_bursts, "jobs": len(jobs),
+        "bucket": list(svc._engine.bucket.shape),
+        "episode_compiles": compiles, "seconds": wall,
+        "lane_occupancy": m.lane_occupancy, "segments": m.segments,
+        "drifting_runs": drift,
+    }
+    csv_line("streaming", "mixedgeo_requests", len(reqs))
+    csv_line("streaming", "mixedgeo_bucket",
+             "x".join(str(w) for w in svc._engine.bucket.shape))
+    csv_line("streaming", "mixedgeo_drifting_runs", drift)
+    csv_line("streaming", "mixedgeo_episode_compiles", compiles)
+    csv_line("streaming", "mixedgeo_one_compile_per_bucket", compiles == 1)
+    csv_line("streaming", "mixedgeo_occupancy", round(m.lane_occupancy, 3))
+
+
 def main(n_runs=20, quick=False):
     jobs = [synthetic_job(30 + k, **SPACE) for k in range(2)]
     s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
@@ -130,4 +176,5 @@ def main(n_runs=20, quick=False):
     csv_line("streaming", "occupancy_ge_0.8", m.lane_occupancy >= 0.8)
     csv_line("streaming", "speedup", round(speedup, 2))
     csv_line("streaming", "speedup_ge_1.5x", speedup >= 1.5)
+    mixed_geometry_stream(n_bursts=4 if quick else 6, out=out)
     write_json("streaming", out)

@@ -3,8 +3,11 @@
 # + docs gate.  Exits nonzero on any test failure, any sequential/batched
 # outcome divergence (timeouts off OR on, lockstep AND compacting
 # schedulers), any streamed-vs-oracle divergence on the arrival-trace
-# smoke, a missing speedup, a tracked .pyc file, a broken doc link, or a
-# doc code fence that no longer runs against the current API.
+# smoke, any mixed-GEOMETRY divergence (three distinct [M, F, T] jobs
+# padded into one bucket, through the queue and the streaming service,
+# timeout on) or a bucketed drain that compiles more than one episode
+# program, a missing speedup, a tracked .pyc file, a broken doc link, or
+# a doc code fence that no longer runs against the current API.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -23,7 +26,7 @@ python -m pytest -q
 # hypothesis, and both code paths have to stay green.
 REPRO_NO_HYPOTHESIS=1 python -m pytest -q \
     tests/test_censored_properties.py tests/test_xla_wobble_regression.py \
-    tests/test_core_acquisition.py
+    tests/test_core_acquisition.py tests/test_padded_space.py
 
 # Docs gate: broken relative links + doc-embedded code executed against
 # the current API (scripts/check_docs.py), and examples stay importable.
@@ -98,6 +101,74 @@ print(f"ci-smoke streaming: {bad}/{len(streq)} mismatching runs over "
 failures += bad
 if sum(len(o.censored) for o in stseq) == 0:
     print("ci-smoke streaming: censoring not exercised")
+    failures += 1
+
+# Mixed-GEOMETRY smoke (timeout on): three jobs of distinct [M, F, T]
+# padded into one bucket must drain bit-identical to the oracle through
+# the bucketed compact queue AND the streaming service, while each job's
+# native runs still match under both schedulers; the bucketed drain and
+# the streamed fleet must each compile exactly ONE episode program (and
+# zero standalone selector programs — selection is inlined).
+from repro.core import episode_cache_size, selector_cache_size
+from repro.jobs import synthetic_job as synth
+# Mirrors tests/test_batched_harness.py::_distinct_geometry_jobs — keep
+# the fleets in lockstep so ci and the suites audit one geometry set.
+geo_jobs = [synth(0, n_a=6, n_b=4, name="g24"),
+            synth(1, n_a=5, n_b=3, name="g15"),
+            synth(2, n_a=4, n_b=8, name="g32")]
+assert len({j.space.geometry for j in geo_jobs}) == 3
+s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen", timeout=True)
+geo_reqs = [RunRequest(geo_jobs[r % 3], seed=600 + r,
+                       budget_b=4.0 if r % 3 == 0 else 1.5)
+            for r in range(7)]
+geo_seq = run_queue(geo_reqs, s)
+if sum(len(o.censored) for o in geo_seq) == 0:
+    print("ci-smoke mixed-geometry: censoring not exercised")
+    failures += 1
+e0, sel0 = episode_cache_size(), selector_cache_size()
+geo_bat = run_queue_batched(geo_reqs, s, lane_slots=3)
+compiles = episode_cache_size() - e0
+sel_compiles = selector_cache_size() - sel0
+bad = sum(not outcomes_equal(a, b) for a, b in zip(geo_seq, geo_bat))
+print(f"ci-smoke mixed-geometry queue: {bad}/{len(geo_reqs)} mismatching "
+      f"runs, {compiles} episode / {sel_compiles} selector compile(s) "
+      "for 3 geometries")
+failures += bad
+if compiles != 1 or sel_compiles != 0:
+    print("ci-smoke mixed-geometry queue: expected exactly 1 episode "
+          "compile per bucket and 0 standalone selector compiles")
+    failures += 1
+# each member job's runs, native, both schedulers, vs its oracle rows
+for k, j in enumerate(geo_jobs):
+    mine = [(q, o) for q, o in zip(geo_reqs, geo_seq) if q.job is j]
+    for sched in ("lockstep", "compact"):
+        nat = run_many_batched(j, s, seeds=[q.seed for q, _ in mine],
+                               budget_b=[q.budget_b for q, _ in mine],
+                               scheduler=sched)
+        bad = sum(not outcomes_equal(a, b)
+                  for (_, a), b in zip(mine, nat))
+        print(f"ci-smoke mixed-geometry native {j.name}/{sched}: "
+              f"{bad}/{len(mine)} mismatching runs")
+        failures += bad
+svc = StreamingTuner(geo_jobs, s, ServiceConfig(lane_slots=2,
+                                                queue_capacity=3,
+                                                step_quota=5))
+e0, sel0 = episode_cache_size(), selector_cache_size()
+tix = [svc.submit(q) for q in geo_reqs[:4]]
+svc.pump()                                       # rest land mid-episode
+tix += [svc.submit(q) for q in geo_reqs[4:]]
+svc.drain()
+compiles = episode_cache_size() - e0
+sel_compiles = selector_cache_size() - sel0
+bad = sum(not outcomes_equal(a, t.result())
+          for a, t in zip(geo_seq, tix))
+print(f"ci-smoke mixed-geometry streaming: {bad}/{len(geo_reqs)} "
+      f"mismatching runs, {compiles} episode / {sel_compiles} selector "
+      "compile(s)")
+failures += bad
+if compiles != 1 or sel_compiles != 0:
+    print("ci-smoke mixed-geometry streaming: expected exactly 1 episode "
+          "compile per bucket and 0 standalone selector compiles")
     failures += 1
 
 s = Settings(policy="la0", la=0, k_gh=3)

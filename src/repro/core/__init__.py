@@ -3,6 +3,7 @@
 The paper's primary contribution.  Layout:
 
 * ``space``       — discrete configuration spaces + Latin-Hypercube bootstrap
+                    + geometry buckets (fixed-width padded selector programs)
 * ``trees``       — fixed-shape bagged regression-tree surrogate (vmap-able)
 * ``acquisition`` — EI / constrained EI / budget filter / Gauss-Hermite
 * ``lookahead``   — NextConfig/ExplorePaths (Algs. 1-2) as one jitted program
@@ -11,17 +12,21 @@ The paper's primary contribution.  Layout:
 * ``extensions``  — §4.4: multiple constraints, setup costs
 """
 
-from repro.core.space import DiscreteSpace, latin_hypercube_indices
+from repro.core.space import (DiscreteSpace, GeometryBucket, PaddedSpace,
+                              latin_hypercube_indices)
 from repro.core.lookahead import (Settings, select_next, select_next_batched,
-                                  make_selector, make_batch_selector)
-from repro.core.optimizer import (Outcome, RunRequest, optimize, run_many,
-                                  run_many_batched, run_queue,
-                                  run_queue_batched)
+                                  make_selector, make_batch_selector,
+                                  selector_cache_size)
+from repro.core.optimizer import (Outcome, RunRequest, episode_cache_size,
+                                  optimize, run_many, run_many_batched,
+                                  run_queue, run_queue_batched)
 from repro.core import acquisition, metrics, trees
 
 __all__ = [
-    "DiscreteSpace", "latin_hypercube_indices", "Settings", "select_next",
-    "select_next_batched", "make_selector", "make_batch_selector", "Outcome",
-    "RunRequest", "optimize", "run_many", "run_many_batched", "run_queue",
+    "DiscreteSpace", "GeometryBucket", "PaddedSpace",
+    "latin_hypercube_indices", "Settings", "select_next",
+    "select_next_batched", "make_selector", "make_batch_selector",
+    "selector_cache_size", "Outcome", "RunRequest", "episode_cache_size",
+    "optimize", "run_many", "run_many_batched", "run_queue",
     "run_queue_batched", "acquisition", "metrics", "trees",
 ]

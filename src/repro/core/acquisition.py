@@ -36,7 +36,8 @@ from jax.scipy.stats import norm
 
 __all__ = [
     "expected_improvement", "prob_leq", "constraint_prob", "ei_constrained",
-    "incumbent", "budget_ok", "normal_quantile", "quantize_scores",
+    "incumbent", "incumbent_fallback", "budget_ok", "normal_quantile",
+    "quantize_scores",
     "gauss_hermite", "gh_cost_nodes", "censored_adjust", "timeout_cap",
 ]
 
@@ -90,20 +91,38 @@ def ei_constrained(mu, sigma, y_star, unit_price, t_max) -> jax.Array:
         mu, sigma, unit_price, t_max)
 
 
-def incumbent(y, obs_mask, feasible_mask, mu, sigma):
+def incumbent_fallback(best_feas, y, obs_mask, sigma, valid=None):
+    """y* given a (possibly infinite) best feasible observed cost: the
+    cost itself, else ``max observed cost + 3·max sigma`` over the
+    untested points so that EI still orders candidates sensibly.
+
+    THE single implementation of the fallback rule — ``incumbent`` below
+    and the selector's per-state y* (``lookahead._ystar``) both call it,
+    so the expression cannot drift between the public API and the batched
+    selector.  Batched over leading axes (reductions run over the last,
+    point, axis).  ``valid`` ([M] bool or None) masks geometry-bucket
+    padding lanes out of the untested-sigma term (a padded point's
+    posterior spread must never move y*); with valid None the computation
+    is unchanged.
+    """
+    obs = obs_mask.astype(bool)
+    untested = ~obs if valid is None else ~obs & valid.astype(bool)
+    fallback = (jnp.max(jnp.where(obs, y, -jnp.inf), axis=-1)
+                + 3.0 * jnp.max(jnp.where(untested, sigma, -jnp.inf),
+                                axis=-1))
+    return jnp.where(jnp.isfinite(best_feas), best_feas, fallback)
+
+
+def incumbent(y, obs_mask, feasible_mask, mu, sigma, valid=None):
     """The paper's y* rule.
 
     y*: cheapest observed cost among time-feasible configs; when no feasible
-    config has been observed, fall back to ``max observed cost + 3·max sigma``
-    over the untested points so that EI still orders candidates sensibly.
+    config has been observed, the :func:`incumbent_fallback` rule applies.
     """
     obs = obs_mask.astype(bool)
     feas_obs = obs & feasible_mask.astype(bool)
     best_feas = jnp.min(jnp.where(feas_obs, y, jnp.inf))
-    untested = ~obs
-    fallback = (jnp.max(jnp.where(obs, y, -jnp.inf))
-                + 3.0 * jnp.max(jnp.where(untested, sigma, -jnp.inf)))
-    return jnp.where(jnp.isfinite(best_feas), best_feas, fallback)
+    return incumbent_fallback(best_feas, y, obs_mask, sigma, valid)
 
 
 @functools.lru_cache(maxsize=None)

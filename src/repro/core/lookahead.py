@@ -48,7 +48,8 @@ from repro.core import acquisition as acq
 from repro.core import trees
 
 __all__ = ["Settings", "select_next", "select_next_batched", "make_selector",
-           "make_batch_selector", "space_arrays", "slot_price_rows"]
+           "make_batch_selector", "space_arrays", "space_valid",
+           "slot_price_rows", "selector_cache_size"]
 
 _EPS = 1e-9
 
@@ -108,8 +109,18 @@ def _fit_root(key, y, obs_mask, cens, points, left, thresholds, floor,
 
 def _fit_batch_exact(key, y_b, m_b, cens_b, points, left, thresholds, floor,
                      s: Settings):
-    """y_b, m_b[, cens_b]: [S, M] -> mu, sigma: [S, M]."""
-    keys = jax.random.split(key, y_b.shape[0])
+    """y_b, m_b[, cens_b]: [S, M] -> mu, sigma: [S, M].
+
+    Per-state keys derive from ``fold_in(key, state_index)`` rather than
+    ``split(key, S)``: a split's threefry counter pairing depends on the
+    *total* state count S = M·k^depth, which grows when the space is padded
+    to a geometry bucket, while the flattened state index of every native
+    root is padding-invariant (``root·k + node``).  fold_in keeps state i's
+    key a pure function of (key, i), so a padded lookahead replays the
+    native speculative fits bit-for-bit.
+    """
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(
+        key, jnp.arange(y_b.shape[0]))
 
     def one(k, y, m):
         p, a = trees.fit_forest(k, y, m, points, left, thresholds,
@@ -153,11 +164,13 @@ def _fit_batch_frozen(root_assign, root_preds, boot_w, sel_b, c_b, floor):
 # --------------------------------------------------------------------------- #
 # y* (incumbent) per batched state
 # --------------------------------------------------------------------------- #
-def _ystar(best_feas, y_b, m_b, sigma):
-    obs = m_b.astype(bool)
-    fallback = (jnp.max(jnp.where(obs, y_b, -jnp.inf), axis=-1)
-                + 3.0 * jnp.max(jnp.where(~obs, sigma, -jnp.inf), axis=-1))
-    return jnp.where(jnp.isfinite(best_feas), best_feas, fallback)
+def _ystar(best_feas, y_b, m_b, sigma, valid=None):
+    """Per-state y* — :func:`acq.incumbent_fallback`, with ``best_feas``
+    tracked incrementally by the speculation branches instead of being
+    recomputed from a feasibility mask.  ``valid`` masks padding lanes out
+    of the untested-sigma fallback (observed points are native by
+    construction, so only that term needs the mask)."""
+    return acq.incumbent_fallback(best_feas, y_b, m_b, sigma, valid)
 
 
 # --------------------------------------------------------------------------- #
@@ -165,13 +178,15 @@ def _ystar(best_feas, y_b, m_b, sigma):
 # --------------------------------------------------------------------------- #
 def _recurse(key, y_b, m_b, beta_b, bf_b, depth_left, *, points, left,
              thresholds, u, t_max, floor, s: Settings, frozen_ctx,
-             cens_b=None):
+             cens_b=None, valid=None):
     """Score each state's own argmax-EI_c pick; branch if depth_left > 0.
 
     Returns (reward [S], cost [S]) — already zeroed for states whose Gamma is
     empty (Alg. 2 "continue").  ``cens_b`` ([S, M] or None) marks the
     parent's censored observations; speculation only ever adds fully-observed
-    points, so the mask is constant down the path.
+    points, so the mask is constant down the path.  ``valid`` ([M] or None)
+    is the run's point-validity mask (padded selector programs): padding
+    lanes are never candidates, at any speculation depth.
     """
     k_fit, k_next = jax.random.split(key)
     if s.refit == "frozen" and frozen_ctx is not None:
@@ -182,16 +197,18 @@ def _recurse(key, y_b, m_b, beta_b, bf_b, depth_left, *, points, left,
     else:
         mu, sigma = _fit_batch_exact(k_fit, y_b, m_b, cens_b, points, left,
                                      thresholds, floor, s)
-    ystar = _ystar(bf_b, y_b, m_b, sigma)
+    ystar = _ystar(bf_b, y_b, m_b, sigma, valid)
     eic = acq.ei_constrained(mu, sigma, ystar[:, None], u[None, :], t_max)
     untested = ~m_b.astype(bool)
+    if valid is not None:
+        untested = untested & valid[None, :]
     cand = untested & acq.budget_ok(mu, sigma, beta_b[:, None], s.conf)
     score = acq.quantize_scores(jnp.where(cand, eic, -jnp.inf))
     sel = jnp.argmax(score, axis=1)                             # [S]
-    valid = jnp.any(cand, axis=1)
+    has_cand = jnp.any(cand, axis=1)
     take = lambda a: jnp.take_along_axis(a, sel[:, None], axis=1)[:, 0]
-    r0 = jnp.where(valid, take(eic), 0.0)
-    c0 = jnp.where(valid, take(mu), 0.0)
+    r0 = jnp.where(has_cand, take(eic), 0.0)
+    c0 = jnp.where(has_cand, take(mu), 0.0)
     if depth_left == 0:
         return r0, c0
 
@@ -223,23 +240,27 @@ def _recurse(key, y_b, m_b, beta_b, bf_b, depth_left, *, points, left,
         k_next, flat(y_child), flat(m_child), flat(beta_child),
         flat(bf_child), depth_left - 1, points=points, left=left,
         thresholds=thresholds, u=u, t_max=t_max, floor=floor, s=s,
-        frozen_ctx=child_frozen, cens_b=cens_child)
+        frozen_ctx=child_frozen, cens_b=cens_child, valid=valid)
     r_ch = r_ch.reshape(s_dim, s.k_gh)
     c_ch = c_ch.reshape(s_dim, s.k_gh)
     w = jnp.asarray(w)
-    reward = jnp.where(valid, r0 + s.gamma * (r_ch @ w), 0.0)
-    cost = jnp.where(valid, c0 + (c_ch @ w), 0.0)
+    reward = jnp.where(has_cand, r0 + s.gamma * (r_ch @ w), 0.0)
+    cost = jnp.where(has_cand, c0 + (c_ch @ w), 0.0)
     return reward, cost
 
 
 def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
-                      t_max, s: Settings, cens=None):
+                      t_max, s: Settings, cens=None, valid=None):
     """One NextConfig step. Returns (index, valid, diagnostics).
 
     y: [M] observed costs (value irrelevant where unobserved);
     obs_mask: [M]; beta: scalar remaining budget; u: [M] unit prices;
     cens: [M] censoring mask (only when ``s.timeout``) — observations whose
-    y is a billed lower bound from an aborted run, not a completed cost.
+    y is a billed lower bound from an aborted run, not a completed cost;
+    valid: [M] point-validity mask or None — False marks right-padding
+    lanes of a geometry-bucketed space (``space.pad_to``).  Padding can
+    never be untested-candidate, incumbent fallback, or Gamma member; with
+    valid None the traced program is unchanged from the unpadded selector.
 
     With ``s.timeout`` the diagnostics carry ``"timeout"``: the predictive
     cap τ (runtime units) the driver must abort the selected exploration at.
@@ -257,9 +278,9 @@ def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
         # feasible incumbent (its billed y is only a lower bound).
         feas_obs = feas_obs & ~cens.astype(bool)
     best_feas = jnp.min(jnp.where(feas_obs, y, jnp.inf))
-    ystar0 = _ystar(best_feas, y, obs_mask, sig0)
+    ystar0 = _ystar(best_feas, y, obs_mask, sig0, valid)
     eic0 = acq.ei_constrained(mu0, sig0, ystar0, u, t_max)
-    untested = ~obs
+    untested = ~obs if valid is None else ~obs & valid.astype(bool)
     gamma0 = untested & acq.budget_ok(mu0, sig0, beta, s.conf)
     diagnostics = {"mu": mu0, "sigma": sig0, "ei_c": eic0, "y_star": ystar0}
 
@@ -300,7 +321,12 @@ def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
     flat = lambda a: a.reshape((m_dim * s.k_gh,) + a.shape[2:])
     frozen_ctx = None
     if s.refit == "frozen":
-        boot_w = jnp.ones_like(preds)  # leaf weights approximated as uniform
+        # Leaf weights approximated as uniform — over *valid* points only:
+        # a padding lane sharing the speculated point's leaf must not add
+        # phantom weight to the incremental refit.
+        boot_w = (jnp.ones_like(preds) if valid is None
+                  else jnp.broadcast_to(valid.astype(preds.dtype)[None, :],
+                                        preds.shape))
         frozen_ctx = (assign, preds, boot_w,
                       flat(jnp.broadcast_to(jnp.arange(m_dim)[:, None],
                                             (m_dim, s.k_gh))),
@@ -312,7 +338,8 @@ def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
     r1, c1 = _recurse(
         k_path, flat(y1), flat(m1), flat(beta1), flat(bf1), s.la - 1,
         points=points, left=left, thresholds=thresholds, u=u, t_max=t_max,
-        floor=floor, s=s, frozen_ctx=frozen_ctx, cens_b=cens1)
+        floor=floor, s=s, frozen_ctx=frozen_ctx, cens_b=cens1,
+        valid=valid)
     w = jnp.asarray(w)
     reward = reward + s.gamma * (r1.reshape(m_dim, s.k_gh) @ w)
     cost = cost + (c1.reshape(m_dim, s.k_gh) @ w)
@@ -328,7 +355,7 @@ select_next = jax.jit(_select_next_impl, static_argnames=("s",))
 
 @functools.partial(jax.jit, static_argnames=("s",))
 def select_next_batched(keys, y, obs_mask, beta, points, left, thresholds, u,
-                        t_max, s: Settings, cens=None):
+                        t_max, s: Settings, cens=None, valid=None):
     """NextConfig for R independent slots at once (the batched-harness entry).
 
     keys: [R, 2] PRNG keys; y: [R, M]; obs_mask: [R, M]; beta: [R];
@@ -343,24 +370,37 @@ def select_next_batched(keys, y, obs_mask, beta, points, left, thresholds, u,
     program) or ``[R, M]`` with ``t_max`` ``[R]`` (each slot carries its own
     job's prices and SLO — the mixed-job work-queue layout, where a slot is
     a *seat* that different jobs' runs occupy over time).  The space tensors
-    (points/left/thresholds) are always shared: every job in a queue must
-    live on one space geometry.
+    (``points``/``left``/``thresholds``) are shared when every slot lives
+    on one space — or *per-slot* (``points [R, M, F]``, ``left
+    [R, M, F, T]``, ``thresholds [R, F, T]``) when the queue mixes jobs of
+    different native geometries padded into one bucket; ``valid`` is then
+    the per-slot ([R, M]) or shared ([M]) point-validity mask of the
+    padding (None for unpadded spaces: the traced program is unchanged).
     """
     per_slot_u = jnp.ndim(u) == 2
     per_slot_t = jnp.ndim(t_max) == 1
     if per_slot_u != per_slot_t:
         raise ValueError("per-slot u ([R, M]) requires per-slot t_max ([R]) "
                          "and vice versa")
+    per_slot_space = jnp.ndim(points) == 3
+    if per_slot_space and valid is None:
+        raise ValueError("per-slot space tensors ([R, M, F]) come from "
+                         "geometry bucketing and require a validity mask")
 
-    def one(k, y_r, m_r, b_r, c_r, u_r, t_r):
-        return _select_next_impl(k, y_r, m_r, b_r, points, left, thresholds,
-                                 u_r, t_r, s, c_r)
+    def one(k, y_r, m_r, b_r, c_r, u_r, t_r, p_r, l_r, th_r, v_r):
+        return _select_next_impl(k, y_r, m_r, b_r, p_r, l_r, th_r,
+                                 u_r, t_r, s, c_r, v_r)
 
+    sp_ax = 0 if per_slot_space else None
     return jax.vmap(one, in_axes=(0, 0, 0, 0,
                                   None if cens is None else 0,
                                   0 if per_slot_u else None,
-                                  0 if per_slot_t else None))(
-        keys, y, obs_mask, beta, cens, u, t_max)
+                                  0 if per_slot_t else None,
+                                  sp_ax, sp_ax, sp_ax,
+                                  None if valid is None or jnp.ndim(valid) == 1
+                                  else 0))(
+        keys, y, obs_mask, beta, cens, u, t_max, points, left, thresholds,
+        valid)
 
 
 def slot_price_rows(job_ids, rid, u, t_max):
@@ -391,12 +431,52 @@ def slot_price_rows(job_ids, rid, u, t_max):
 
 
 def space_arrays(space, unit_price: np.ndarray):
-    """Device-resident space tensors shared by every selector of a space."""
+    """Device-resident space tensors shared by every selector of a space.
+
+    Accepts a native :class:`~repro.core.space.DiscreteSpace` or a
+    :class:`~repro.core.space.PaddedSpace`: for the latter, a native-width
+    ``unit_price`` row is right-padded with 1.0 (inert — padding lanes are
+    masked out of every decision, the value only has to stay finite).
+    """
     points = jnp.asarray(space.points)
     thresholds = jnp.asarray(space.thresholds)
-    left = trees.make_left_table(space.points, space.thresholds)
-    u = jnp.asarray(unit_price, dtype=jnp.float32)
-    return points, left, thresholds, u
+    left = trees.make_left_table(np.asarray(space.points),
+                                 np.asarray(space.thresholds))
+    u = np.asarray(unit_price, dtype=np.float32)
+    native = getattr(space, "native", None)
+    if native is not None and u.shape[0] != space.n_points:
+        # PaddedSpace accepts exactly two row lengths: already bucket-wide,
+        # or native-wide (padded here with inert 1.0).  Anything else is a
+        # caller bug that must fail loudly, not be backfilled — and a
+        # native DiscreteSpace is never padded at all.
+        if u.shape[0] != native.n_points:
+            raise ValueError(
+                f"unit_price has {u.shape[0]} rows; expected the native "
+                f"width {native.n_points} or the bucket width "
+                f"{space.n_points}")
+        u = np.pad(u, (0, space.n_points - u.shape[0]),
+                   constant_values=np.float32(1.0))
+    return points, left, thresholds, jnp.asarray(u)
+
+
+def space_valid(space):
+    """The point-validity mask of ``space`` as a device array, or None for
+    a native (unpadded) space — the selector's ``valid`` argument."""
+    valid = getattr(space, "valid", None)
+    return None if valid is None else jnp.asarray(valid)
+
+
+def selector_cache_size() -> int:
+    """Number of compiled entries in the shared batched-selector cache.
+
+    One entry per traced geometry (R, M, F, T, u-rank, settings) of the
+    *directly invoked* selector — the oracle path (``make_selector`` /
+    ``make_batch_selector``).  Selections inside a jitted episode
+    (``core/optimizer.py``) are inlined into the episode program and
+    counted by ``optimizer.episode_cache_size`` instead; the geometry-
+    bucket compile gates assert on both (scripts/ci.sh, benchmarks).
+    """
+    return int(select_next_batched._cache_size())
 
 
 def make_batch_selector(space, unit_price: np.ndarray, t_max: float,
@@ -404,13 +484,14 @@ def make_batch_selector(space, unit_price: np.ndarray, t_max: float,
     """Bind a space to the batched selector; returns f(keys, y, mask, beta)
     over [R, ...] lane-stacked state."""
     points, left, thresholds, u = space_arrays(space, unit_price)
+    valid = space_valid(space)
 
     def run(keys, y, obs_mask, beta, cens=None):
         return select_next_batched(
             jnp.asarray(keys), jnp.asarray(y, jnp.float32),
             jnp.asarray(obs_mask), jnp.asarray(beta, jnp.float32),
             points, left, thresholds, u, jnp.float32(t_max), s,
-            None if cens is None else jnp.asarray(cens))
+            None if cens is None else jnp.asarray(cens), valid)
 
     return run
 

@@ -33,8 +33,10 @@ on audited configs (tests/test_batched_harness.py, scripts/ci.sh):
   *slots* that bank a finished run's state into run-indexed output buffers
   and immediately load the next pending run from a device-side queue head,
   so short runs never idle behind long ones.  Queues built from
-  :class:`RunRequest` entries may mix budgets and jobs (shared space
-  geometry required).
+  :class:`RunRequest` entries may mix budgets and jobs freely — jobs whose
+  spaces differ in geometry are padded into one
+  :class:`~repro.core.space.GeometryBucket` (one compiled episode per
+  bucket instead of per geometry).
 
 The compacting episode runs as bounded *segments* (low-water-mark and
 step-quota exits next to the natural queue-drained exit) so a host-side
@@ -58,14 +60,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lookahead
-from repro.core.space import latin_hypercube_indices
+from repro.core import lookahead, trees
+from repro.core.space import GeometryBucket, latin_hypercube_indices
 
 if TYPE_CHECKING:  # avoid the core <-> jobs import cycle at runtime
     from repro.jobs.tables import JobTable
 
-__all__ = ["Outcome", "RunRequest", "optimize", "run_many",
-           "run_many_batched", "run_queue", "run_queue_batched"]
+__all__ = ["Outcome", "RunRequest", "episode_cache_size", "optimize",
+           "run_many", "run_many_batched", "run_queue", "run_queue_batched"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -483,11 +485,14 @@ def _batched_episode(keys, y, mask, beta, explored, n_exp, cens, cexpl,
     return base + (st["cexpl"], st["bexpl"]) if s.timeout else base
 
 
-def _auto_lane_chunk(job: JobTable, s: lookahead.Settings, n_runs: int) -> int:
+def _auto_lane_chunk(job: JobTable, s: lookahead.Settings, n_runs: int,
+                     m: int | None = None) -> int:
     """Slot-count sizing: bound the deepest speculative tensor
     (n_trees × M × M·k^la per slot).  Used both as the lockstep chunk width
-    and as the compacting scheduler's seat count."""
-    m = job.space.n_points
+    and as the compacting scheduler's seat count.  ``m`` overrides the
+    job's native point count (a geometry-bucketed queue pays the *bucket*
+    width per slot, not the native one)."""
+    m = job.space.n_points if m is None else m
     states = m * (s.k_gh ** max(s.la, 0) if s.policy == "lynceus" else 1)
     budget_elems = 1.5e8
     return int(max(1, min(n_runs, budget_elems // (s.n_trees * m * states))))
@@ -501,8 +506,10 @@ class RunRequest:
     ``latin_hypercube_indices(space, N, default_rng(seed))`` derivation
     :func:`optimize` performs, so a queue and the sequential oracle replay
     identical bootstraps for the same seed (paper fairness protocol).
-    Queued jobs may differ per request as long as they share one space
-    geometry (points + thresholds); budgets may differ freely.
+    Queued jobs and budgets may differ freely per request; jobs whose
+    spaces differ in geometry are padded into one
+    :class:`~repro.core.space.GeometryBucket` automatically (see
+    :func:`run_queue_batched`).
     """
 
     job: JobTable
@@ -519,15 +526,20 @@ class RunRequest:
 
 
 def _init_run_states(requests: list[RunRequest],
-                     settings: lookahead.Settings) -> dict:
+                     settings: lookahead.Settings,
+                     m_pad: int | None = None) -> dict:
     """Host-side bootstrap replay for a batch of pending runs, float32 —
     Alg. 1 lines 6-8, the exact arithmetic `optimize` performs before its
     selection loop starts (including the constraint-cap censoring of
     bootstrap runs).  Returns [R, ...] numpy/JAX initial-state arrays plus
     the per-run budgets the outcome reconstruction needs.
+
+    ``m_pad`` widens the per-run state rows to a geometry bucket's point
+    width; bootstrap replay writes native indices only, so the padding tail
+    stays unobserved (never censored, never explored) by construction.
     """
     r_tot = len(requests)
-    m = requests[0].job.space.n_points
+    m = requests[0].job.space.n_points if m_pad is None else m_pad
     y0 = np.zeros((r_tot, m), np.float32)
     m0 = np.zeros((r_tot, m), bool)
     c0 = np.zeros((r_tot, m), bool)
@@ -645,8 +657,8 @@ def _seed_carry_from_queue(queue: dict, l_dim: int,
 
 @functools.partial(jax.jit, static_argnames=("s",))
 def _episode_segment(carry, queue, qtail, low_water, step_quota, job_ids,
-                     cost, runtime, points, left, thresholds, u, t_max,
-                     s: lookahead.Settings):
+                     cost, runtime, points, left, thresholds, valid, u,
+                     t_max, s: lookahead.Settings):
     """Advance ``l_dim`` lane *slots* through one bounded episode segment.
 
     One ``lax.while_loop``; each iteration selects for every slot at once
@@ -689,6 +701,15 @@ def _episode_segment(carry, queue, qtail, low_water, step_quota, job_ids,
     (slot-indexed selection: per-slot ``u``/``t_max`` via
     :func:`lookahead.slot_price_rows`).
 
+    ``valid`` is None for a native shared-geometry queue (the historical
+    program, traced unchanged).  For a geometry-bucketed queue (jobs of
+    *different* native [M, F, T] padded to one bucket — see
+    :func:`run_queue_batched`) ``points``/``left``/``thresholds`` are
+    [J, ...]-stacked padded space tensors, ``valid`` is the [J, M]
+    point-validity mask, and each slot gathers its run's space rows by job
+    id alongside the price rows, so one compiled segment serves every
+    member geometry of the bucket.
+
     Returns ``(carry', report)``: the updated persistent slot state and the
     per-segment report (``out_done``/``out_beta``/``out_nexp``/``out_expl``
     [+ ``out_cexpl``/``out_bexpl`` with timeouts] banking buffers, plus
@@ -716,10 +737,17 @@ def _episode_segment(carry, queue, qtail, low_water, step_quota, job_ids,
         rid_safe = jnp.maximum(st["rid"], 0)
         u_l, t_l, jid = lookahead.slot_price_rows(job_ids, rid_safe, u,
                                                   t_max)
-        idx, valid, diag = lookahead.select_next_batched(
+        if jid is not None and points.ndim == 3:
+            # Geometry-bucketed queue: each seat selects on its own job's
+            # padded space tensors and validity row.
+            pts_l, left_l, thr_l = points[jid], left[jid], thresholds[jid]
+            val_l = valid[jid]
+        else:
+            pts_l, left_l, thr_l, val_l = points, left, thresholds, valid
+        idx, sel_ok, diag = lookahead.select_next_batched(
             sub, st["y"], st["mask"], jnp.maximum(st["beta"], 0.0),
-            points, left, thresholds, u_l, t_l, s,
-            st["cens"] if s.timeout else None)
+            pts_l, left_l, thr_l, u_l, t_l, s,
+            st["cens"] if s.timeout else None, val_l)
         if jid is None:
             c = cost[idx]
             t_run = runtime[idx] if s.timeout else None
@@ -731,7 +759,7 @@ def _episode_segment(carry, queue, qtail, low_water, step_quota, job_ids,
             t_run = pick(runtime) if s.timeout else None
             u_at = pick(u) if s.timeout else None
         step, alive = _alg1_step(
-            st, idx, c, t_run, u_at, valid,
+            st, idx, c, t_run, u_at, sel_ok,
             diag["timeout"] if s.timeout else None, s, lanes, m_dim)
 
         # A slot's run terminated this step -> bank it by run id.
@@ -787,37 +815,86 @@ def _episode_segment(carry, queue, qtail, low_water, step_quota, job_ids,
     return st, report
 
 
-def _check_shared_space(jobs: list[JobTable]) -> None:
+def _spaces_shared(jobs: list[JobTable]) -> bool:
+    """True when every job's space is bit-identical to the first's —
+    the condition for the native shared-tensor selector program."""
     ref = jobs[0].space
-    for job in jobs[1:]:
-        if (job.space.n_points != ref.n_points
-                or not np.array_equal(job.space.points, ref.points)
-                or not np.array_equal(job.space.thresholds, ref.thresholds)):
-            raise ValueError(
-                f"queued jobs must share one space geometry; {job.name} "
-                f"differs from {jobs[0].name} (fixed-width selector programs "
-                "cannot mix spaces)")
+    return all(job.space.n_points == ref.n_points
+               and np.array_equal(job.space.points, ref.points)
+               and np.array_equal(job.space.thresholds, ref.thresholds)
+               for job in jobs[1:])
 
 
-def _queue_tables(jobs: list[JobTable], u0):
+def _resolve_bucket(jobs: list[JobTable], bucket) -> GeometryBucket | None:
+    """The geometry bucket a queue must run under, or None for the native
+    shared-space program.
+
+    ``bucket`` may be None (auto: pad only when the jobs' spaces actually
+    differ), a ``(m, f, t)`` tuple, or a :class:`GeometryBucket` — an
+    explicit bucket forces padding even for a single geometry (that is how
+    a service pre-compiles one program for jobs it has not seen yet, and
+    how the padding-invariance suites audit a single job against its
+    padded self).  A bucket narrower than a member geometry raises in
+    :func:`_queue_spaces`' ``pad_to`` calls, which both callers run
+    immediately after this.
+    """
+    if bucket is None:
+        if _spaces_shared(jobs):
+            return None
+        return GeometryBucket.for_spaces([j.space for j in jobs])
+    if not isinstance(bucket, GeometryBucket):
+        bucket = GeometryBucket(*bucket)
+    return bucket
+
+
+def _queue_spaces(jobs: list[JobTable], bucket: GeometryBucket):
+    """[J, ...]-stacked padded space tensors + validity masks for a
+    geometry-bucketed queue: ``(points [J, M, F], left [J, M, F, T],
+    thresholds [J, F, T], valid [J, M])`` at the bucket widths."""
+    pads = [j.space.pad_to(bucket) for j in jobs]
+    return (jnp.stack([jnp.asarray(p.points) for p in pads]),
+            jnp.stack([trees.make_left_table(p.points, p.thresholds)
+                       for p in pads]),
+            jnp.stack([jnp.asarray(p.thresholds) for p in pads]),
+            jnp.stack([jnp.asarray(p.valid) for p in pads]))
+
+
+def _queue_tables(jobs: list[JobTable], u0, bucket: GeometryBucket | None = None):
     """Device job tables for a (possibly mixed-job) queue — shared by the
     one-shot entry and the streaming service engine so the two drivers
     cannot drift.
 
-    Single job: shared [M] rows and a scalar t_max — the lockstep selector
-    geometry (``u0`` is the space-bound price row from
-    ``lookahead.space_arrays``).  Multiple jobs: [J, M]-stacked tables and
-    [J] t_max for run-id-indexed gathers.  Returns
+    Single job, no bucket: shared [M] rows and a scalar t_max — the
+    lockstep selector geometry (``u0`` is the space-bound price row from
+    ``lookahead.space_arrays``).  Otherwise: [J, M]-stacked tables and
+    [J] t_max for run-id-indexed gathers, padded to ``bucket.m`` rows when
+    a bucket is active (a bucketed queue always stacks, even for J = 1, so
+    one code path serves every bucket member).  Returns
     ``(cost, runtime, u, t_max, single)``.
     """
-    if len(jobs) == 1:
+    if len(jobs) == 1 and bucket is None:
         dev = jobs[0].device_view()
         return dev.cost, dev.runtime, u0, jnp.float32(jobs[0].t_max), True
-    devs = [j.device_view() for j in jobs]
+    m_pad = None if bucket is None else bucket.m
+    devs = [j.device_view(m_pad) for j in jobs]
     return (jnp.stack([d.cost for d in devs]),
             jnp.stack([d.runtime for d in devs]),
             jnp.stack([d.unit_price for d in devs]),
             jnp.asarray([j.t_max for j in jobs], jnp.float32), False)
+
+
+def episode_cache_size() -> int:
+    """Compiled-entry count of the jitted episode programs (segment +
+    lockstep bodies) — the compile-count observable of the geometry-bucket
+    claim: draining a queue that mixes J native geometries padded into one
+    bucket must add exactly **one** entry here (one program per bucket),
+    where J per-geometry sub-queues would add J.  The per-step selector is
+    inlined into these programs, so ``lookahead.selector_cache_size`` must
+    not grow at all during a bucketed drain; scripts/ci.sh and
+    benchmarks/batched_vs_sequential.py gate both counts.
+    """
+    return int(_episode_segment._cache_size()
+               + _batched_episode._cache_size())
 
 
 def run_queue(requests: list[RunRequest],
@@ -845,17 +922,28 @@ def run_queue(requests: list[RunRequest],
 
 def run_queue_batched(requests: list[RunRequest],
                       settings: lookahead.Settings, *,
-                      lane_slots: int | None = None) -> list[Outcome]:
+                      lane_slots: int | None = None,
+                      bucket=None) -> list[Outcome]:
     """Drain a mixed-budget, mixed-job run queue through compacting lanes.
 
     The device-resident counterpart of :func:`run_queue`: R pending runs,
     ``lane_slots`` seats, one jitted episode segment run to completion (see
-    :func:`_episode_segment`).  Jobs may differ per request as long as
-    they share one space geometry; budgets may differ freely — this is the
-    tail-heavy-sweep entry point, where lockstep lanes would idle behind
-    the longest run.  Outcomes are returned in request order and are
-    bit-identical to :func:`run_queue` on the audited configurations (same
-    contract, and the same caveats, as :func:`run_many_batched`).
+    :func:`_episode_segment`).  Jobs and budgets may differ per request —
+    this is the tail-heavy-sweep entry point, where lockstep lanes would
+    idle behind the longest run.  Jobs whose spaces differ in *geometry*
+    ([M, F, T]) are right-padded into one
+    :class:`~repro.core.space.GeometryBucket` (auto-sized by
+    ``GeometryBucket.for_spaces``, or forced via ``bucket`` — a
+    ``(m, f, t)`` tuple or ``GeometryBucket``): the selector compiles once
+    per bucket instead of once per geometry, and the padding-invariant
+    selection stack (masked candidates/incumbent/budget filter, prefix-
+    stable bootstrap and speculation keys) keeps every run's decisions
+    identical to its native program.  Outcomes are returned in request
+    order and are bit-identical to :func:`run_queue` on the audited
+    configurations (same contract, and the same caveats, as
+    :func:`run_many_batched`; the padding-invariance suites in
+    tests/test_padded_space.py and tests/test_batched_harness.py pin the
+    bucketed path).
     """
     if not requests:
         return []
@@ -865,18 +953,27 @@ def run_queue_batched(requests: list[RunRequest],
     for req in requests:
         if not any(req.job is j for j in jobs):
             jobs.append(req.job)
-    _check_shared_space(jobs)
+    bucket = _resolve_bucket(jobs, bucket)
     job0 = jobs[0]
     r_tot = len(requests)
+    m_sel = job0.space.n_points if bucket is None else bucket.m
     if lane_slots is None:
-        lane_slots = _auto_lane_chunk(job0, settings, r_tot)
+        lane_slots = _auto_lane_chunk(job0, settings, r_tot, m=m_sel)
     lane_slots = max(1, min(lane_slots, r_tot))
 
-    queue = _init_run_states(requests, settings)
+    if bucket is None:
+        points, left, thresholds, u0 = lookahead.space_arrays(
+            job0.space, job0.unit_price)
+        valid_t = None
+    else:
+        # Also validates bucket >= every member geometry (pad_to raises)
+        # before any bucket-width state array is built.
+        points, left, thresholds, valid_t = _queue_spaces(jobs, bucket)
+        u0 = None
+    queue = _init_run_states(requests, settings,
+                             None if bucket is None else bucket.m)
     budgets = queue.pop("budgets")
-    points, left, thresholds, u0 = lookahead.space_arrays(
-        job0.space, job0.unit_price)
-    cost_t, runtime_t, u_t, tmax_t, single = _queue_tables(jobs, u0)
+    cost_t, runtime_t, u_t, tmax_t, single = _queue_tables(jobs, u0, bucket)
     if single:
         job_ids = None
     else:
@@ -898,7 +995,7 @@ def run_queue_batched(requests: list[RunRequest],
     _, report = jax.block_until_ready(_episode_segment(
         carry, qarrays, np.int32(r_tot), np.int32(0), _STEPS_UNBOUNDED,
         job_ids, cost_t, runtime_t if settings.timeout else None, points,
-        left, thresholds, u_t, tmax_t, settings))
+        left, thresholds, valid_t, u_t, tmax_t, settings))
     steps = int(report["steps"])
     wall = time.perf_counter() - t0
     # Amortized wall time per selection (steps x slots selections per
@@ -932,7 +1029,7 @@ def run_queue_batched(requests: list[RunRequest],
 def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
                      n_runs: int = 100, budget_b: float = 3.0, seed: int = 0,
                      seeds=None, bootstraps=None, lane_chunk: int | None = None,
-                     scheduler: str = "compact") -> list[Outcome]:
+                     scheduler: str = "compact", bucket=None) -> list[Outcome]:
     """Batched ``run_many``: R device-resident runs on shared lane slots.
 
     Each run executes the exact Alg. 1 semantics of the sequential oracle —
@@ -987,6 +1084,10 @@ def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
     if scheduler not in ("compact", "lockstep"):
         raise ValueError(f"unknown scheduler {scheduler!r}; "
                          "expected 'compact' or 'lockstep'")
+    if bucket is not None and scheduler != "compact":
+        raise ValueError("geometry buckets run on the compacting "
+                         "scheduler only (lockstep is the native-geometry "
+                         "audit baseline)")
     if settings.policy == "rnd":
         return run_many(job, settings, n_runs=n_runs, budget_b=budget_b,
                         seed=seed, seeds=seeds, bootstraps=bootstraps)
@@ -995,10 +1096,15 @@ def run_many_batched(job: JobTable, settings: lookahead.Settings, *,
     n_runs = len(seeds)
     requests = [RunRequest(job, s, b, boot)
                 for s, b, boot in zip(seeds, budgets_b, bootstraps)]
+    if scheduler == "compact":
+        # Slot sizing is deferred to run_queue_batched when lane_chunk is
+        # None: it must account for the *bucket* point width, not the
+        # native one (a forced bucket can widen the per-slot speculative
+        # tensor by (bucket.m / M)^2).
+        return run_queue_batched(requests, settings, lane_slots=lane_chunk,
+                                 bucket=bucket)
     if lane_chunk is None:
         lane_chunk = _auto_lane_chunk(job, settings, n_runs)
-    if scheduler == "compact":
-        return run_queue_batched(requests, settings, lane_slots=lane_chunk)
 
     m = job.space.n_points
     host = job.host_view()

@@ -18,7 +18,13 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-__all__ = ["DiscreteSpace", "latin_hypercube_indices"]
+__all__ = ["DiscreteSpace", "GeometryBucket", "PaddedSpace",
+           "latin_hypercube_indices", "next_pow2"]
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +116,120 @@ class DiscreteSpace:
         if hit.size == 0:
             raise KeyError(f"point {raw_values} not in space")
         return int(hit[0])
+
+    @property
+    def geometry(self) -> tuple[int, int, int]:
+        """The static selector-program shape [M, F, T] of this space."""
+        return (self.n_points, self.n_dims, int(self.thresholds.shape[1]))
+
+    def pad_to(self, bucket: "GeometryBucket") -> "PaddedSpace":
+        """Right-pad this space to fixed bucket widths (see GeometryBucket).
+
+        Padding values are inert by construction: padded point rows sit at
+        0.5 in every dimension (any finite value works — a validity mask
+        excludes them from every selector decision), padded feature columns
+        are the constant 0.5 (a constant dimension can never split), and
+        padded threshold slots are ``+inf`` (the same all-routes-left
+        convention the native threshold grid already uses for its ragged
+        tail).  The padded tensors keep the native values bit-for-bit in
+        their leading slices, which — together with the padding-invariant
+        bootstrap (``trees.bootstrap_weights``) — is what lets a padded
+        selector replay the native selector's decisions exactly.
+        """
+        m, f, t = self.geometry
+        if bucket.m < m or bucket.f < f or bucket.t < t:
+            raise ValueError(
+                f"bucket {bucket.shape} cannot hold space geometry "
+                f"[{m}, {f}, {t}]; every bucket width must be >= the "
+                "native width")
+        points = np.full((bucket.m, bucket.f), 0.5, np.float32)
+        points[:m, :f] = self.points
+        thresholds = np.full((bucket.f, bucket.t), np.inf, np.float32)
+        thresholds[:f, :t] = self.thresholds
+        valid = np.zeros(bucket.m, bool)
+        valid[:m] = True
+        return PaddedSpace(native=self, bucket=bucket, points=points,
+                           thresholds=thresholds, valid=valid)
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometryBucket:
+    """Fixed selector-program widths shared by a family of spaces.
+
+    One selector program is compiled per bucket (shape [m, f, t]) and
+    reused for every member space padded into it — that is what lets a
+    work queue mix jobs whose native geometries differ, and what collapses
+    selector compile count from O(#geometries) to O(#buckets) on mixed
+    fleets.  ``for_spaces`` picks the canonical bucket of a job set: the
+    next power of two of the largest M (so nearby fleet compositions land
+    in the same bucket and reuse its compiled program) and the exact F/T
+    caps (tree-split work scales with F·T, so those are not rounded up).
+    """
+
+    m: int   # point rows (space size M)
+    f: int   # feature dimensions F
+    t: int   # threshold columns T
+
+    def __post_init__(self):
+        # Coerce here — the single entry point for every bucket source
+        # (tuples from ServiceConfig / run_queue_batched / --bucket) — so
+        # a float width fails eagerly instead of deep inside pad_to.
+        for name in ("m", "f", "t"):
+            w = getattr(self, name)
+            if int(w) != w:
+                raise ValueError(f"bucket widths must be integers, got "
+                                 f"{name}={w!r}")
+            object.__setattr__(self, name, int(w))
+        if self.m < 1 or self.f < 1 or self.t < 1:
+            raise ValueError(f"bucket widths must be >= 1, got {self.shape}")
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return (self.m, self.f, self.t)
+
+    @classmethod
+    def for_spaces(cls, spaces: Sequence["DiscreteSpace"],
+                   m_pow2: bool = True) -> "GeometryBucket":
+        """The canonical bucket covering ``spaces`` (see class docstring)."""
+        if not spaces:
+            raise ValueError("need at least one space to size a bucket")
+        m = max(s.n_points for s in spaces)
+        return cls(m=next_pow2(m) if m_pow2 else m,
+                   f=max(s.n_dims for s in spaces),
+                   t=max(int(s.thresholds.shape[1]) for s in spaces))
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddedSpace:
+    """A :class:`DiscreteSpace` right-padded to a :class:`GeometryBucket`.
+
+    Duck-types the selector-facing half of ``DiscreteSpace`` (``points``,
+    ``thresholds``, ``n_points``, ``n_dims``) at the *bucket* widths, and
+    additionally carries ``valid`` — the [bucket.m] point-validity mask the
+    selector threads through every decision so a padding lane can never be
+    explored, become incumbent, or pass the budget filter.  ``native``
+    keeps the unpadded space for host-side bookkeeping (bootstraps, table
+    lookups, outcome reconstruction all stay in native indices: padding
+    never renumbers a config).
+    """
+
+    native: DiscreteSpace
+    bucket: GeometryBucket
+    points: np.ndarray      # [bucket.m, bucket.f] f32
+    thresholds: np.ndarray  # [bucket.f, bucket.t] f32
+    valid: np.ndarray       # [bucket.m] bool — True on native rows
+
+    @property
+    def n_points(self) -> int:
+        return int(self.points.shape[0])
+
+    @property
+    def n_dims(self) -> int:
+        return int(self.points.shape[1])
+
+    @property
+    def geometry(self) -> tuple[int, int, int]:
+        return self.bucket.shape
 
 
 def latin_hypercube_indices(space: DiscreteSpace, n: int,

@@ -39,11 +39,42 @@ import numpy as np
 from repro.core.acquisition import quantize_scores as _quantize_scores
 
 __all__ = [
-    "ForestParams", "make_left_table", "fit_forest", "predict_forest",
-    "forest_mu_sigma", "fit_predict_mu_sigma",
+    "ForestParams", "bootstrap_weights", "make_left_table", "fit_forest",
+    "predict_forest", "forest_mu_sigma", "fit_predict_mu_sigma",
 ]
 
 _EPS = 1e-12
+
+# Fixed iteration count of the Knuth Poisson sampler below.  P(Poisson(1)
+# >= 24) ~ 1e-24: the truncation is unobservable, and a static bound keeps
+# the whole draw free of data-dependent control flow.
+_BOOT_ITERS = 24
+_KNUTH_L = np.float32(np.exp(-1.0))
+
+
+def bootstrap_weights(key: jax.Array, n_trees: int, m: int) -> jax.Array:
+    """Poisson(1) bootstrap weights ``[n_trees, m]`` — padding-invariant.
+
+    Weight (b, i) is a pure function of ``(key, b, i)`` and never of ``m``:
+    each point derives its own ``fold_in(key, i)`` subkey and runs a
+    fixed-iteration Knuth sampler (count the uniforms whose running product
+    stays above e^-1) on uniforms drawn under that subkey alone.  Right-
+    padding a space to a geometry bucket therefore replays the native
+    points' draws bit-for-bit — the property the padded selector programs
+    in ``core/lookahead.py`` rely on.  A raw ``jax.random.poisson(key,
+    (B, M))`` draw does NOT have it: threefry pairs counter blocks by the
+    total element count, so every weight shifts whenever M changes.
+
+    The running product is compared directly (exactly-rounded float32
+    multiplies against a host constant) rather than through log-space sums,
+    so no geometry-sensitive transcendental sits upstream of the integer
+    weights.
+    """
+    point_keys = jax.vmap(jax.random.fold_in, (None, 0))(key, jnp.arange(m))
+    u = jax.vmap(lambda k: jax.random.uniform(k, (_BOOT_ITERS, n_trees)))(
+        point_keys)                                        # [m, I, B]
+    k = (jnp.cumprod(u, axis=1) > _KNUTH_L).sum(axis=1)    # [m, B]
+    return k.T.astype(jnp.float32)
 
 
 class ForestParams(NamedTuple):
@@ -171,7 +202,7 @@ def fit_forest(key: jax.Array, y: jax.Array, obs_mask: jax.Array,
     m = y.shape[0]
     width = 2 ** (depth - 1) if depth > 0 else 1
     obs = obs_mask.astype(jnp.float32)
-    boot = jax.random.poisson(key, 1.0, (n_trees, m)).astype(jnp.float32)
+    boot = bootstrap_weights(key, n_trees, m)
     w = boot * obs[None, :]
     # Guard: a tree whose bootstrap came up all-zero falls back to plain obs.
     dead = jnp.sum(w, axis=1, keepdims=True) < min_weight

@@ -97,23 +97,40 @@ class JobTable:
         """B = N · m̃ · b (paper §5.2)."""
         return self.bootstrap_size() * self.mean_cost * b
 
-    def device_view(self) -> DeviceTables:
+    def device_view(self, m_pad: int | None = None) -> DeviceTables:
         """The tables as device arrays, moved to device once and cached.
 
         The batched simulation harness gathers every simulated "run"'s cost
         from ``.cost``, so no host <-> device traffic happens inside the
         exploration loop; the other columns ride along for consumers that
         need on-device feasibility/runtime lookups.
+
+        ``m_pad`` right-pads every column to a geometry bucket's point
+        width (cached per width): cost/runtime pad with ``+inf`` (a padding
+        lane can never be selected — billing it infinite money makes any
+        mask regression explode loudly instead of plausibly), unit_price
+        with 1.0 (finite: it enters elementwise EI math before masking),
+        feasible with False.
         """
-        cached = getattr(self, "_device_view", None)
+        cached = getattr(self, "_device_views", None)
         if cached is None:
-            cached = DeviceTables(
-                cost=jnp.asarray(self.cost, jnp.float32),
-                unit_price=jnp.asarray(self.unit_price, jnp.float32),
-                runtime=jnp.asarray(self.runtime, jnp.float32),
-                feasible=jnp.asarray(self.feasible))
-            object.__setattr__(self, "_device_view", cached)
-        return cached
+            cached = {}
+            object.__setattr__(self, "_device_views", cached)
+        view = cached.get(m_pad)
+        if view is None:
+            m = self.space.n_points
+            if m_pad is not None and m_pad < m:
+                raise ValueError(f"m_pad={m_pad} < native space size {m}")
+            ext = 0 if m_pad is None else m_pad - m
+            pad = lambda a, v: np.pad(a.astype(np.float32), (0, ext),
+                                      constant_values=np.float32(v))
+            view = DeviceTables(
+                cost=jnp.asarray(pad(self.cost, np.inf)),
+                unit_price=jnp.asarray(pad(self.unit_price, 1.0)),
+                runtime=jnp.asarray(pad(self.runtime, np.inf)),
+                feasible=jnp.asarray(np.pad(self.feasible, (0, ext))))
+            cached[m_pad] = view
+        return view
 
     def host_view(self) -> HostTables:
         """Float32 table columns for host-side Alg. 1 accounting (cached).

@@ -137,8 +137,9 @@ class StreamingTuner:
     Args:
       jobs: one :class:`JobTable` or a sequence of them — the jobs this
         service can tune.  Registered once: their tables are stacked into
-        the compiled segment program, and all must share one space
-        geometry (the ``run_queue_batched`` contract).
+        the compiled segment program; jobs whose spaces differ in geometry
+        are padded into one geometry bucket (``config.bucket``, auto-sized
+        by default — the ``run_queue_batched`` contract).
       settings: selector knobs (static — one service, one policy program).
       config: :class:`ServiceConfig` pacing/capacity knobs.
     """

@@ -19,11 +19,11 @@ __all__ = ["ServiceConfig"]
 class ServiceConfig:
     """Knobs of a :class:`~repro.service.StreamingTuner`.
 
-    ``lane_slots`` and ``queue_capacity`` are compile-time shapes: one
-    episode-segment program is compiled per (slots, capacity, space,
-    settings) combination and reused for the service's lifetime.  The
-    pacing knobs (``low_water``, ``step_quota``) are traced scalars — tune
-    them per segment without recompiling.
+    ``lane_slots``, ``queue_capacity`` and ``bucket`` are compile-time
+    shapes: one episode-segment program is compiled per (slots, capacity,
+    space-or-bucket geometry, settings) combination and reused for the
+    service's lifetime.  The pacing knobs (``low_water``, ``step_quota``)
+    are traced scalars — tune them per segment without recompiling.
     """
 
     lane_slots: int = 8
@@ -53,6 +53,17 @@ class ServiceConfig:
     requests.  ``submit`` blocks — or raises with ``block=False`` — while
     the cap is reached.  None disables backpressure."""
 
+    bucket: tuple[int, int, int] | None = None
+    """Geometry bucket ``(m, f, t)`` the registered jobs' spaces are
+    right-padded into (see ``repro.core.space.GeometryBucket``).  None =
+    auto: jobs sharing one space geometry run the native program, jobs of
+    *different* geometries are padded into ``GeometryBucket.for_spaces``'s
+    canonical bucket.  An explicit bucket forces padding even for a single
+    geometry — size it to the largest job the service should ever admit
+    and the one compiled segment program covers future registrations of
+    any smaller geometry.  Like every knob here it cannot change a run's
+    Outcome, only which compiled program serves it."""
+
     def __post_init__(self):
         if self.lane_slots < 1:
             raise ValueError("lane_slots must be >= 1")
@@ -64,6 +75,10 @@ class ServiceConfig:
             raise ValueError("low_water must be >= 0 (or None for auto)")
         if self.max_pending is not None and self.max_pending < 1:
             raise ValueError("max_pending must be >= 1 (or None)")
+        if self.bucket is not None:
+            if len(self.bucket) != 3 or any(int(w) < 1 for w in self.bucket):
+                raise ValueError("bucket must be three positive widths "
+                                 "(m, f, t), or None for auto")
 
     def resolved_low_water(self) -> int:
         """The effective low-water mark (auto = lane_slots, capped at the

@@ -33,10 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lookahead
-from repro.core.optimizer import (_CARRY_TIMEOUT_KEYS, _check_shared_space,
-                                  _episode_segment, _fresh_slot_carry,
-                                  _init_run_states, _queue_tables,
-                                  _reconstruct_outcome)
+from repro.core.optimizer import (_CARRY_TIMEOUT_KEYS, _episode_segment,
+                                  _fresh_slot_carry, _init_run_states,
+                                  _queue_spaces, _queue_tables,
+                                  _reconstruct_outcome, _resolve_bucket)
 
 if TYPE_CHECKING:  # service <-> jobs import hygiene mirrors core's
     from repro.core.optimizer import Outcome
@@ -75,16 +75,18 @@ class SegmentEngine:
 
     ``jobs`` fixes the table stack (and therefore the compiled segment
     geometry) for the service's lifetime: every submitted request must
-    reference one of these :class:`JobTable` objects, and all of them must
-    share one space geometry — the same contract as ``run_queue_batched``,
-    held eagerly at registration instead of per call.
+    reference one of these :class:`JobTable` objects.  Jobs sharing one
+    space geometry run the native shared-tensor program; jobs of different
+    geometries are right-padded into one geometry bucket (auto-sized, or
+    forced via ``config.bucket``) so the service still compiles exactly
+    one segment program — the same contract as ``run_queue_batched``, held
+    eagerly at registration instead of per call.
     """
 
     def __init__(self, jobs: list[JobTable], settings,
                  config: ServiceConfig):
         if not jobs:
             raise ValueError("register at least one JobTable")
-        _check_shared_space(jobs)
         if settings.policy == "rnd":
             raise ValueError(
                 "policy 'rnd' is host-driven (no model to keep device-"
@@ -92,16 +94,24 @@ class SegmentEngine:
         self.jobs = list(jobs)
         self.settings = settings
         self.config = config
+        self.bucket = _resolve_bucket(self.jobs, config.bucket)
         job0 = self.jobs[0]
-        self.m_dim = job0.space.n_points
+        self.m_dim = (job0.space.n_points if self.bucket is None
+                      else self.bucket.m)
         self.l_dim = config.lane_slots
         self.c_dim = config.queue_capacity
 
-        pts, left, thr, u0 = lookahead.space_arrays(job0.space,
-                                                    job0.unit_price)
+        if self.bucket is None:
+            pts, left, thr, u0 = lookahead.space_arrays(job0.space,
+                                                        job0.unit_price)
+            self._valid = None
+        else:
+            pts, left, thr, self._valid = _queue_spaces(self.jobs,
+                                                        self.bucket)
+            u0 = None
         self._space = (pts, left, thr)
         (self._cost, self._runtime, self._u, self._tmax,
-         self._single) = _queue_tables(self.jobs, u0)
+         self._single) = _queue_tables(self.jobs, u0, self.bucket)
 
         self._carry = _fresh_slot_carry(self.l_dim, self.m_dim, settings)
         self._slot_tickets: list = [None] * self.l_dim
@@ -129,7 +139,9 @@ class SegmentEngine:
         fresh = [t for t in tickets if t.rows is None]
         if not fresh:
             return
-        states = _init_run_states([t.request for t in fresh], self.settings)
+        states = _init_run_states(
+            [t.request for t in fresh], self.settings,
+            None if self.bucket is None else self.bucket.m)
         budgets = states.pop("budgets")
         states["keys"] = np.asarray(states["keys"])
         fields = _STATE_FIELDS + (_CARRY_TIMEOUT_KEYS
@@ -217,7 +229,7 @@ class SegmentEngine:
             self._carry, queue, np.int32(len(staged_q)),
             np.int32(low_water), np.int32(step_quota), job_ids,
             self._cost, self._runtime if self.settings.timeout else None,
-            *self._space, self._u, self._tmax, self.settings))
+            *self._space, self._valid, self._u, self._tmax, self.settings))
         wall = time.perf_counter() - t0
         report = {k: np.asarray(v) for k, v in report.items()}
 

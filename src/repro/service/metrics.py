@@ -49,10 +49,19 @@ class ServiceMetrics:
 
 
 class MetricsRecorder:
-    """Thread-safe accumulator behind :class:`ServiceMetrics`."""
+    """Thread-safe accumulator behind :class:`ServiceMetrics`.
 
-    def __init__(self, lane_slots: int):
+    ``latency_window`` bounds the percentile sample (default
+    ``_LATENCY_WINDOW``); the mean still runs over the full history via
+    running sums, so a long-lived endpoint never grows state per request.
+    """
+
+    def __init__(self, lane_slots: int,
+                 latency_window: int = _LATENCY_WINDOW):
+        if latency_window < 1:
+            raise ValueError("latency_window must be >= 1")
         self._lane_slots = lane_slots
+        self._latency_window = latency_window
         self._lock = threading.Lock()
         self.reset()
 
@@ -71,7 +80,7 @@ class MetricsRecorder:
             self._depth_max = 0
             self._latency_sum = 0.0
             self._latencies: collections.deque[float] = collections.deque(
-                maxlen=_LATENCY_WINDOW)
+                maxlen=self._latency_window)
 
     def record_submit(self) -> None:
         with self._lock:
@@ -107,7 +116,11 @@ class MetricsRecorder:
                                                 * self._lane_slots, 1),
                 submitted=self._submitted,
                 resolved=self._resolved,
-                outstanding=self._submitted - self._resolved,
+                # Clamped: a reset() taken while runs were in flight zeroes
+                # the submit counter before those runs resolve, and the gap
+                # must read as "none outstanding since reset", not as a
+                # negative count.
+                outstanding=max(self._submitted - self._resolved, 0),
                 explorations=self._explorations,
                 serve_seconds=serve,
                 runs_per_second=self._resolved / serve if serve else 0.0,

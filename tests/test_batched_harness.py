@@ -115,12 +115,55 @@ def test_mixed_job_queue_matches_sequential(timeout):
         assert [o.job for o in bat] == [q.job.name for q in reqs]
 
 
-def test_queue_rejects_mismatched_spaces():
-    a = synthetic_job(0)
-    b = synthetic_job(0, n_a=3, n_b=3)
-    with pytest.raises(ValueError, match="space geometry"):
-        run_queue_batched([RunRequest(a, 1), RunRequest(b, 2)],
-                          Settings(policy="la0", k_gh=2))
+def _distinct_geometry_jobs():
+    """Three jobs with pairwise-distinct [M, F, T] space geometries —
+    unmixable before geometry bucketing existed."""
+    jobs = [synthetic_job(0, n_a=6, n_b=4, name="g24"),
+            synthetic_job(1, n_a=5, n_b=3, name="g15"),
+            synthetic_job(2, n_a=4, n_b=8, name="g32")]
+    assert len({j.space.geometry for j in jobs}) == 3
+    return jobs
+
+
+@pytest.mark.parametrize("timeout", [False, True])
+def test_mixed_geometry_queue_matches_sequential(timeout):
+    """THE geometry-bucket acceptance pin: a queue mixing three jobs of
+    *distinct* [M, F, T] geometries — auto-padded into one bucket, one
+    compiled episode — drains to each run's sequential-oracle Outcome bit
+    for bit (exploration order, censored sets, spend trajectories), across
+    slot counts, with timeouts off and on."""
+    from repro.core import episode_cache_size
+    jobs = _distinct_geometry_jobs()
+    s = Settings(policy="lynceus", la=1, k_gh=2, refit="frozen",
+                 timeout=timeout)
+    reqs = [RunRequest(jobs[r % 3], seed=700 + r,
+                       budget_b=4.0 if r % 3 == 0 else 1.5)
+            for r in range(7)]
+    seq = run_queue(reqs, s)
+    if timeout:
+        assert any(o.censored for o in seq)
+    for slots in (2, 5):
+        before = episode_cache_size()
+        bat = run_queue_batched(reqs, s, lane_slots=slots)
+        _assert_outcomes_equal(seq, bat)
+        assert [o.job for o in bat] == [q.job.name for q in reqs]
+        # one compiled episode per bucket, not one per native geometry
+        assert episode_cache_size() - before <= 1
+
+
+def test_explicit_bucket_accepted_and_validated():
+    """A forced bucket pads even a single-geometry queue (the audit knob);
+    a bucket narrower than a member geometry is rejected eagerly."""
+    job = synthetic_job(0)                       # [24, 2, 5]
+    s = Settings(policy="la0", la=0, k_gh=2)
+    seq = run_many(job, s, n_runs=3, seed=21)
+    bat = run_many_batched(job, s, n_runs=3, seed=21, bucket=(32, 3, 6))
+    _assert_outcomes_equal(seq, bat)
+    with pytest.raises(ValueError, match="bucket"):
+        run_queue_batched([RunRequest(job, 1)], s, bucket=(8, 2, 5))
+    with pytest.raises(ValueError, match="compact"):
+        run_many_batched(job, s, n_runs=2, scheduler="lockstep",
+                         bucket=(32, 3, 6))
 
 
 def test_unknown_scheduler_rejected():
@@ -224,3 +267,16 @@ def test_device_view_cached_and_f32():
     assert dev.cost.dtype.name == "float32"
     np.testing.assert_allclose(np.asarray(dev.cost),
                                job.cost.astype(np.float32))
+    # padded views: cached per width, native prefix bitwise, inert tail
+    m = job.space.n_points
+    pad = job.device_view(m + 8)
+    assert pad is job.device_view(m + 8)
+    assert dev is job.device_view()              # native cache undisturbed
+    np.testing.assert_array_equal(np.asarray(pad.cost)[:m],
+                                  np.asarray(dev.cost))
+    assert np.isinf(np.asarray(pad.cost)[m:]).all()
+    assert np.isinf(np.asarray(pad.runtime)[m:]).all()
+    np.testing.assert_array_equal(np.asarray(pad.unit_price)[m:], 1.0)
+    assert not np.asarray(pad.feasible)[m:].any()
+    with pytest.raises(ValueError, match="m_pad"):
+        job.device_view(m - 1)

@@ -1,0 +1,228 @@
+"""Padding-invariance properties of geometry-bucketed selector programs.
+
+A :class:`~repro.core.space.PaddedSpace` right-pads a space's ``points`` /
+``thresholds`` (and its job's tables) to fixed bucket widths so that one
+compiled selector serves every member geometry of the bucket.  The contract
+pinned here is that padding is *pure representation*: for any small space
+and any bucket that holds it,
+
+1. ``select_next`` on the padded space picks the same point index — and the
+   same billed timeout τ — as on the native space (the padded selector is
+   the native selector, bit for bit, on every decision);
+2. no masked decision can ever land on a padding lane: the candidate
+   argmax, the budget filter Γ, and the incumbent fallback all ignore the
+   padding tail whatever garbage values it carries;
+3. ``pad_to`` rejects buckets narrower than the native geometry.
+
+Runs under real hypothesis when installed; under the deterministic
+``_hypothesis_fallback`` shim otherwise, or when REPRO_NO_HYPOTHESIS is set
+(scripts/ci.sh forces the fallback so both code paths stay covered).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    if os.environ.get("REPRO_NO_HYPOTHESIS"):
+        raise ImportError("fallback forced by REPRO_NO_HYPOTHESIS")
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # no-network CI: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (GeometryBucket, Settings, acquisition as acq,
+                        make_selector)
+from repro.core.space import DiscreteSpace, next_pow2
+from repro.jobs import synthetic_job
+
+
+def _padded_state(job, bucket, y, mask, cens=None):
+    m = job.space.n_points
+    yp = np.zeros(bucket.m, np.float32)
+    mp = np.zeros(bucket.m, bool)
+    yp[:m], mp[:m] = y, mask
+    cp = None if cens is None else np.pad(cens, (0, bucket.m - m))
+    return yp, mp, cp
+
+
+def _observe(job, n, seed):
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(job.space.n_points, min(n, job.space.n_points),
+                     replace=False)
+    y = np.zeros(job.space.n_points, np.float32)
+    mask = np.zeros(job.space.n_points, bool)
+    y[idx] = job.cost.astype(np.float32)[idx]
+    mask[idx] = True
+    return y, mask
+
+
+# --------------------------------------------------------------------------- #
+# 1. padded selection == native selection
+# --------------------------------------------------------------------------- #
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 50), n_a=st.integers(3, 6), n_b=st.integers(2, 4),
+       extra=st.integers(0, 20))
+def test_select_next_padding_invariant(seed, n_a, n_b, extra):
+    """Random small spaces x random pad widths: the padded selector picks
+    the native selector's point index (and agreement on the Γ-empty flag),
+    for a lookahead policy and a greedy one."""
+    job = synthetic_job(seed, n_a=n_a, n_b=n_b)
+    m = job.space.n_points
+    bucket = GeometryBucket(m=next_pow2(m) + extra, f=job.space.n_dims + 1,
+                            t=int(job.space.thresholds.shape[1]) + 2)
+    y, mask = _observe(job, n=max(3, m // 4), seed=seed)
+    beta = np.float32(job.budget(3.0))
+    key = jax.random.PRNGKey(seed)
+    for s in (Settings(policy="lynceus", la=1, k_gh=2, refit="frozen"),
+              Settings(policy="la0", la=0, k_gh=2)):
+        nat = make_selector(job.space, job.unit_price, job.t_max, s)
+        pad = make_selector(job.space.pad_to(bucket), job.unit_price,
+                            job.t_max, s)
+        i0, v0, _ = nat(key, y, mask, beta)
+        yp, mp, _ = _padded_state(job, bucket, y, mask)
+        i1, v1, _ = pad(key, yp, mp, beta)
+        assert int(i0) == int(i1)
+        assert bool(v0) == bool(v1)
+
+
+@settings(deadline=None, max_examples=5)
+@given(seed=st.integers(0, 30), extra=st.integers(0, 9))
+def test_timeout_cap_padding_invariant(seed, extra):
+    """τ is billed, not just compared: the padded selector must produce the
+    native τ bit for bit (the 4-bit sigma quantization absorbs the padded
+    program's fusion wobble)."""
+    job = synthetic_job(seed, n_a=5, n_b=3)
+    bucket = GeometryBucket(m=16 + extra, f=2, t=4)
+    s = Settings(policy="la0", la=0, k_gh=2, timeout=True)
+    y, mask = _observe(job, n=5, seed=seed)
+    cens = np.zeros_like(mask)
+    beta = np.float32(job.budget(3.0))
+    key = jax.random.PRNGKey(seed)
+    nat = make_selector(job.space, job.unit_price, job.t_max, s)
+    pad = make_selector(job.space.pad_to(bucket), job.unit_price,
+                        job.t_max, s)
+    i0, _, d0 = nat(key, y, mask, beta, cens)
+    yp, mp, cp = _padded_state(job, bucket, y, mask, cens)
+    i1, _, d1 = pad(key, yp, mp, beta, cp)
+    assert int(i0) == int(i1)
+    assert float(np.asarray(d0["timeout"])) == float(np.asarray(d1["timeout"]))
+
+
+def test_padded_selection_never_picks_padding_even_when_space_exhausted():
+    """Every native point observed: the native selector stops (Γ empty) and
+    so must the padded one — the padding tail is untested but must never
+    become a candidate."""
+    job = synthetic_job(0, n_a=3, n_b=2)
+    m = job.space.n_points
+    bucket = GeometryBucket(m=16, f=2, t=4)
+    s = Settings(policy="la0", la=0, k_gh=2)
+    y = job.cost.astype(np.float32)
+    mask = np.ones(m, bool)
+    pad = make_selector(job.space.pad_to(bucket), job.unit_price,
+                        job.t_max, s)
+    yp, mp, _ = _padded_state(job, bucket, y, mask)
+    _, valid, _ = pad(jax.random.PRNGKey(0), yp, mp,
+                      np.float32(job.budget(3.0)))
+    assert not bool(valid), "padding lane entered the candidate set"
+
+
+# --------------------------------------------------------------------------- #
+# 2. masked decisions ignore the padding tail
+# --------------------------------------------------------------------------- #
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 100), m=st.integers(3, 10),
+       pad=st.integers(1, 12))
+def test_masked_argmax_and_budget_filter_ignore_padding(seed, m, pad):
+    """Whatever values the padding tail carries — including a maximal
+    score and an always-affordable posterior — a ``quantize_scores`` argmax
+    over valid-masked scores and the Γ membership stay on native lanes."""
+    rng = np.random.default_rng(seed)
+    total = m + pad
+    valid = np.zeros(total, bool)
+    valid[:m] = True
+    scores = rng.uniform(0.0, 1.0, total).astype(np.float32)
+    scores[m:] = 2.0                       # adversarial: padding dominates
+    masked = acq.quantize_scores(
+        jnp.where(jnp.asarray(valid), jnp.asarray(scores), -jnp.inf))
+    assert int(jnp.argmax(masked)) < m
+    mu = np.full(total, 0.1, np.float32)   # everything looks affordable
+    sigma = np.full(total, 0.01, np.float32)
+    ok = np.asarray(acq.budget_ok(jnp.asarray(mu), jnp.asarray(sigma),
+                                  jnp.float32(5.0)))
+    gamma = ok & valid
+    assert not gamma[m:].any()
+    assert gamma[:m].all()
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 100), m=st.integers(3, 10),
+       pad=st.integers(1, 12))
+def test_masked_incumbent_ignores_padding_sigma(seed, m, pad):
+    """No feasible observation: y* falls back to max-observed + 3·max-sigma
+    over *untested* points.  A huge posterior spread on a padding lane must
+    not leak into that fallback when the validity mask is supplied."""
+    rng = np.random.default_rng(seed)
+    total = m + pad
+    valid = np.zeros(total, bool)
+    valid[:m] = True
+    y = np.zeros(total, np.float32)
+    obs = np.zeros(total, bool)
+    obs[0] = True
+    y[0] = 1.0
+    feas = np.zeros(total, bool)           # nothing feasible -> fallback
+    sigma = np.full(total, 0.5, np.float32)
+    sigma[m:] = 100.0                      # adversarial padding spread
+    mu = np.ones(total, np.float32)
+    got = float(acq.incumbent(jnp.asarray(y), jnp.asarray(obs),
+                              jnp.asarray(feas), jnp.asarray(mu),
+                              jnp.asarray(sigma), jnp.asarray(valid)))
+    want = 1.0 + 3.0 * float(sigma[1:m].max()) if m > 1 else 1.0 + 3.0 * 0.5
+    assert got == pytest.approx(want)
+    assert got < 10.0, "padding sigma leaked into the incumbent fallback"
+
+
+# --------------------------------------------------------------------------- #
+# 3. bucket construction + validation
+# --------------------------------------------------------------------------- #
+def test_pad_to_rejects_narrow_bucket():
+    space = DiscreteSpace.from_grid({"a": list(range(5)),
+                                     "b": list(range(3))})
+    m, f, t = space.geometry
+    for bad in (GeometryBucket(m - 1, f, t), GeometryBucket(m, f - 1, t),
+                GeometryBucket(m, f, t - 1)):
+        with pytest.raises(ValueError, match="bucket"):
+            space.pad_to(bad)
+    with pytest.raises(ValueError, match="widths"):
+        GeometryBucket(0, 1, 1)
+    with pytest.raises(ValueError, match="integers"):
+        GeometryBucket(32.5, 2, 4)
+    assert GeometryBucket(32.0, 2, 4).m == 32      # exact floats coerce
+
+
+def test_pad_to_preserves_native_values_bitwise():
+    space = DiscreteSpace.from_grid({"a": list(range(5)),
+                                     "b": [0.0, 2.5, 7.0]})
+    m, f, t = space.geometry
+    bucket = GeometryBucket(m=next_pow2(m), f=f + 2, t=t + 1)
+    ps = space.pad_to(bucket)
+    assert ps.n_points == bucket.m and ps.n_dims == bucket.f
+    np.testing.assert_array_equal(ps.points[:m, :f], space.points)
+    np.testing.assert_array_equal(ps.thresholds[:f, :t], space.thresholds)
+    assert ps.valid[:m].all() and not ps.valid[m:].any()
+    assert np.isinf(ps.thresholds[f:]).all()
+    assert ps.native is space
+
+
+def test_bucket_for_spaces_covers_members():
+    spaces = [DiscreteSpace.from_grid({"a": list(range(a)),
+                                       "b": list(range(b))})
+              for a, b in ((3, 2), (5, 4), (4, 7))]
+    bucket = GeometryBucket.for_spaces(spaces)
+    assert bucket.m == next_pow2(max(s.n_points for s in spaces))
+    assert bucket.f == max(s.n_dims for s in spaces)
+    assert bucket.t == max(int(s.thresholds.shape[1]) for s in spaces)
+    for s in spaces:
+        s.pad_to(bucket)                   # must not raise

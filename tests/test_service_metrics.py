@@ -1,0 +1,113 @@
+"""ServiceMetrics edge cases: empty windows, single samples, wraparound.
+
+The recorder feeds the streaming benchmark gates, so its degenerate states
+must read sensibly rather than divide by zero or report phantom work: a
+fresh (or reset) recorder is all-zeros, one sample pins every percentile,
+the bounded latency window really forgets old samples while the mean keeps
+full history, and a reset taken mid-flight never yields a negative
+outstanding count.
+"""
+
+import numpy as np
+import pytest
+
+from repro.service.metrics import MetricsRecorder
+
+
+def test_empty_snapshot_is_all_zeros_and_finite():
+    m = MetricsRecorder(lane_slots=4).snapshot()
+    assert m.segments == 0 and m.steps == 0 and m.busy_slot_steps == 0
+    assert m.submitted == 0 and m.resolved == 0 and m.outstanding == 0
+    assert m.lane_occupancy == 0.0
+    assert m.runs_per_second == 0.0
+    assert m.explorations_per_second == 0.0
+    assert m.queue_depth_mean == 0.0 and m.queue_depth_max == 0
+    assert m.latency_mean_s == 0.0
+    assert m.latency_p50_s == 0.0 and m.latency_p95_s == 0.0
+    for f in m.__dataclass_fields__:
+        assert np.isfinite(getattr(m, f))
+
+
+def test_single_sample_pins_percentiles_and_means():
+    rec = MetricsRecorder(lane_slots=2)
+    rec.record_submit()
+    rec.record_segment(steps=5, busy_slot_steps=7, wall_seconds=2.0,
+                       queue_depth=3)
+    rec.record_resolve(latency_seconds=0.25, nex=12)
+    m = rec.snapshot()
+    assert m.latency_p50_s == m.latency_p95_s == m.latency_mean_s == 0.25
+    assert m.outstanding == 0
+    assert m.lane_occupancy == pytest.approx(7 / (5 * 2))
+    assert m.runs_per_second == pytest.approx(0.5)
+    assert m.explorations_per_second == pytest.approx(6.0)
+    assert m.queue_depth_mean == 3.0 and m.queue_depth_max == 3
+
+
+def test_bounded_window_wraparound_forgets_old_latencies():
+    """Percentiles run over the most recent ``latency_window`` samples only
+    — after wraparound the early (here: huge) latencies must vanish from
+    p50/p95 while the full-history mean still remembers them."""
+    rec = MetricsRecorder(lane_slots=1, latency_window=4)
+    lat = [100.0, 100.0, 100.0, 1.0, 2.0, 3.0, 4.0]
+    for v in lat:
+        rec.record_submit()
+        rec.record_resolve(v, nex=1)
+    m = rec.snapshot()
+    assert m.latency_p50_s == pytest.approx(np.percentile([1, 2, 3, 4], 50))
+    assert m.latency_p95_s == pytest.approx(np.percentile([1, 2, 3, 4], 95))
+    assert m.latency_p95_s < 5.0, "evicted sample leaked into the window"
+    assert m.latency_mean_s == pytest.approx(np.mean(lat))
+    assert m.resolved == len(lat)
+
+
+def test_window_exactly_full_keeps_every_sample():
+    """Boundary case: exactly ``latency_window`` samples — nothing evicted,
+    percentiles over all of them (an off-by-one window would drop one)."""
+    rec = MetricsRecorder(lane_slots=1, latency_window=4)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        rec.record_submit()
+        rec.record_resolve(v, nex=1)
+    m = rec.snapshot()
+    assert m.latency_p50_s == pytest.approx(2.5)
+    assert m.latency_mean_s == pytest.approx(2.5)
+
+
+def test_reset_mid_flight_never_reports_negative_outstanding():
+    """reset() while runs are in flight zeroes the submit counter; their
+    later resolutions must read as zero outstanding, not negative."""
+    rec = MetricsRecorder(lane_slots=1)
+    for _ in range(3):
+        rec.record_submit()
+    rec.reset()
+    rec.record_resolve(0.1, nex=2)      # in-flight run lands post-reset
+    m = rec.snapshot()
+    assert m.outstanding == 0
+    assert m.resolved == 1
+
+
+def test_reset_zeroes_everything():
+    rec = MetricsRecorder(lane_slots=2, latency_window=8)
+    rec.record_submit()
+    rec.record_segment(3, 4, 1.0, 2)
+    rec.record_resolve(0.5, nex=7)
+    rec.reset()
+    m = rec.snapshot()
+    assert (m.segments, m.submitted, m.resolved, m.explorations) == (0,) * 4
+    assert m.latency_p95_s == 0.0 and m.serve_seconds == 0.0
+
+
+def test_zero_wall_segments_do_not_divide_by_zero():
+    """Segments can complete in ~0 wall seconds on mocked clocks; rate
+    denominators must degrade to zero, not raise."""
+    rec = MetricsRecorder(lane_slots=2)
+    rec.record_segment(steps=1, busy_slot_steps=2, wall_seconds=0.0,
+                       queue_depth=0)
+    m = rec.snapshot()
+    assert m.runs_per_second == 0.0
+    assert m.explorations_per_second == 0.0
+    assert m.lane_occupancy == pytest.approx(1.0)
+
+
+def test_invalid_window_rejected():
+    with pytest.raises(ValueError, match="latency_window"):
+        MetricsRecorder(lane_slots=1, latency_window=0)

@@ -16,7 +16,8 @@ from repro.core import RunRequest, Settings, run_queue, run_queue_batched
 from repro.jobs import synthetic_job
 from repro.service import (QueueFull, ServiceConfig, StreamingTuner,
                            TuningTicket)
-from tests.test_batched_harness import _assert_outcomes_equal
+from tests.test_batched_harness import (_assert_outcomes_equal,
+                                        _distinct_geometry_jobs)
 
 CFG = ServiceConfig(lane_slots=3, queue_capacity=4, step_quota=8)
 
@@ -217,11 +218,49 @@ def test_rnd_policy_rejected():
         StreamingTuner(_jobs(), Settings(policy="rnd"), CFG)
 
 
-def test_mismatched_spaces_rejected():
-    a = synthetic_job(0)
-    b = synthetic_job(0, n_a=3, n_b=3)
-    with pytest.raises(ValueError, match="space geometry"):
-        StreamingTuner([a, b], Settings(policy="la0", k_gh=2), CFG)
+@pytest.mark.parametrize("timeout", [False, True])
+def test_mixed_geometry_streaming_matches_oracle(timeout):
+    """THE streaming half of the geometry-bucket acceptance pin: a service
+    registering three jobs of distinct [M, F, T] geometries — auto-padded
+    into one bucket, one compiled segment program — resolves every ticket
+    to its sequential-oracle Outcome bit for bit (spend trajectories and
+    censored sets included), with submits landing mid-episode."""
+    from repro.core import episode_cache_size
+    # Shared fixture: the same fleet the queue-side acceptance pin uses
+    # (and scripts/ci.sh mirrors), so the suites audit one geometry set.
+    jobs = _distinct_geometry_jobs()
+    s = Settings(policy="lynceus", la=1, k_gh=2, refit="frozen",
+                 timeout=timeout)
+    reqs = [RunRequest(jobs[r % 3], seed=800 + r,
+                       budget_b=4.0 if r % 3 == 0 else 1.5)
+            for r in range(7)]
+    seq = run_queue(reqs, s)
+    if timeout:
+        assert any(o.censored for o in seq)
+    before = episode_cache_size()
+    outs = _stream(jobs, s, reqs, [[3, 0, 6], [2, 5], [1, 4]],
+                   ServiceConfig(lane_slots=2, queue_capacity=3,
+                                 step_quota=5))
+    _assert_outcomes_equal(seq, outs)
+    # every segment of the mixed fleet ran one compiled episode program
+    assert episode_cache_size() - before <= 1
+
+
+def test_explicit_bucket_covers_future_registrations():
+    """config.bucket pre-sizes the program: a single-geometry service
+    forced into a larger bucket still matches the oracle exactly (this is
+    how one program is compiled once for jobs not yet registered)."""
+    job = synthetic_job(1)
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = [RunRequest(job, seed=60 + r, budget_b=1.5) for r in range(4)]
+    seq = run_queue(reqs, s)
+    outs = _stream([job], s, reqs, [[1, 0], [3, 2]],
+                   ServiceConfig(lane_slots=2, queue_capacity=2,
+                                 step_quota=6, bucket=(32, 3, 6)))
+    _assert_outcomes_equal(seq, outs)
+    # and a bucket narrower than the job's geometry is rejected eagerly
+    with pytest.raises(ValueError, match="bucket"):
+        StreamingTuner([job], s, ServiceConfig(bucket=(8, 2, 5)))
 
 
 def test_config_validation():
@@ -231,6 +270,10 @@ def test_config_validation():
         ServiceConfig(step_quota=0)
     with pytest.raises(ValueError, match="max_pending"):
         ServiceConfig(max_pending=0)
+    with pytest.raises(ValueError, match="bucket"):
+        ServiceConfig(bucket=(16, 2))
+    with pytest.raises(ValueError, match="bucket"):
+        ServiceConfig(bucket=(16, 0, 4))
     assert ServiceConfig(lane_slots=4, queue_capacity=2,
                          low_water=None).resolved_low_water() == 2
 

@@ -17,8 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Settings, acquisition as acq, make_batch_selector,
-                        make_selector, optimize, trees)
+from repro.core import (GeometryBucket, Settings, acquisition as acq,
+                        lookahead, make_batch_selector, make_selector,
+                        optimize, trees)
 from repro.core.space import DiscreteSpace
 from repro.jobs.tables import JobTable
 
@@ -162,3 +163,72 @@ def test_timeout_cap_deterministic_across_geometries():
     jax.clear_caches()
     _, _, d2 = sel1(key, y, mask, beta, cens)
     assert float(np.asarray(d2["timeout"])) == t1
+
+
+# --------------------------------------------------------------------------- #
+# Geometry buckets: fixed-width padded selector programs
+# --------------------------------------------------------------------------- #
+def test_padded_selector_jaxpr_identical_across_bucket_members():
+    """The one-compile-per-bucket claim, pinned structurally: two member
+    spaces of one bucket — different native [M, F, T] — trace the *same*
+    padded selector program (space tensors are traced arguments, so equal
+    bucket shapes mean equal jaxprs; any pad-width leak into the trace
+    would show up here as a jaxpr diff and as a recompile in production)."""
+    spaces = [DiscreteSpace.from_grid({"a": list(range(5)),
+                                       "b": list(range(3))}),
+              DiscreteSpace.from_grid({"a": list(range(4)),
+                                       "b": list(range(6)),
+                                       "c": [0.0, 1.0]})]
+    assert spaces[0].geometry != spaces[1].geometry
+    bucket = GeometryBucket.for_spaces(spaces)
+    s = Settings(policy="lynceus", la=1, k_gh=2, refit="frozen")
+
+    def padded_jaxpr(space):
+        ps = space.pad_to(bucket)
+        pts, left, thr, u = lookahead.space_arrays(ps, np.ones(space.n_points))
+        valid = jnp.asarray(ps.valid)
+        key = jnp.zeros((1, 2), jnp.uint32)
+        y = jnp.zeros((1, bucket.m), jnp.float32)
+        mask = jnp.zeros((1, bucket.m), bool)
+        beta = jnp.ones((1,), jnp.float32)
+        return str(jax.make_jaxpr(
+            lambda *a: lookahead.select_next_batched(*a, s, None, valid))(
+                key, y, mask, beta, pts, left, thr, u, jnp.float32(1.0)))
+
+    assert padded_jaxpr(spaces[0]) == padded_jaxpr(spaces[1])
+
+
+def test_tied_scores_native_vs_padded_bucket_across_cache_clears():
+    """The PR-1 adversarial tie job, run native and padded into a larger
+    bucket: every decision (pick + Γ flag + billed τ) must agree bit for
+    bit, before and after a full jit-cache clear — the padded program is
+    a new compilation geometry, which is exactly what the quantized
+    decision stack must be invariant to."""
+    job = _tied_job()
+    m = job.space.n_points
+    bucket = GeometryBucket(m=32, f=4, t=8)
+    s = Settings(policy="lynceus", la=1, k_gh=2, refit="exact", timeout=True)
+    y, mask = _obs(job)
+    cens = np.zeros_like(mask)
+    beta = job.budget(3.0)
+    key = jax.random.PRNGKey(0)
+    yp = np.zeros(bucket.m, np.float32)
+    mp = np.zeros(bucket.m, bool)
+    yp[:m], mp[:m] = y, mask
+    cp = np.zeros(bucket.m, bool)
+
+    def decisions():
+        nat = make_selector(job.space, job.unit_price, job.t_max, s)
+        pad = make_selector(job.space.pad_to(bucket), job.unit_price,
+                            job.t_max, s)
+        i0, v0, d0 = nat(key, y, mask, beta, cens)
+        i1, v1, d1 = pad(key, yp, mp, beta, cp)
+        assert int(i0) == int(i1), "padded pick differs from native"
+        assert bool(v0) == bool(v1)
+        t0 = float(np.asarray(d0["timeout"]))
+        assert t0 == float(np.asarray(d1["timeout"])), "billed τ diverged"
+        return int(i0), bool(v0), t0
+
+    first = decisions()
+    jax.clear_caches()                      # force full recompilation
+    assert decisions() == first, "decision changed across jit cache clears"
