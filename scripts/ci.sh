@@ -1,13 +1,12 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 test suite + batched-harness smoke on the synthetic job
-# + docs gate.  Exits nonzero on any test failure, any sequential/batched
-# outcome divergence (timeouts off OR on, lockstep AND compacting
-# schedulers), any streamed-vs-oracle divergence on the arrival-trace
-# smoke, any mixed-GEOMETRY divergence (three distinct [M, F, T] jobs
-# padded into one bucket, through the queue and the streaming service,
-# timeout on) or a bucketed drain that compiles more than one episode
-# program, a missing speedup, a tracked .pyc file, a broken doc link, or
-# a doc code fence that no longer runs against the current API.
+# CI gate: tier-1 test suite + determinism-contract gate + batched-harness
+# smoke on the synthetic job + docs gate.  Exits nonzero on any test
+# failure, any unsuppressed determinism-lint finding or stale allowlist
+# entry, any R1-R4 jaxpr-audit finding on a registered program, a mutation
+# fixture the auditor fails to catch, any sequential/batched outcome
+# divergence (see scripts/ci_smoke.py for the full smoke matrix), a
+# tracked .pyc file, a broken doc link, or a doc code fence that no longer
+# runs against the current API.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -28,162 +27,16 @@ REPRO_NO_HYPOTHESIS=1 python -m pytest -q \
     tests/test_censored_properties.py tests/test_xla_wobble_regression.py \
     tests/test_core_acquisition.py tests/test_padded_space.py
 
+# Determinism-contract gate (hard): AST lint over src/repro, R1-R4 jaxpr
+# audit of every registered program, and the mutation self-check that
+# proves the auditor still fires on seeded violations.
+python scripts/lint_repro.py --all
+
 # Docs gate: broken relative links + doc-embedded code executed against
-# the current API (scripts/check_docs.py), and examples stay importable.
+# the current API (scripts/check_docs.py), and everything stays compilable.
 python scripts/check_docs.py
-python -m compileall -q examples benchmarks scripts
+python -m compileall -q src tests examples benchmarks scripts
 
-PYTHONPATH=src python - <<'PY'
-import sys
-import time
-
-# THE determinism comparator (every Outcome field except wall clock),
-# shared with the benchmark gates so no smoke drifts out of sync.
-from benchmarks.common import outcomes_equal
-from repro.core import (RunRequest, Settings, run_many, run_many_batched,
-                        run_queue, run_queue_batched)
-from repro.jobs import synthetic_job
-
-job = synthetic_job(0)
-failures = 0
-for timeout in (False, True):
-    for policy, la, refit in [("bo", 0, "exact"), ("la0", 0, "exact"),
-                              ("lynceus", 2, "frozen")]:
-        s = Settings(policy=policy, la=la, k_gh=3, refit=refit,
-                     timeout=timeout)
-        seq = run_many(job, s, n_runs=25, seed=13)
-        for sched in ("lockstep", "compact"):
-            bat = run_many_batched(job, s, n_runs=25, seed=13,
-                                   scheduler=sched)
-            bad = sum(not outcomes_equal(a, b) for a, b in zip(seq, bat))
-            tag = "timeout" if timeout else "full-cost"
-            print(f"ci-smoke {policy}{la}/{refit}/{tag}/{sched}: "
-                  f"{bad}/25 mismatching runs")
-            failures += bad
-        if timeout and policy == "lynceus":
-            ncens = sum(len(o.censored) for o in seq)
-            print(f"ci-smoke censoring exercised: {ncens} aborted probes")
-            if ncens == 0:
-                failures += 1
-
-# Compaction-parity smoke on a mixed-job, mixed-budget queue: refill order
-# must never leak into outcomes.
-jobs = [synthetic_job(i, name=f"syn{i}") for i in range(2)]
-s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
-reqs = [RunRequest(jobs[r % 2], seed=400 + r,
-                   budget_b=6.0 if r % 3 == 0 else 1.5) for r in range(8)]
-qseq = run_queue(reqs, s)
-for slots in (3, 8):
-    qbat = run_queue_batched(reqs, s, lane_slots=slots)
-    bad = sum(not outcomes_equal(a, b) for a, b in zip(qseq, qbat))
-    print(f"ci-smoke queue slots={slots}: {bad}/{len(reqs)} "
-          f"mismatching runs")
-    failures += bad
-
-# Streaming smoke: a small arrival trace through the resident-episode
-# service (compact segments, mid-episode submits, timeout censoring on)
-# must resolve every ticket to the oracle's exact outcome.
-from repro.service import ServiceConfig, StreamingTuner
-s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen", timeout=True)
-streq = [RunRequest(jobs[r % 2], seed=500 + r,
-                    budget_b=5.0 if r % 3 == 0 else 1.5) for r in range(6)]
-stseq = run_queue(streq, s)
-svc = StreamingTuner(jobs, s, ServiceConfig(lane_slots=2, queue_capacity=3,
-                                            step_quota=6))
-tix = [svc.submit(q) for q in streq[:3]]
-svc.pump()                                       # later submits land mid-episode
-tix += [svc.submit(q) for q in streq[3:]]
-svc.drain()
-bad = sum(not outcomes_equal(a, t.result()) for a, t in zip(stseq, tix))
-m = svc.metrics()
-print(f"ci-smoke streaming: {bad}/{len(streq)} mismatching runs over "
-      f"{m.segments} segments, occupancy {m.lane_occupancy:.2f}")
-failures += bad
-if sum(len(o.censored) for o in stseq) == 0:
-    print("ci-smoke streaming: censoring not exercised")
-    failures += 1
-
-# Mixed-GEOMETRY smoke (timeout on): three jobs of distinct [M, F, T]
-# padded into one bucket must drain bit-identical to the oracle through
-# the bucketed compact queue AND the streaming service, while each job's
-# native runs still match under both schedulers; the bucketed drain and
-# the streamed fleet must each compile exactly ONE episode program (and
-# zero standalone selector programs — selection is inlined).
-from repro.core import episode_cache_size, selector_cache_size
-from repro.jobs import synthetic_job as synth
-# Mirrors tests/test_batched_harness.py::_distinct_geometry_jobs — keep
-# the fleets in lockstep so ci and the suites audit one geometry set.
-geo_jobs = [synth(0, n_a=6, n_b=4, name="g24"),
-            synth(1, n_a=5, n_b=3, name="g15"),
-            synth(2, n_a=4, n_b=8, name="g32")]
-assert len({j.space.geometry for j in geo_jobs}) == 3
-s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen", timeout=True)
-geo_reqs = [RunRequest(geo_jobs[r % 3], seed=600 + r,
-                       budget_b=4.0 if r % 3 == 0 else 1.5)
-            for r in range(7)]
-geo_seq = run_queue(geo_reqs, s)
-if sum(len(o.censored) for o in geo_seq) == 0:
-    print("ci-smoke mixed-geometry: censoring not exercised")
-    failures += 1
-e0, sel0 = episode_cache_size(), selector_cache_size()
-geo_bat = run_queue_batched(geo_reqs, s, lane_slots=3)
-compiles = episode_cache_size() - e0
-sel_compiles = selector_cache_size() - sel0
-bad = sum(not outcomes_equal(a, b) for a, b in zip(geo_seq, geo_bat))
-print(f"ci-smoke mixed-geometry queue: {bad}/{len(geo_reqs)} mismatching "
-      f"runs, {compiles} episode / {sel_compiles} selector compile(s) "
-      "for 3 geometries")
-failures += bad
-if compiles != 1 or sel_compiles != 0:
-    print("ci-smoke mixed-geometry queue: expected exactly 1 episode "
-          "compile per bucket and 0 standalone selector compiles")
-    failures += 1
-# each member job's runs, native, both schedulers, vs its oracle rows
-for k, j in enumerate(geo_jobs):
-    mine = [(q, o) for q, o in zip(geo_reqs, geo_seq) if q.job is j]
-    for sched in ("lockstep", "compact"):
-        nat = run_many_batched(j, s, seeds=[q.seed for q, _ in mine],
-                               budget_b=[q.budget_b for q, _ in mine],
-                               scheduler=sched)
-        bad = sum(not outcomes_equal(a, b)
-                  for (_, a), b in zip(mine, nat))
-        print(f"ci-smoke mixed-geometry native {j.name}/{sched}: "
-              f"{bad}/{len(mine)} mismatching runs")
-        failures += bad
-svc = StreamingTuner(geo_jobs, s, ServiceConfig(lane_slots=2,
-                                                queue_capacity=3,
-                                                step_quota=5))
-e0, sel0 = episode_cache_size(), selector_cache_size()
-tix = [svc.submit(q) for q in geo_reqs[:4]]
-svc.pump()                                       # rest land mid-episode
-tix += [svc.submit(q) for q in geo_reqs[4:]]
-svc.drain()
-compiles = episode_cache_size() - e0
-sel_compiles = selector_cache_size() - sel0
-bad = sum(not outcomes_equal(a, t.result())
-          for a, t in zip(geo_seq, tix))
-print(f"ci-smoke mixed-geometry streaming: {bad}/{len(geo_reqs)} "
-      f"mismatching runs, {compiles} episode / {sel_compiles} selector "
-      "compile(s)")
-failures += bad
-if compiles != 1 or sel_compiles != 0:
-    print("ci-smoke mixed-geometry streaming: expected exactly 1 episode "
-          "compile per bucket and 0 standalone selector compiles")
-    failures += 1
-
-s = Settings(policy="la0", la=0, k_gh=3)
-run_many(job, s, n_runs=1, seed=999)            # warm compile caches
-run_many_batched(job, s, n_runs=50, seed=999)
-t0 = time.perf_counter(); run_many(job, s, n_runs=50, seed=7)
-t_seq = time.perf_counter() - t0
-t0 = time.perf_counter(); run_many_batched(job, s, n_runs=50, seed=7)
-t_bat = time.perf_counter() - t0
-print(f"ci-smoke speedup: sequential {t_seq:.2f}s batched {t_bat:.2f}s "
-      f"({t_seq / t_bat:.1f}x)")
-
-if failures:
-    sys.exit(f"{failures} mismatching runs between harnesses")
-if t_seq / t_bat < 2.0:                          # loose floor; CI boxes vary
-    sys.exit("batched harness lost its speedup")
-print("ci-smoke OK")
-PY
+# Batched-harness determinism smoke (sequential vs batched, queue
+# compaction, streaming service, mixed-geometry buckets, speedup floor).
+python scripts/ci_smoke.py

@@ -1,0 +1,99 @@
+"""Determinism-contract gate: AST lint + jaxpr audit + mutation self-check.
+
+Three layers (see docs/DETERMINISM.md for the contract itself):
+
+* default            — AST lint over ``src/repro`` (compat drift, raw
+  argmax, non-literal splits, Python-float accumulation, hash()
+  derivation), filtered through the justified allowlist.  Fails on any
+  unsuppressed finding *or* any stale allowlist entry.
+* ``--audit-jaxprs`` — trace every registered program (selectors, episode
+  bodies, kernels vs refs) with ``jax.make_jaxpr`` and run the R1-R4
+  jaxpr rules.  Fails on any finding.
+* ``--self-check``   — mutation self-test: each deliberately-broken
+  fixture must produce exactly its expected finding (guards the auditor
+  against silent false negatives).
+
+``--all`` runs all three.  Run from anywhere:
+
+  PYTHONPATH=src python scripts/lint_repro.py --all
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def run_ast_lint() -> bool:
+    from repro.analysis.ast_lint import lint_tree
+
+    findings, suppressed, stale = lint_tree(ROOT)
+    for f in findings:
+        print(f"FAIL  {f}")
+        if f.source:
+            print(f"      > {f.source}")
+    for a in stale:
+        print(f"FAIL  stale allowlist entry (matches nothing): "
+              f"{a.file} [{a.rule}] match={a.match!r}")
+    print(f"ast-lint: {len(findings)} finding(s), "
+          f"{len(suppressed)} suppressed by allowlist, "
+          f"{len(stale)} stale allowlist entr(ies)")
+    return not findings and not stale
+
+
+def run_jaxpr_audit() -> bool:
+    from repro.analysis.registry import audit_all, registered_programs
+
+    t0 = time.perf_counter()
+    n_programs = len(registered_programs())
+    findings = audit_all(progress=lambda name: print(f"  audit {name}"))
+    for f in findings:
+        print(f"FAIL  {f}")
+    print(f"jaxpr-audit: {n_programs} program(s), "
+          f"{len(findings)} finding(s) "
+          f"[{time.perf_counter() - t0:.1f}s]")
+    return not findings
+
+
+def run_self_check() -> bool:
+    from repro.analysis.fixtures import check_fixtures
+
+    t0 = time.perf_counter()
+    errors = check_fixtures()
+    for e in errors:
+        print(f"FAIL  {e}")
+    print(f"self-check: 5 mutation fixture(s) + clean twin, "
+          f"{len(errors)} error(s) [{time.perf_counter() - t0:.1f}s]")
+    return not errors
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--audit-jaxprs", action="store_true",
+                   help="run the R1-R4 jaxpr audit over registered programs")
+    p.add_argument("--self-check", action="store_true",
+                   help="run the mutation-fixture self-test")
+    p.add_argument("--no-ast", action="store_true",
+                   help="skip the AST lint layer")
+    p.add_argument("--all", action="store_true",
+                   help="run every layer")
+    args = p.parse_args(argv)
+
+    ok = True
+    if not args.no_ast or args.all:
+        ok &= run_ast_lint()
+    if args.audit_jaxprs or args.all:
+        ok &= run_jaxpr_audit()
+    if args.self_check or args.all:
+        ok &= run_self_check()
+    print("determinism gate:", "OK" if ok else "FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

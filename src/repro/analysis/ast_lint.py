@@ -1,0 +1,309 @@
+"""Layer 2 of the determinism auditor: AST lint over the source tree.
+
+Where the jaxpr rules (R1-R4) prove invariants about *traced programs*, the
+AST rules catch contract violations at the source level — including code
+paths no registry program traces (host-side drivers, seeded-but-unaudited
+modules).  Rules:
+
+* ``compat-drift``     — version-drifting jax APIs used directly instead of
+  through ``repro/compat.py`` (``tree_leaves_with_path``, ``shard_map``,
+  ``.cost_analysis()``'s list-vs-dict return).  Everywhere in ``src/``.
+* ``raw-argmax``       — a selection argmax/argmin on score-like values not
+  routed through ``quantize_scores`` (source-level twin of jaxpr rule R1).
+  ``core/`` only.
+* ``nonliteral-split`` — ``jax.random.split(key, n)`` with a non-literal
+  count: a key tree whose width derives from a runtime size is the R2 bug
+  at the source level.  ``core/`` + ``service/``.
+* ``float-accum``      — episode/budget state accumulated in Python floats
+  (f64) instead of ``np.float32``: the host-side replay then diverges from
+  the device's f32 arithmetic.  ``core/`` + ``service/``.
+* ``hash-derivation``  — the ``hash()`` builtin anywhere in derivation
+  logic: salted per interpreter (PYTHONHASHSEED), so any value derived
+  from it is not reproducible across processes.  Everywhere in ``src/``.
+
+Suppressions live in ``analysis/allowlist.py`` — every entry carries a
+justification, and unused entries are themselves reported (a stale
+allowlist hides future regressions).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Iterable
+
+from repro.analysis.allowlist import ALLOWLIST, Allow
+
+__all__ = ["LintFinding", "lint_file", "lint_tree", "RULES"]
+
+RULES = ("compat-drift", "raw-argmax", "nonliteral-split", "float-accum",
+         "hash-derivation")
+
+# Directory scope per rule, relative to the src/repro package root.
+_SCOPE = {
+    "compat-drift": ("",),
+    "hash-derivation": ("",),
+    "raw-argmax": ("core/",),
+    "nonliteral-split": ("core/", "service/"),
+    "float-accum": ("core/", "service/"),
+}
+
+_SCORE_NAMES = ("score", "gain", "ei", "reward", "acq")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    rule: str
+    file: str          # path relative to the repo root
+    line: int
+    message: str
+    source: str = ""   # the offending source line, stripped
+
+    def __str__(self):
+        return f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _dotted(node) -> str:
+    """Render an attribute/name chain like ``jax.tree_util.tree_leaves``."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _contains_quantize(node) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = _dotted(sub.func)
+            if "quantize" in name:
+                return True
+    return False
+
+
+def _is_pyfloat_expr(node, pyfloat_names: set) -> bool:
+    """Does this initializer expression produce a Python float?"""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, float)
+    if isinstance(node, ast.Call):
+        name = _dotted(node.func)
+        # `.budget()` is the repo's Job accessor, annotated `-> float`.
+        return name == "float" or name.endswith(".budget")
+    if isinstance(node, ast.Name):
+        return node.id in pyfloat_names
+    if isinstance(node, ast.BinOp):
+        return (_is_pyfloat_expr(node.left, pyfloat_names)
+                or _is_pyfloat_expr(node.right, pyfloat_names))
+    return False
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, relpath: str, source: str, rules: tuple):
+        self.relpath = relpath
+        self.lines = source.splitlines()
+        self.rules = rules
+        self.findings: list[LintFinding] = []
+        # Per-enclosing-function assignment maps (innermost last).
+        self._assign_stack: list[dict] = [{}]
+        self._pyfloat_stack: list[set] = [set()]
+
+    def _emit(self, rule: str, node, message: str):
+        if rule not in self.rules:
+            return
+        line = getattr(node, "lineno", 0)
+        src = (self.lines[line - 1].strip()
+               if 0 < line <= len(self.lines) else "")
+        self.findings.append(LintFinding(rule, self.relpath, line, message,
+                                         src))
+
+    # -- scope bookkeeping -------------------------------------------------- #
+    def _visit_function(self, node):
+        pyfloats = set()
+        for arg in list(node.args.args) + list(node.args.kwonlyargs):
+            ann = arg.annotation
+            if ann is not None and "float" in ast.unparse(ann):
+                pyfloats.add(arg.arg)
+        defaults = list(node.args.defaults)
+        for arg, default in zip(node.args.args[-len(defaults):] if defaults
+                                else [], defaults):
+            if isinstance(default, ast.Constant) and isinstance(
+                    default.value, float):
+                pyfloats.add(arg.arg)
+        self._assign_stack.append({})
+        self._pyfloat_stack.append(pyfloats)
+        self.generic_visit(node)
+        self._assign_stack.pop()
+        self._pyfloat_stack.pop()
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    def _lookup_assign(self, name: str):
+        for frame in reversed(self._assign_stack):
+            if name in frame:
+                return frame[name]
+        return None
+
+    def _pyfloats(self) -> set:
+        out = set()
+        for s in self._pyfloat_stack:
+            out |= s
+        return out
+
+    # -- assignments: dataflow for raw-argmax and float-accum --------------- #
+    def visit_Assign(self, node):
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                self._assign_stack[-1][tgt.id] = node.value
+                if _is_pyfloat_expr(node.value, self._pyfloats()):
+                    self._pyfloat_stack[-1].add(tgt.id)
+                else:
+                    self._pyfloat_stack[-1].discard(tgt.id)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        if (isinstance(node.target, ast.Name)
+                and isinstance(node.op, (ast.Add, ast.Sub))
+                and node.target.id in self._pyfloats()):
+            self._emit(
+                "float-accum", node,
+                f"'{node.target.id}' accumulates in Python-float (f64) "
+                "arithmetic; episode/budget state must accumulate in "
+                "np.float32 to replay the device's f32 bookkeeping "
+                "bit-for-bit (e.g. `x = np.float32(x - c)`)")
+        self.generic_visit(node)
+
+    # -- calls: everything else --------------------------------------------- #
+    def visit_Call(self, node):
+        name = _dotted(node.func)
+
+        if name in ("jax.tree_util.tree_leaves_with_path",
+                    "jax.tree.leaves_with_path",
+                    "tree_util.tree_leaves_with_path"):
+            self._emit("compat-drift", node,
+                       f"direct {name} call: this API drifted across jax "
+                       "versions; route through "
+                       "repro.compat.tree_leaves_with_path")
+        if name.endswith("shard_map") and "compat" not in name:
+            self._emit("compat-drift", node,
+                       "direct shard_map: import moved across jax versions; "
+                       "route through repro.compat.shard_map")
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "cost_analysis":
+            self._emit("compat-drift", node,
+                       ".cost_analysis() returns a list on some jax "
+                       "versions and a dict on others; route through "
+                       "repro.compat.cost_analysis_dict")
+
+        if name == "hash":
+            self._emit("hash-derivation", node,
+                       "builtin hash() is salted per interpreter "
+                       "(PYTHONHASHSEED): anything derived from it is not "
+                       "reproducible across processes; use a stable digest "
+                       "(zlib.crc32 / hashlib) instead")
+
+        if name in ("jax.random.split", "random.split") and \
+                len(node.args) >= 2:
+            n = node.args[1]
+            if not (isinstance(n, ast.Constant)
+                    and isinstance(n.value, int)):
+                self._emit(
+                    "nonliteral-split", node,
+                    "jax.random.split with a non-literal count: a key tree "
+                    "whose width derives from a runtime size breaks the "
+                    "size-invariant PRNG contract (R2); derive per-index "
+                    "keys with fold_in")
+
+        if name.endswith("argmax") or name.endswith("argmin"):
+            self._check_argmax(node, name)
+
+        self.generic_visit(node)
+
+    def _check_argmax(self, node, name: str):
+        if name.startswith(("jnp.", "jax.numpy.")):
+            operand = node.args[0] if node.args else None
+            if operand is None or self._quantized(operand):
+                return
+            self._emit(
+                "raw-argmax", node,
+                f"{name} on unquantized scores: selection argmaxes in "
+                "core/ must run on quantize_scores-rounded values so "
+                "near-ties break identically in every compilation "
+                "geometry (jaxpr rule R1)")
+        elif isinstance(node.func, ast.Attribute):
+            recv = ast.unparse(node.func.value)
+            if any(s in recv.lower() for s in _SCORE_NAMES) and \
+                    not self._quantized(node.func.value):
+                self._emit(
+                    "raw-argmax", node,
+                    f".{node.func.attr}() on score-like value "
+                    f"'{recv}' without quantize_scores (jaxpr rule R1)")
+
+    def _quantized(self, operand) -> bool:
+        if _contains_quantize(operand):
+            return True
+        if isinstance(operand, ast.Name):
+            bound = self._lookup_assign(operand.id)
+            if bound is not None and _contains_quantize(bound):
+                return True
+        return False
+
+
+def _apply_allowlist(findings: list[LintFinding],
+                     allowlist: Iterable[Allow]):
+    """Split findings into (kept, suppressed); also report unused entries."""
+    allowlist = list(allowlist)
+    used = [False] * len(allowlist)
+    kept, suppressed = [], []
+    for f in findings:
+        hit = None
+        for i, a in enumerate(allowlist):
+            if (f.file.endswith(a.file) and f.rule == a.rule
+                    and a.match in f.source):
+                hit = i
+                break
+        if hit is None:
+            kept.append(f)
+        else:
+            used[hit] = True
+            suppressed.append(f)
+    stale = [a for a, u in zip(allowlist, used) if not u]
+    return kept, suppressed, stale
+
+
+def lint_file(path: pathlib.Path, root: pathlib.Path,
+              rules: tuple = RULES) -> list[LintFinding]:
+    rel = path.relative_to(root).as_posix()
+    try:
+        pkg_rel = path.relative_to(root / "src" / "repro").as_posix()
+    except ValueError:
+        pkg_rel = rel
+    active = tuple(r for r in rules
+                   if any(pkg_rel.startswith(p) for p in _SCOPE[r]))
+    if not active:
+        return []
+    source = path.read_text()
+    linter = _FileLinter(rel, source, active)
+    linter.visit(ast.parse(source, filename=str(path)))
+    return linter.findings
+
+
+def lint_tree(root: pathlib.Path | str, *, allowlist: Iterable[Allow] = None
+              ) -> tuple[list[LintFinding], list[LintFinding], list[Allow]]:
+    """Lint ``src/repro`` under ``root``.
+
+    Returns ``(findings, suppressed, stale_allowlist_entries)``; CI fails
+    on non-empty ``findings`` or ``stale``.
+    """
+    root = pathlib.Path(root)
+    if allowlist is None:
+        allowlist = ALLOWLIST
+    findings: list[LintFinding] = []
+    for path in sorted((root / "src" / "repro").rglob("*.py")):
+        if path.name == "compat.py":
+            continue                     # the one place drifting APIs live
+        findings.extend(lint_file(path, root))
+    return _apply_allowlist(findings, allowlist)

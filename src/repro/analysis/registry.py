@@ -1,0 +1,325 @@
+"""Registry of audited entry points: every traced program the contract gates.
+
+Each :class:`ProgramSpec` lazily builds ``(fn, example_args, rules)`` for one
+entry point — native + padded selector per policy, both episode bodies (the
+lockstep chunk and the lane-compacting segment, single-job and geometry-
+bucketed), and the Lynceus pallas kernels against their refs.  ``audit_all``
+is the CI gate behind ``scripts/lint_repro.py --audit-jaxprs``.
+
+Geometries are the smallest that exercise every code path, chosen so the
+padded candidate width ``m`` is *unique* among all dimension sizes in the
+traced programs (bucket m=32 vs f=4, t=7, f*t=28, k_gh=2, n_trees=3,
+S=64, lanes=2, _BOOT_ITERS=24): R3 identifies "a reduction over the M axis"
+by axis size, and a colliding dimension would make that ambiguous.  Tracing
+uses ``jax.make_jaxpr`` only — no XLA compile — so the whole registry audits
+in seconds.
+
+Registering a new program (see docs/DETERMINISM.md): append a
+``ProgramSpec`` whose ``build`` returns the traced callable, its example
+arguments, and the rule set — ``default_rules()`` for native programs,
+``default_rules(m=..., mask_argnums=...)`` for padded ones, with
+``flat_argnums`` mapping the mask pytree leaves to flat positions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.jaxpr_audit import Finding, audit
+from repro.analysis.rules import default_rules
+
+__all__ = ["ProgramSpec", "flat_argnums", "registered_programs",
+           "audit_program", "audit_all"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    """One audited entry point.  ``build()`` -> (fn, example_args, rules)."""
+
+    name: str
+    build: Callable[[], tuple[Callable, tuple, list]]
+    description: str = ""
+
+
+def flat_argnums(example_args: tuple, select: Callable[[str, Any], bool]
+                 ) -> tuple[int, ...]:
+    """Flat argument positions (as ``jax.make_jaxpr`` flattens the args
+    pytree) of the leaves for which ``select(path_str, leaf)`` is true —
+    how padded ProgramSpecs point R3's ``mask_argnums`` at the mask leaves
+    of nested carry/queue dicts without hand-counting."""
+    leaves = jax.tree_util.tree_flatten_with_path(example_args)[0]
+    return tuple(i for i, (path, leaf) in enumerate(leaves)
+                 if select(jax.tree_util.keystr(path), leaf))
+
+
+# --------------------------------------------------------------------------- #
+# Shared example geometries
+# --------------------------------------------------------------------------- #
+_POLICIES = ("bo", "la0", "lynceus")
+
+
+def _native_space():
+    from repro.core.space import DiscreteSpace
+    return DiscreteSpace.from_grid({"a": [0.0, 1.0, 2.0, 3.0, 4.0],
+                                    "b": [0.0, 1.0, 2.0]})
+
+
+def _bucket():
+    from repro.core.space import GeometryBucket
+    return GeometryBucket(m=32, f=4, t=7)
+
+
+def _settings(policy: str, **kw):
+    from repro.core import lookahead
+    base = dict(policy=policy, la=1 if policy == "lynceus" else 0,
+                k_gh=2, n_trees=3, depth=3)
+    base.update(kw)
+    return lookahead.Settings(**base)
+
+
+def _mask_select(path_str: str, leaf) -> bool:
+    return any(f"'{k}'" in path_str for k in ("mask", "cens", "valid"))
+
+
+def _selector_native(policy: str, timeout: bool):
+    def build():
+        from repro.core import lookahead
+        space = _native_space()
+        s = _settings(policy, timeout=timeout)
+        pts, left, thr, u = lookahead.space_arrays(
+            space, np.ones(space.n_points))
+        m = space.n_points
+        key = jnp.zeros((2,), jnp.uint32)
+        args = [key, jnp.zeros(m, jnp.float32), jnp.zeros(m, bool),
+                jnp.float32(3.0), pts, left, thr, u, jnp.float32(1.0)]
+        if timeout:
+            args.append(jnp.zeros(m, bool))
+            fn = lambda k, y, mk, b, p, l, t, uu, tm, c: \
+                lookahead._select_next_impl(k, y, mk, b, p, l, t, uu, tm, s, c)
+        else:
+            fn = lambda k, y, mk, b, p, l, t, uu, tm: \
+                lookahead._select_next_impl(k, y, mk, b, p, l, t, uu, tm, s)
+        return fn, tuple(args), default_rules()
+    return build
+
+
+def _selector_padded(policy: str, *, refit: str = "exact",
+                     timeout: bool = False):
+    def build():
+        from repro.core import lookahead
+        space = _native_space()
+        bucket = _bucket()
+        s = _settings(policy, refit=refit, timeout=timeout)
+        ps = space.pad_to(bucket)
+        pts, left, thr, u = lookahead.space_arrays(
+            ps, np.ones(space.n_points))
+        valid = jnp.asarray(ps.valid)
+        r = 2
+        keys = jnp.zeros((r, 2), jnp.uint32)
+        args = [keys, jnp.zeros((r, bucket.m), jnp.float32),
+                jnp.zeros((r, bucket.m), bool), jnp.ones((r,), jnp.float32),
+                pts, left, thr, u, jnp.float32(1.0)]
+        cens_args = (jnp.zeros((r, bucket.m), bool),) if timeout else ()
+        if timeout:
+            fn = lambda k, y, mk, b, p, l, t, uu, tm, c, v: \
+                lookahead.select_next_batched(k, y, mk, b, p, l, t, uu, tm,
+                                              s, c, v)
+        else:
+            fn = lambda k, y, mk, b, p, l, t, uu, tm, v: \
+                lookahead.select_next_batched(k, y, mk, b, p, l, t, uu, tm,
+                                              s, None, v)
+        example = tuple(args) + cens_args + (valid,)
+        # obs_mask (2), cens and valid are False on padding (the mask seeds
+        # R3's polarity lattice at these flat argument positions).
+        mask_nums = [2, len(example) - 1] + ([len(args)] if timeout else [])
+        return fn, example, default_rules(m=bucket.m,
+                                          mask_argnums=tuple(mask_nums))
+    return build
+
+
+def _episode_lockstep(timeout: bool):
+    def build():
+        from repro.core import lookahead, optimizer
+        space = _native_space()
+        s = _settings("lynceus", timeout=timeout)
+        pts, left, thr, u = lookahead.space_arrays(
+            space, np.ones(space.n_points))
+        m = space.n_points
+        r = 2
+        cost = jnp.ones((m,), jnp.float32)
+        runtime = jnp.ones((m,), jnp.float32)
+        base = [jnp.zeros((r, 2), jnp.uint32), jnp.zeros((r, m), jnp.float32),
+                jnp.zeros((r, m), bool), jnp.ones((r,), jnp.float32),
+                jnp.full((r, m), -1, jnp.int32), jnp.zeros((r,), jnp.int32)]
+        to = [jnp.zeros((r, m), bool), jnp.zeros((r, m), bool),
+              jnp.zeros((r, m), jnp.float32)] if timeout else [None] * 3
+        args = tuple(base) + tuple(x for x in to if x is not None)
+
+        if timeout:
+            fn = lambda k, y, mk, b, e, n, c, cx, bx: optimizer._batched_episode(
+                k, y, mk, b, e, n, c, cx, bx, cost, runtime, pts, left, thr,
+                u, jnp.float32(1.0), s)
+        else:
+            fn = lambda k, y, mk, b, e, n: optimizer._batched_episode(
+                k, y, mk, b, e, n, None, None, None, cost, runtime, pts,
+                left, thr, u, jnp.float32(1.0), s)
+        return fn, args, default_rules()
+    return build
+
+
+def _segment(bucketed: bool):
+    def build():
+        from repro.core import lookahead, optimizer
+        space = _native_space()
+        s = _settings("lynceus")
+        l_dim, c_dim = 2, 3
+        if bucketed:
+            bucket = _bucket()
+            m = bucket.m
+            ps = space.pad_to(bucket)
+            pts = jnp.stack([jnp.asarray(ps.points)])
+            from repro.core import trees
+            left = jnp.stack([trees.make_left_table(ps.points,
+                                                    ps.thresholds)])
+            thr = jnp.stack([jnp.asarray(ps.thresholds)])
+            valid = jnp.stack([jnp.asarray(ps.valid)])
+            u = jnp.ones((1, m), jnp.float32)
+            t_max = jnp.ones((1,), jnp.float32)
+            cost = jnp.ones((1, m), jnp.float32)
+            runtime = None
+            job_ids = jnp.zeros((l_dim + c_dim,), jnp.int32)
+        else:
+            m = space.n_points
+            pts, left, thr, u = lookahead.space_arrays(
+                space, np.ones(space.n_points))
+            valid = None
+            t_max = jnp.float32(1.0)
+            cost = jnp.ones((m,), jnp.float32)
+            runtime = None
+            job_ids = None
+        carry = optimizer._fresh_slot_carry(l_dim, m, s)
+        queue = {"keys": jnp.zeros((c_dim, 2), jnp.uint32),
+                 "y": jnp.zeros((c_dim, m), jnp.float32),
+                 "mask": jnp.zeros((c_dim, m), bool),
+                 "beta": jnp.ones((c_dim,), jnp.float32),
+                 "explored": jnp.full((c_dim, m), -1, jnp.int32),
+                 "n_exp": jnp.zeros((c_dim,), jnp.int32)}
+        if bucketed:
+            example = (carry, queue, jnp.int32(c_dim), valid)
+
+            def fn(carry_, queue_, qtail, valid_):
+                return optimizer._episode_segment(
+                    carry_, queue_, qtail, np.int32(0), np.int32(4), job_ids,
+                    cost, runtime, pts, left, thr, valid_, u, t_max, s)
+
+            sel = lambda p, leaf: _mask_select(p, leaf) or leaf is valid
+            rules = default_rules(m=m,
+                                  mask_argnums=flat_argnums(example, sel))
+        else:
+            example = (carry, queue, jnp.int32(c_dim))
+
+            def fn(carry_, queue_, qtail):
+                return optimizer._episode_segment(
+                    carry_, queue_, qtail, np.int32(0), np.int32(4), job_ids,
+                    cost, runtime, pts, left, thr, valid, u, t_max, s)
+
+            rules = default_rules()
+        return fn, example, rules
+    return build
+
+
+_KERNELS = ("flash_attention", "decode_attention", "tree_predict", "gh_ei")
+
+
+def _kernel_args(name: str):
+    key = jax.random.PRNGKey(0)
+    if name == "flash_attention":
+        q = jax.random.normal(key, (1, 2, 16, 8), jnp.float32)
+        return (q, q, q), {}
+    if name == "decode_attention":
+        q = jax.random.normal(key, (1, 2, 8), jnp.float32)
+        k = jax.random.normal(key, (1, 2, 64, 8), jnp.float32)
+        return (q, k, k, jnp.array([10])), {"bk": 64}
+    if name == "tree_predict":
+        x = jax.random.normal(key, (16, 4), jnp.float32)
+        feat = jnp.zeros((3, 2, 2), jnp.int32)
+        thr = jnp.zeros((3, 2, 2), jnp.float32)
+        leaf = jnp.zeros((3, 4), jnp.float32)
+        return (x, feat, thr, leaf), {"bm": 16}
+    if name == "gh_ei":
+        m = jnp.ones((16,), jnp.float32)
+        xi = jnp.asarray([-1.0, 1.0], jnp.float32)
+        return (m, m, m, jnp.float32(1.0), jnp.float32(1.0),
+                jnp.float32(3.0), xi), {"bm": 16}
+    raise KeyError(name)
+
+
+def _kernel(name: str, mode: str):
+    def build():
+        import repro.kernels as kernels
+        op = getattr(kernels, name)
+        args, kw = _kernel_args(name)
+        fn = lambda *a: op(*a, force=mode, **kw)
+        return fn, args, default_rules()
+    return build
+
+
+def registered_programs() -> list[ProgramSpec]:
+    """All audited entry points, cheapest geometry each."""
+    specs: list[ProgramSpec] = []
+    for pol in _POLICIES:
+        specs.append(ProgramSpec(
+            f"selector/{pol}/native", _selector_native(pol, timeout=False),
+            f"sequential-oracle selector, policy={pol}"))
+        specs.append(ProgramSpec(
+            f"selector/{pol}/padded", _selector_padded(pol),
+            f"geometry-bucket padded batched selector, policy={pol}"))
+    specs.append(ProgramSpec(
+        "selector/lynceus/native/timeout",
+        _selector_native("lynceus", timeout=True),
+        "timeout-censoring selector (censored fit + billed tau cap)"))
+    specs.append(ProgramSpec(
+        "selector/lynceus/padded/frozen",
+        _selector_padded("lynceus", refit="frozen"),
+        "padded selector with frozen-structure incremental refit"))
+    specs.append(ProgramSpec(
+        "episode/lockstep", _episode_lockstep(timeout=False),
+        "lockstep batched episode body (while_loop over Alg. 1 steps)"))
+    specs.append(ProgramSpec(
+        "episode/lockstep/timeout", _episode_lockstep(timeout=True),
+        "lockstep episode with timeout-censored exploration"))
+    specs.append(ProgramSpec(
+        "episode/segment", _segment(bucketed=False),
+        "lane-compacting segment body, single-job native queue"))
+    specs.append(ProgramSpec(
+        "episode/segment/bucketed", _segment(bucketed=True),
+        "lane-compacting segment body, geometry-bucketed mixed queue"))
+    for k in _KERNELS:
+        specs.append(ProgramSpec(
+            f"kernel/{k}/ref", _kernel(k, "ref"),
+            f"{k} reference (pure jax.numpy) path"))
+        specs.append(ProgramSpec(
+            f"kernel/{k}/pallas", _kernel(k, "interpret"),
+            f"{k} pallas kernel (interpret-mode trace)"))
+    return specs
+
+
+def audit_program(spec: ProgramSpec) -> list[Finding]:
+    fn, example_args, rules = spec.build()
+    return audit(fn, example_args, rules, program=spec.name)
+
+
+def audit_all(progress: Callable[[str], None] | None = None
+              ) -> list[Finding]:
+    """Audit every registered program; the CI zero-findings gate."""
+    findings: list[Finding] = []
+    for spec in registered_programs():
+        if progress is not None:
+            progress(spec.name)
+        findings.extend(audit_program(spec))
+    return findings

@@ -1,0 +1,197 @@
+"""Auditor rules R1-R4: sink checks over the label environment.
+
+Each rule inspects one equation at a time, with ``get(var) -> Labels``
+exposing the abstract values the walker in ``jaxpr_audit`` computed.  The
+rules are keyed to this repo's real historical failure modes (each is
+narrated with its bug in docs/DETERMINISM.md):
+
+* **R1** ``QuantizedArgmaxRule``    — float argmax/argmin must consume
+  ``quantize_scores``-dominated values (the unquantized-argmax wobble);
+* **R2** ``SizeInvariantPRNGRule``  — no ``random_split`` wider than the
+  key-chaining pair; per-index keys must come from ``fold_in`` (the
+  geometry-dependent split-count bug);
+* **R3** ``MaskedReduceRule``       — in padded programs every reduction
+  over the candidate (M) axis must consume mask-dominated values (the
+  unmasked padded-reduce bug);
+* **R4** ``NoF64NoCallbackRule``    — no f64 promotion, no host callbacks
+  inside jitted episode bodies.
+
+``ForbiddenPrimitivesRule`` is the generic "this primitive must not appear"
+check (used to pin that ``budget_ok`` thresholds z-scores instead of
+evaluating a device ``erf``/cdf — the structural half of the old string pin
+in tests/test_xla_wobble_regression.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from jax import numpy as jnp  # noqa: F401  (kept for doctest parity)
+
+from repro.analysis.jaxpr_audit import Finding, Rule
+
+__all__ = ["QuantizedArgmaxRule", "SizeInvariantPRNGRule", "MaskedReduceRule",
+           "NoF64NoCallbackRule", "ForbiddenPrimitivesRule", "default_rules"]
+
+_REDUCE_PRIMS = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                 "reduce_and", "reduce_or", "argmax", "argmin"}
+_CALLBACK_PRIMS = {"pure_callback", "io_callback", "debug_callback",
+                   "callback", "host_callback_call", "outside_call"}
+
+
+def _is_float(aval) -> bool:
+    dtype = getattr(aval, "dtype", None)
+    return dtype is not None and np.issubdtype(dtype, np.floating)
+
+
+class QuantizedArgmaxRule(Rule):
+    """R1: every argmax/argmin over floating scores must be dominated by the
+    quantize_scores bit pattern (bitcast->add->and->bitcast)."""
+
+    id = "R1"
+
+    def check_eqn(self, eqn, get, path):
+        if eqn.primitive.name not in ("argmax", "argmin"):
+            return ()
+        operand = eqn.invars[0]
+        if not _is_float(operand.aval):
+            return ()                 # integer argmaxes are exact already
+        if get(operand).quant:
+            return ()
+        return (Finding(
+            rule=self.id, primitive=eqn.primitive.name, path=path,
+            message="float argmax on scores not dominated by quantize_scores "
+                    "- last-ulp fusion wobble can flip this selection"),)
+
+
+class SizeInvariantPRNGRule(Rule):
+    """R2: ``random_split`` may only produce the literal key-chaining pair.
+
+    Any wider split means the key tree depends on a geometry-derived count,
+    so padding / bucketing / batching changes every downstream stream.
+    Per-index keys must be derived with ``fold_in`` (which this rule
+    deliberately leaves alone)."""
+
+    id = "R2"
+
+    def check_eqn(self, eqn, get, path):
+        if eqn.primitive.name != "random_split":
+            return ()
+        shape = tuple(eqn.params.get("shape", ()))
+        if shape in ((2,), ()):
+            return ()
+        return (Finding(
+            rule=self.id, primitive=eqn.primitive.name, path=path,
+            message=f"random_split with shape {shape}: split count derives "
+                    "from a geometry-dependent size - use fold_in per index "
+                    "(size-invariant PRNG contract)"),)
+
+
+class MaskedReduceRule(Rule):
+    """R3: in a padded program, no reduction over the M axis may consume
+    values whose padding lanes are live.
+
+    ``m`` is the padded candidate-axis width; an axis "is the M axis" iff
+    its size equals ``m`` (registry geometries keep m unique among all
+    dimension sizes precisely so this identification is unambiguous).
+    ``mask_argnums``/``clean_argnums`` seed the polarity lattice at the flat
+    argument positions of the validity/observation masks (False on padding)
+    and of state arrays whose padding rows are zero by construction."""
+
+    id = "R3"
+
+    def __init__(self, m: int, mask_argnums=(), clean_argnums=()):
+        self.m = int(m)
+        self.mask_argnums = tuple(mask_argnums)
+        self.clean_argnums = tuple(clean_argnums)
+
+    def _m_axes(self, aval, axes):
+        shape = getattr(aval, "shape", ())
+        return [a for a in axes if a < len(shape) and shape[a] == self.m]
+
+    def check_eqn(self, eqn, get, path):
+        prim = eqn.primitive.name
+        if prim in _REDUCE_PRIMS:
+            operand = eqn.invars[0]
+            axes = eqn.params.get("axes", ())
+            if not self._m_axes(operand.aval, axes):
+                return ()
+            lab = get(operand)
+            if lab.cleanish:
+                return ()
+            return (Finding(
+                rule=self.id, primitive=prim, path=path,
+                message=f"reduction over the padded M axis (size {self.m}) "
+                        "on values not dominated by the valid/obs masks - "
+                        "padding lanes are live in this decision"),)
+        if prim == "dot_general":
+            (lc, rc), _ = eqn.params["dimension_numbers"]
+            lhs, rhs = eqn.invars[:2]
+            contracts_m = (self._m_axes(lhs.aval, lc)
+                           or self._m_axes(rhs.aval, rc))
+            if not contracts_m:
+                return ()
+            if get(lhs).cleanish or get(rhs).cleanish:
+                return ()                  # one masked factor zeroes padding
+            return (Finding(
+                rule=self.id, primitive=prim, path=path,
+                message=f"dot_general contracting the padded M axis (size "
+                        f"{self.m}) with neither operand mask-dominated"),)
+        return ()
+
+
+class NoF64NoCallbackRule(Rule):
+    """R4: no f64 promotion and no host callbacks inside jitted bodies."""
+
+    id = "R4"
+
+    def check_eqn(self, eqn, get, path):
+        prim = eqn.primitive.name
+        if prim in _CALLBACK_PRIMS:
+            return (Finding(
+                rule=self.id, primitive=prim, path=path,
+                message="host callback inside a jitted program: breaks "
+                        "replay and forces device-host sync"),)
+        out = []
+        for v in eqn.outvars:
+            dtype = getattr(v.aval, "dtype", None)
+            # extended dtypes (PRNG keys) have no numpy equivalent: skip them
+            if dtype is not None and getattr(dtype, "name", "") in (
+                    "float64", "complex128"):
+                out.append(Finding(
+                    rule=self.id, primitive=prim, path=path,
+                    message="f64 value inside a jitted episode body - "
+                            "promotion changes decisions across backends"))
+                break
+        return out
+
+
+class ForbiddenPrimitivesRule(Rule):
+    """Generic structural pin: the listed primitives must not appear.
+
+    Used with ``("erf", "erfc", "erf_inv")`` to pin that the Gamma budget
+    filter thresholds pure-IEEE z-scores against a host-side quantile
+    rather than evaluating a device cdf transcendental."""
+
+    id = "FORBID"
+
+    def __init__(self, primitives, reason: str = "forbidden primitive"):
+        self.primitives = frozenset(primitives)
+        self.reason = reason
+
+    def check_eqn(self, eqn, get, path):
+        if eqn.primitive.name not in self.primitives:
+            return ()
+        return (Finding(rule=self.id, primitive=eqn.primitive.name,
+                        path=path, message=self.reason),)
+
+
+def default_rules(*, m: int | None = None, mask_argnums=(),
+                  clean_argnums=()) -> list[Rule]:
+    """The standard contract: R1 + R2 + R4 always; R3 iff the program is
+    padded (``m`` given, with its mask/clean argument positions)."""
+    rules: list[Rule] = [QuantizedArgmaxRule(), SizeInvariantPRNGRule(),
+                         NoF64NoCallbackRule()]
+    if m is not None:
+        rules.insert(2, MaskedReduceRule(m, mask_argnums=mask_argnums,
+                                         clean_argnums=clean_argnums))
+    return rules

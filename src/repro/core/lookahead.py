@@ -312,6 +312,13 @@ def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
     xi, w = acq.gauss_hermite(s.k_gh)
     c_nodes = acq.gh_cost_nodes(mu0, sig0, jnp.asarray(xi))     # [M, K]
     eye = jnp.eye(m_dim, dtype=bool)
+    if valid is not None:
+        # A padding root-state must not speculate an observation at its own
+        # (padding) point: its diagonal column is invalid.  Native rows keep
+        # their diagonal (always valid), so every surviving state's fit is
+        # bit-identical — this only keeps the speculative fit tensors
+        # mask-dominated for states whose scores are discarded anyway.
+        eye = eye & valid.astype(bool)[None, :]
     y1 = jnp.where(eye[:, None, :], c_nodes[:, :, None], y[None, None, :])
     m1 = jnp.broadcast_to((obs[None, :] | eye)[:, None, :],
                           (m_dim, s.k_gh, m_dim))

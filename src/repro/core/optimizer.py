@@ -272,7 +272,9 @@ def optimize_live(evaluator, space, unit_price, t_max: float,
     mask = np.zeros(m, bool)
     cens = np.zeros(m, bool)
     explored: list[int] = []
-    beta = budget
+    # f32 bookkeeping, same as optimize(): the remaining budget feeds the
+    # jitted selector, so host-side accumulation must replay f32 exactly.
+    beta = np.float32(budget)
     tau_boot = (float(np.float32(t_max) * np.float32(settings.timeout_tmax_mult))
                 if settings.timeout else float("inf"))
 
@@ -287,7 +289,7 @@ def optimize_live(evaluator, space, unit_price, t_max: float,
         mask[i] = True
         cens[i] = bool(cut)
         explored.append(int(i))
-        beta -= c
+        beta = np.float32(beta - np.float32(c))
         if log:
             log(f"[tune] cfg {i}: runtime {t:.4f}s cost {c:.4f} "
                 f"beta {beta:.3f}" + (f" CENSORED at tau {tau:.3f}s" if cut

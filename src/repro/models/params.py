@@ -13,6 +13,7 @@ logical axis names + initializer).  From that single declaration we derive:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any
 
 import jax
@@ -67,7 +68,10 @@ def init_params(specs, key: jax.Array, dtype=jnp.float32):
             arrays.append(jnp.ones(s.shape, dtype))
             continue
         std = s.std if s.std is not None else _fan_in(s) ** -0.5
-        leaf_key = jax.random.fold_in(key, abs(hash(jax.tree_util.keystr(path))) % (2**31))
+        # crc32, not hash(): builtin hash is salted per interpreter, which
+        # would give every process different initial parameters.
+        path_tag = zlib.crc32(jax.tree_util.keystr(path).encode())
+        leaf_key = jax.random.fold_in(key, path_tag & 0x7FFFFFFF)
         arrays.append((std * jax.random.normal(leaf_key, s.shape)).astype(dtype))
     return jax.tree.unflatten(treedef, arrays)
 

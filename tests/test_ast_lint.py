@@ -1,0 +1,170 @@
+"""Tests for the AST determinism lint (analysis layer 2).
+
+Two halves: the repo itself must lint clean (no unsuppressed findings, no
+stale allowlist entries), and each rule must still *fire* on a synthetic
+violation — a lint that silently stopped matching is worse than none.
+Synthetic files are laid out under tmp_path as ``src/repro/<scope>/`` so
+the per-rule directory scoping is exercised too.
+"""
+
+import pathlib
+import textwrap
+
+from repro.analysis.allowlist import Allow
+from repro.analysis.ast_lint import lint_file, lint_tree
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _lint_snippet(tmp_path, relpath: str, code: str):
+    path = tmp_path / "src" / "repro" / relpath
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(code))
+    return lint_file(path, tmp_path)
+
+
+# --------------------------------------------------------------------------- #
+# The repo itself
+# --------------------------------------------------------------------------- #
+def test_repo_lints_clean_with_live_allowlist():
+    findings, suppressed, stale = lint_tree(ROOT)
+    assert findings == [], [str(f) for f in findings]
+    assert stale == [], [f"{a.file}:{a.rule}:{a.match}" for a in stale]
+    # the justified extension-path suppressions must stay live
+    assert suppressed, "allowlist suppressed nothing — entries went stale?"
+
+
+# --------------------------------------------------------------------------- #
+# Rules fire on synthetic violations
+# --------------------------------------------------------------------------- #
+def test_compat_drift_fires_everywhere_in_src(tmp_path):
+    found = _lint_snippet(tmp_path, "models/m.py", """
+        import jax
+
+        def f(tree):
+            return jax.tree_util.tree_leaves_with_path(tree)
+    """)
+    assert [f.rule for f in found] == ["compat-drift"]
+
+
+def test_cost_analysis_method_flagged(tmp_path):
+    found = _lint_snippet(tmp_path, "launch/l.py", """
+        def f(compiled):
+            return compiled.cost_analysis()
+    """)
+    assert [f.rule for f in found] == ["compat-drift"]
+
+
+def test_raw_argmax_fires_in_core_only(tmp_path):
+    code = """
+        import jax.numpy as jnp
+
+        def pick(score):
+            return jnp.argmax(score)
+    """
+    assert [f.rule for f in _lint_snippet(tmp_path, "core/c.py", code)] \
+        == ["raw-argmax"]
+    # same code outside core/ is out of scope (train-time argmaxes on
+    # logits are not tuner selections)
+    assert _lint_snippet(tmp_path, "train/t.py", code) == []
+
+
+def test_raw_argmax_resolves_quantized_assignment(tmp_path):
+    found = _lint_snippet(tmp_path, "core/c.py", """
+        import jax.numpy as jnp
+        from repro.core.acquisition import quantize_scores
+
+        def pick(ei):
+            score = quantize_scores(ei)
+            return jnp.argmax(score)
+    """)
+    assert found == []
+
+
+def test_raw_argmax_method_call_on_score_like_name(tmp_path):
+    found = _lint_snippet(tmp_path, "core/c.py", """
+        def pick(score, cost):
+            a = int(score.argmax())      # score-like: flagged
+            b = int(cost.argmin())       # exact-table lookup: not a score
+            return a, b
+    """)
+    assert [f.rule for f in found] == ["raw-argmax"]
+    assert found[0].line == 3
+
+
+def test_nonliteral_split_fires_in_core_and_service(tmp_path):
+    code = """
+        import jax
+
+        def keys(key, m):
+            return jax.random.split(key, m)
+    """
+    for scope in ("core/c.py", "service/s.py"):
+        assert [f.rule for f in _lint_snippet(tmp_path, scope, code)] \
+            == ["nonliteral-split"], scope
+    # literal counts are size-invariant
+    assert _lint_snippet(tmp_path, "core/c2.py", """
+        import jax
+
+        def keys(key):
+            return jax.random.split(key, 3)
+    """) == []
+
+
+def test_float_accum_fires_on_python_float_state(tmp_path):
+    found = _lint_snippet(tmp_path, "core/c.py", """
+        def run(budget: float, costs):
+            beta = budget
+            for c in costs:
+                beta -= c
+            return beta
+    """)
+    assert [f.rule for f in found] == ["float-accum"]
+
+
+def test_float_accum_quiet_on_np_float32_state(tmp_path):
+    found = _lint_snippet(tmp_path, "core/c.py", """
+        import numpy as np
+
+        def run(budget: float, costs):
+            beta = np.float32(budget)
+            for c in costs:
+                beta -= c
+            return beta
+    """)
+    assert found == []
+
+
+def test_hash_derivation_fires_everywhere(tmp_path):
+    found = _lint_snippet(tmp_path, "models/m.py", """
+        def tag(path):
+            return abs(hash(path)) % (2**31)
+    """)
+    assert [f.rule for f in found] == ["hash-derivation"]
+
+
+# --------------------------------------------------------------------------- #
+# Allowlist mechanics
+# --------------------------------------------------------------------------- #
+def test_allowlist_suppresses_and_reports_stale(tmp_path):
+    path = tmp_path / "src" / "repro" / "core" / "c.py"
+    path.parent.mkdir(parents=True)
+    path.write_text("def tag(p):\n    return hash(p)\n")
+
+    live = Allow(file="core/c.py", rule="hash-derivation",
+                 match="hash(p)", why="test")
+    stale_entry = Allow(file="core/zzz.py", rule="raw-argmax",
+                        match="nope", why="test")
+    findings, suppressed, stale = lint_tree(
+        tmp_path, allowlist=[live, stale_entry])
+    assert findings == []
+    assert len(suppressed) == 1 and suppressed[0].rule == "hash-derivation"
+    assert stale == [stale_entry]
+
+
+def test_allowlist_entries_all_carry_justifications():
+    from repro.analysis.allowlist import ALLOWLIST
+
+    for a in ALLOWLIST:
+        assert a.why and len(a.why) > 20, (
+            f"{a.file}:{a.rule} needs a real justification")
