@@ -1,16 +1,64 @@
-"""Roofline table: aggregate the dry-run sweep artifacts (§Roofline)."""
+"""Roofline table: aggregate the dry-run sweep artifacts (§Roofline),
+plus an analytic placement of the fused selector step."""
 
 import json
 import pathlib
 
 from benchmarks.common import csv_line, write_json
 
+# Reference accelerator for the analytic rows (f32 peak, HBM bandwidth).
+_PEAK_FLOPS = 90e12
+_PEAK_BW = 1.2e12
+
+
+def _selector_roofline(rows, quick=False):
+    """Place one fused ``select_step`` on the roofline analytically, at the
+    same geometry ``kernels_bench`` times: count the flops of the descent →
+    EI_c/Γ → quantized-argmax chain and the HBM traffic of its operands.
+    Host-independent — this is the quantity that says whether fusing the
+    three stages into one kernel can pay (one pass over the forest params
+    and observation state instead of three round trips)."""
+    s_dim, m = (16, 128) if quick else (64, 512)
+    b, depth, f, k_gh = 10, 4, 3, 3
+    nodes = 2 ** depth
+    flops = s_dim * b * m * depth * 2        # descent: compare+select/level
+    flops += s_dim * m * (2 * b + 8)         # bagged posterior mean/var
+    flops += s_dim * m * 60                  # EI_c det-exp/Phi polynomials
+    flops += s_dim * m * (4 * k_gh + 4)      # G-H cost nodes + budget filter
+    flops += s_dim * m * 2                   # quantize + masked argmax
+    bytes_ = 4 * s_dim * b * 3 * nodes       # feat(i32) + thr + leaf
+    bytes_ += s_dim * m * 9                  # y, u (f32) + obs mask (bool)
+    bytes_ += 4 * m * f                      # shared points table
+    bytes_ += 4 * s_dim * (k_gh + 4)         # per-state outputs
+    ai = flops / bytes_
+    ridge = _PEAK_FLOPS / _PEAK_BW
+    bound = "compute" if ai >= ridge else "memory"
+    step_s = max(flops / _PEAK_FLOPS, bytes_ / _PEAK_BW)
+    # The unfused path round-trips mu/sigma between descent and acquisition
+    # and the raw scores before the argmax: each intermediate is written by
+    # one dispatch and read back by the next.
+    unfused_bytes = bytes_ + 2 * 4 * s_dim * m * (2 + 1)
+    rows.append({
+        "cell": "select_step_fused", "analytic": True, "bound": bound,
+        "s_dim": s_dim, "m": m, "flops": flops, "bytes": bytes_,
+        "arith_intensity": ai, "ridge": ridge, "step_s": step_s,
+        "unfused_bytes": unfused_bytes,
+    })
+    csv_line("roofline", "select_step_fused", "bound", bound)
+    csv_line("roofline", "select_step_fused", "arith_intensity",
+             round(ai, 2))
+    csv_line("roofline", "select_step_fused", "step_s", f"{step_s:.3g}")
+    csv_line("roofline", "select_step_fused", "unfused_traffic_ratio",
+             round(unfused_bytes / bytes_, 2))
+
 
 def main(n_runs=0, quick=False, dryrun_dir="results/dryrun"):
     rows = []
+    _selector_roofline(rows, quick=quick)
     d = pathlib.Path(dryrun_dir)
     if not d.exists():
         csv_line("roofline", "status", "no dry-run artifacts yet")
+        write_json("roofline", rows)
         return
     for f in sorted(d.glob("*.json")):
         r = json.loads(f.read_text())

@@ -38,5 +38,11 @@ python scripts/check_docs.py
 python -m compileall -q src tests examples benchmarks scripts
 
 # Batched-harness determinism smoke (sequential vs batched, queue
-# compaction, streaming service, mixed-geometry buckets, speedup floor).
+# compaction, streaming service, mixed-geometry buckets, fused-selector
+# interpret parity, speedup floor).
 python scripts/ci_smoke.py
+
+# Kernel microbench smoke: times ref vs Pallas through the real dispatch
+# (off-accelerator the Pallas rows are skipped with a reason, never
+# silently re-labeled ref timings).
+PYTHONPATH=src python -m benchmarks.run --only kernels --quick

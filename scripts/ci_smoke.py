@@ -152,6 +152,24 @@ if compiles != 1 or sel_compiles != 0:
           "compile per bucket and 0 standalone selector compiles")
     failures += 1
 
+# Fused-selector parity smoke: the Pallas-fused selection step, run under
+# the interpreter (host-independent), must replay the unfused program's
+# whole run bit for bit — timeout censoring on and off.
+from repro.core import optimize
+fjob = synth(3, n_a=4, n_b=4, name="fused-smoke")
+for timeout in (False, True):
+    kw = dict(policy="lynceus", la=1, k_gh=2, n_trees=3, depth=3,
+              refit="exact", timeout=timeout)
+    ref = optimize(fjob, Settings(fused_selector="ref", **kw),
+                   budget_b=1.5, seed=21)
+    fus = optimize(fjob, Settings(fused_selector="interpret", **kw),
+                   budget_b=1.5, seed=21)
+    bad = 0 if outcomes_equal(ref, fus) else 1
+    tag = "timeout" if timeout else "full-cost"
+    print(f"ci-smoke fused-selector/{tag}: {bad}/1 mismatching runs "
+          f"({len(ref.explored)} steps)")
+    failures += bad
+
 s = Settings(policy="la0", la=0, k_gh=3)
 run_many(job, s, n_runs=1, seed=999)            # warm compile caches
 run_many_batched(job, s, n_runs=50, seed=999)

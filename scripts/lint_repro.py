@@ -61,13 +61,13 @@ def run_jaxpr_audit() -> bool:
 
 
 def run_self_check() -> bool:
-    from repro.analysis.fixtures import check_fixtures
+    from repro.analysis.fixtures import check_fixtures, fixtures
 
     t0 = time.perf_counter()
     errors = check_fixtures()
     for e in errors:
         print(f"FAIL  {e}")
-    print(f"self-check: 5 mutation fixture(s) + clean twin, "
+    print(f"self-check: {len(fixtures())} mutation fixture(s) + clean twins, "
           f"{len(errors)} error(s) [{time.perf_counter() - t0:.1f}s]")
     return not errors
 

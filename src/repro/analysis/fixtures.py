@@ -81,6 +81,33 @@ def _mini_selector(broken: str | None):
     return fn, args, rules
 
 
+def _pallas_argmax(broken: bool):
+    """Mini fused-selector step: masked scores + quantized argmax *inside a
+    Pallas kernel body* (interpret mode, so the fixture traces anywhere).
+    ``broken=True`` seeds the in-kernel variant of the R1 bug class — the
+    kernel argmaxes raw float scores, which the walker must still catch
+    through the ``pallas_call`` ref-label seeding."""
+    from jax.experimental import pallas as pl
+    from repro.core.acquisition import quantize_scores
+
+    def kernel(score_ref, valid_ref, sel_ref):
+        score = jnp.where(valid_ref[...], score_ref[...], -jnp.inf)
+        if not broken:
+            score = quantize_scores(score)
+        sel_ref[...] = jnp.argmax(score, axis=-1, keepdims=True).astype(
+            jnp.int32)
+
+    def fn(score, valid):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
+            interpret=True,
+        )(score, valid)
+
+    args = (jnp.zeros(_M, jnp.float32), jnp.zeros(_M, bool))
+    return fn, args, default_rules(m=_M, mask_argnums=(1,))
+
+
 def _f64_leak():
     """Historical bug class: Python-float / f64 arithmetic leaking into a
     jitted episode state update.  Minimal on purpose — under ``enable_x64``
@@ -103,6 +130,8 @@ def fixtures() -> list[Fixture]:
                 _f64_leak, x64=True),
         Fixture("fixture/r4_host_callback", "R4",
                 lambda: _mini_selector("r4_callback")),
+        Fixture("fixture/r1_unquantized_kernel_argmax", "R1",
+                lambda: _pallas_argmax(True)),
     ]
 
 
@@ -118,14 +147,16 @@ def check_fixtures() -> list[str]:
     """Run the mutation self-test; returns error strings (empty = healthy).
 
     Checks, per fixture: exactly one finding, of exactly the expected rule.
-    Plus: the unbroken twin of the mini selector audits clean.
+    Plus: the unbroken twins (mini selector, mini kernel) audit clean.
     """
     errors: list[str] = []
-    fn, args, rules = _mini_selector(None)
-    clean = audit(fn, args, rules, program="fixture/clean")
-    if clean:
-        errors.append(f"clean mini selector produced findings: "
-                      f"{[str(f) for f in clean]}")
+    for tag, (fn, args, rules) in (("fixture/clean", _mini_selector(None)),
+                                   ("fixture/clean_kernel",
+                                    _pallas_argmax(False))):
+        clean = audit(fn, args, rules, program=tag)
+        if clean:
+            errors.append(f"{tag}: unbroken twin produced findings: "
+                          f"{[str(f) for f in clean]}")
     for fx in fixtures():
         found = audit_fixture(fx)
         rules_hit = sorted({f.rule for f in found})

@@ -279,6 +279,18 @@ class _Auditor:
         if prim == "bitcast_convert_type":
             lab = ins[0]
             return [dataclasses.replace(lab, iota_axes=())]
+        if prim == "get":
+            # Pallas ref read: the value carries the ref's current label.
+            return [dataclasses.replace(ins[0], iota_axes=())]
+        if prim in ("swap", "addupdate"):
+            # Pallas ref write: fold the stored value's label into the ref
+            # (env mutation — refs are invars, so later reads see it).  The
+            # join, not an overwrite, keeps multi-write kernels sound.
+            ref = eqn.invars[0]
+            old = ins[0]
+            if not _literal(ref):
+                env[ref] = _join(old, ins[1])
+            return [old for _ in eqn.outvars]
         # generic: elementwise-ish default — clean iff every array input is
         # clean; anything structural we don't model degrades to DIRTY.
         if arrays and all(l.cleanish for l in arrays):
@@ -400,7 +412,46 @@ class _Auditor:
                     env[v] = lab
                     producers[v] = eqn
                 continue
-            if subs:                                    # pallas_call & friends
+            if prim == "pallas_call" and subs:
+                # Kernel jaxpr invars are refs ordered [index operands,
+                # inputs, outputs, scratch]; eqn.invars cover the first two
+                # groups, so their labels seed the in-refs directly.  Out
+                # and scratch refs start at the lattice top (every flag
+                # optimistic) and the grid fixpoint below degrades them to
+                # whatever the body actually stores (``swap`` joins into the
+                # ref's env entry) — later grid invocations then re-read the
+                # stabilized labels, exactly like the while-loop carry.
+                tag, sub = subs[0]
+                inner = _as_jaxpr(sub)
+                ins = [get(v) for v in eqn.invars]
+                n_data = len(ins)
+                top = Labels(pol=MASK, quant=True, selidx=True)
+                seed = ins + [top] * (len(inner.invars) - n_data)
+                for _ in range(8):
+                    snapshot = list(seed)
+                    self.walk(sub, seed, path + (tag,), quiet=True)
+                    envb = self._last_env
+                    final = [envb.get(v, lab)
+                             for v, lab in zip(inner.invars, seed)]
+                    seed = (seed[:n_data]
+                            + [_join(a, b) for a, b in
+                               zip(seed[n_data:], final[n_data:])])
+                    if seed == snapshot:
+                        break
+                self.walk(sub, seed, path + (tag,))
+                envb = self._last_env
+                out_refs = inner.invars[n_data:n_data + len(eqn.outvars)]
+                for v, rv in zip(eqn.outvars, out_refs):
+                    env[v] = dataclasses.replace(
+                        envb.get(rv, _DIRTY), iota_axes=())
+                    producers[v] = eqn
+                for v in eqn.outvars[len(out_refs):]:
+                    env[v] = _DIRTY
+                    producers[v] = eqn
+                for rule in self.rules:
+                    self.findings.extend(rule.check_eqn(eqn, get, path))
+                continue
+            if subs:                                    # unmodeled callers
                 for tag, sub in subs:
                     inner = _as_jaxpr(sub)
                     self.walk(sub, [_DIRTY] * len(inner.invars), path + (tag,))
@@ -421,6 +472,7 @@ class _Auditor:
                 env[v] = lab
                 producers[v] = eqn
 
+        self._last_env = env        # pallas_call reads back final ref labels
         return [Labels(pol=CLEAN) if _literal(v) else env.get(v, _DIRTY)
                 for v in jaxpr.outvars]
 

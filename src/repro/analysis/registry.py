@@ -86,11 +86,16 @@ def _mask_select(path_str: str, leaf) -> bool:
     return any(f"'{k}'" in path_str for k in ("mask", "cens", "valid"))
 
 
-def _selector_native(policy: str, timeout: bool):
+def _selector_native(policy: str, timeout: bool, fused: bool = False):
     def build():
         from repro.core import lookahead
         space = _native_space()
-        s = _settings(policy, timeout=timeout)
+        # fused specs trace the Pallas kernel in interpret mode;
+        # fused_block_states=16 keeps every block dimension distinct from
+        # the bucket width m=32 (R3 identifies the M axis by size).
+        kw = (dict(fused_selector="interpret", fused_block_states=16)
+              if fused else {})
+        s = _settings(policy, timeout=timeout, **kw)
         pts, left, thr, u = lookahead.space_arrays(
             space, np.ones(space.n_points))
         m = space.n_points
@@ -109,12 +114,14 @@ def _selector_native(policy: str, timeout: bool):
 
 
 def _selector_padded(policy: str, *, refit: str = "exact",
-                     timeout: bool = False):
+                     timeout: bool = False, fused: bool = False):
     def build():
         from repro.core import lookahead
         space = _native_space()
         bucket = _bucket()
-        s = _settings(policy, refit=refit, timeout=timeout)
+        kw = (dict(fused_selector="interpret", fused_block_states=16)
+              if fused else {})
+        s = _settings(policy, refit=refit, timeout=timeout, **kw)
         ps = space.pad_to(bucket)
         pts, left, thr, u = lookahead.space_arrays(
             ps, np.ones(space.n_points))
@@ -233,7 +240,8 @@ def _segment(bucketed: bool):
     return build
 
 
-_KERNELS = ("flash_attention", "decode_attention", "tree_predict", "gh_ei")
+_KERNELS = ("flash_attention", "decode_attention", "tree_predict", "gh_ei",
+            "select_step")
 
 
 def _kernel_args(name: str):
@@ -256,6 +264,22 @@ def _kernel_args(name: str):
         xi = jnp.asarray([-1.0, 1.0], jnp.float32)
         return (m, m, m, jnp.float32(1.0), jnp.float32(1.0),
                 jnp.float32(3.0), xi), {"bm": 16}
+    if name == "select_step":
+        s_dim, b, d, w = 6, 3, 2, 2
+        m, f = 16, 4
+        feat = jnp.zeros((s_dim, b, d, w), jnp.int32)
+        thr = jnp.full((s_dim, b, d, w), jnp.inf, jnp.float32)
+        leaf = jnp.zeros((s_dim, b, 2 ** d), jnp.float32)
+        y = jnp.zeros((s_dim, m), jnp.float32)
+        obs = jnp.zeros((s_dim, m), bool)
+        beta = jnp.ones((s_dim,), jnp.float32)
+        bf = jnp.full((s_dim,), jnp.inf, jnp.float32)
+        pts = jnp.zeros((m, f), jnp.float32)
+        u = jnp.ones((m,), jnp.float32)
+        valid = jnp.ones((m,), bool)
+        return (feat, thr, leaf, y, obs, beta, bf, pts, u,
+                jnp.float32(1.0), jnp.float32(0.01), None, None, valid), {
+                    "emit_full": True, "bs": 4}
     raise KeyError(name)
 
 
@@ -287,6 +311,14 @@ def registered_programs() -> list[ProgramSpec]:
         "selector/lynceus/padded/frozen",
         _selector_padded("lynceus", refit="frozen"),
         "padded selector with frozen-structure incremental refit"))
+    specs.append(ProgramSpec(
+        "selector/lynceus/native/fused",
+        _selector_native("lynceus", timeout=False, fused=True),
+        "Pallas-fused selector step (interpret trace), native geometry"))
+    specs.append(ProgramSpec(
+        "selector/lynceus/padded/fused",
+        _selector_padded("lynceus", fused=True),
+        "Pallas-fused selector step (interpret trace), geometry-bucketed"))
     specs.append(ProgramSpec(
         "episode/lockstep", _episode_lockstep(timeout=False),
         "lockstep batched episode body (while_loop over Alg. 1 steps)"))

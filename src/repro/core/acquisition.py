@@ -32,12 +32,11 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.scipy.stats import norm
 
 __all__ = [
     "expected_improvement", "prob_leq", "constraint_prob", "ei_constrained",
     "incumbent", "incumbent_fallback", "budget_ok", "normal_quantile",
-    "quantize_scores",
+    "quantize_scores", "no_contract", "gh_expect",
     "gauss_hermite", "gh_cost_nodes", "censored_adjust", "timeout_cap",
 ]
 
@@ -68,22 +67,102 @@ def quantize_scores(x: jax.Array, bits: int = 12) -> jax.Array:
     return jnp.where(nan, x, q)
 
 
+def no_contract(x: jax.Array) -> jax.Array:
+    """Fence a product so the backend cannot contract ``a*b + c`` into an FMA.
+
+    LLVM forms FMAs opportunistically, and whether a given multiply gets
+    contracted into a neighbouring add depends on how XLA fused the
+    surrounding program — the same expression can round differently in two
+    compilation contexts (observed: the fused selector kernel vs the
+    unfused selector, one ulp apart).  ``lax.optimization_barrier`` does
+    not survive to CPU codegen, so instead we interpose a select on the
+    runtime-tautological predicate ``x == x`` (false only for NaN, which
+    XLA cannot fold away without a no-NaN assumption).  The select sits
+    between the multiply and any consuming add, removing the operand
+    adjacency FMA formation requires, at the cost of one compare+select.
+
+    Value-identical for non-NaN ``x``; NaNs map to 0 (never produced on
+    the fenced decision paths).
+    """
+    return jnp.where(x == x, x, jnp.zeros_like(x))
+
+
+# --------------------------------------------------------------------------- #
+# Deterministic normal pdf/cdf.
+#
+# ``jax.scipy.stats.norm`` routes through ``lax.erf``/``lax.exp``, whose XLA
+# polynomial expansions are FMA-contracted at the backend's whim — the same
+# z can round to last-ulp-different Phi(z) in two compilation contexts
+# (e.g. the Pallas-fused selector program vs the unfused one).  The selector
+# therefore uses its own expansions built entirely from fenced
+# (``no_contract``) single-rounding primitives, so every context evaluates
+# the identical IEEE operation sequence.  Accuracy: |err| < ~2e-7 relative
+# for exp, < 7.5e-8 absolute for Phi (Abramowitz & Stegun 26.2.17) — three
+# orders below the quantize_scores decision grid.
+# --------------------------------------------------------------------------- #
+_INV_SQRT2PI = np.float32(1.0 / np.sqrt(2.0 * np.pi))
+_LOG2E = np.float32(1.4426950408889634)
+_LN2_HI = np.float32(0.693359375)          # fdlibm Cody-Waite split of ln 2
+_LN2_LO = np.float32(-2.12194440e-4)
+_EXP_COEFFS = tuple(np.float32(c) for c in
+                    (1 / 720, 1 / 120, 1 / 24, 1 / 6, 0.5, 1.0, 1.0))
+_PHI_P = np.float32(0.2316419)             # A&S 26.2.17 rational tail
+_PHI_B = tuple(np.float32(b) for b in
+               (1.330274429, -1.821255978, 1.781477937, -0.356563782,
+                0.319381530))
+
+
+def _exp_det(x: jax.Array) -> jax.Array:
+    """Fenced exp for non-positive arguments (underflows to exact 0)."""
+    x = x.astype(jnp.float32)
+    n = jnp.round(x * _LOG2E)
+    r = (x - no_contract(n * _LN2_HI)) - no_contract(n * _LN2_LO)
+    acc = jnp.full_like(r, _EXP_COEFFS[0])
+    for c in _EXP_COEFFS[1:]:
+        acc = no_contract(acc * r) + c
+    bits = (jax.lax.bitcast_convert_type(acc, jnp.int32)
+            + (n.astype(jnp.int32) << 23))
+    out = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    # 2^n exponent arithmetic is only valid while the result stays normal;
+    # below that exp is indistinguishable from 0 for every consumer here.
+    return jnp.where(x < -86.0, 0.0, out)
+
+
+def _phi(z: jax.Array) -> jax.Array:
+    """Standard-normal pdf via the fenced exp."""
+    z = z.astype(jnp.float32)
+    return _INV_SQRT2PI * _exp_det(jnp.float32(-0.5) * z * z)
+
+
+def _Phi(z: jax.Array) -> jax.Array:
+    """Standard-normal cdf, A&S 26.2.17 with fenced Horner steps."""
+    z = z.astype(jnp.float32)
+    a = jnp.abs(z)
+    t = 1.0 / (no_contract(_PHI_P * a) + 1.0)
+    poly = jnp.full_like(t, _PHI_B[0])
+    for b in _PHI_B[1:]:
+        poly = no_contract(poly * t) + b
+    tail = no_contract(_phi(a) * (poly * t))
+    return jnp.where(z >= 0, 1.0 - tail, tail)
+
+
 def expected_improvement(mu: jax.Array, sigma: jax.Array,
                          y_star: jax.Array) -> jax.Array:
     """Closed-form EI for minimization. Shapes broadcast."""
     s = jnp.maximum(sigma, _SIG_EPS)
     z = (y_star - mu) / s
-    return jnp.maximum((y_star - mu) * norm.cdf(z) + s * norm.pdf(z), 0.0)
+    return jnp.maximum(no_contract((y_star - mu) * _Phi(z))
+                       + no_contract(s * _phi(z)), 0.0)
 
 
 def prob_leq(mu: jax.Array, sigma: jax.Array, bound) -> jax.Array:
     """P(N(mu, sigma) <= bound)."""
-    return norm.cdf((bound - mu) / jnp.maximum(sigma, _SIG_EPS))
+    return _Phi((bound - mu) / jnp.maximum(sigma, _SIG_EPS))
 
 
 def constraint_prob(mu_c, sigma_c, unit_price, t_max) -> jax.Array:
     """P(T(x) <= T_max) computed through the cost model: P(C <= T_max·U)."""
-    return prob_leq(mu_c, sigma_c, t_max * unit_price)
+    return prob_leq(mu_c, sigma_c, no_contract(t_max * unit_price))
 
 
 def ei_constrained(mu, sigma, y_star, unit_price, t_max) -> jax.Array:
@@ -108,8 +187,9 @@ def incumbent_fallback(best_feas, y, obs_mask, sigma, valid=None):
     obs = obs_mask.astype(bool)
     untested = ~obs if valid is None else ~obs & valid.astype(bool)
     fallback = (jnp.max(jnp.where(obs, y, -jnp.inf), axis=-1)
-                + 3.0 * jnp.max(jnp.where(untested, sigma, -jnp.inf),
-                                axis=-1))
+                + no_contract(
+                    3.0 * jnp.max(jnp.where(untested, sigma, -jnp.inf),
+                                  axis=-1)))
     return jnp.where(jnp.isfinite(best_feas), best_feas, fallback)
 
 
@@ -167,7 +247,23 @@ def gauss_hermite(k: int) -> tuple[np.ndarray, np.ndarray]:
 
 def gh_cost_nodes(mu, sigma, xi) -> jax.Array:
     """Speculated cost values ``mu + sqrt(2)·sigma·xi_i``; broadcasts over xi."""
-    return mu[..., None] + np.sqrt(2.0) * sigma[..., None] * xi
+    return mu[..., None] + no_contract(np.sqrt(2.0) * sigma[..., None] * xi)
+
+
+def gh_expect(vals: jax.Array, w) -> jax.Array:
+    """``sum_i w_i · vals[..., i]`` with a pinned, fenced accumulation.
+
+    The G-H expectation is the ``[..., K] @ [K]`` contraction closing every
+    lookahead level.  A ``@`` would hand the accumulation order and FMA
+    choices back to the backend — the per-compilation-context wobble the
+    rest of the decision path just eliminated — so the K (static, small)
+    terms are summed left-to-right with each product fenced.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    acc = no_contract(vals[..., 0] * w[0])
+    for i in range(1, vals.shape[-1]):
+        acc = acc + no_contract(vals[..., i] * w[i])
+    return acc
 
 
 # --------------------------------------------------------------------------- #
@@ -227,6 +323,6 @@ def timeout_cap(best_feas, sigma_sel, u_sel, beta, t_max, kappa, tmax_mult
     cap = jnp.minimum(jnp.float32(t_max) * jnp.float32(tmax_mult),
                       jnp.maximum(beta, 0.0) / jnp.maximum(u_sel, _SIG_EPS))
     sig_q = quantize_scores(sigma_sel, bits=4)
-    pred = (best_feas + jnp.float32(kappa) * sig_q) / jnp.maximum(
+    pred = (best_feas + no_contract(jnp.float32(kappa) * sig_q)) / jnp.maximum(
         u_sel, _SIG_EPS)
     return jnp.where(jnp.isfinite(best_feas), jnp.minimum(cap, pred), cap)

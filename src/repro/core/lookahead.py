@@ -46,6 +46,8 @@ import numpy as np
 
 from repro.core import acquisition as acq
 from repro.core import trees
+from repro.kernels.dispatch import resolve_mode as _resolve_kernel_mode
+from repro.kernels.select_step.kernel import select_step_call
 
 __all__ = ["Settings", "select_next", "select_next_batched", "make_selector",
            "make_batch_selector", "space_arrays", "space_valid",
@@ -78,6 +80,43 @@ class Settings:
     # the predictive cap still aborts incumbent-dominated runs much earlier.
     timeout_tmax_mult: float = 3.0
     cens_sigma_rel: float = 0.5  # posterior sigma floor at censored configs
+    # Pallas-fused selector step (kernels/select_step): "auto" picks the
+    # fused kernel on TPU/GPU and the traced-identical unfused program
+    # elsewhere; "pallas"/"interpret" force the kernel (interpret is the CI
+    # mode — runs the kernel body as plain XLA on any backend); "ref" forces
+    # the unfused program.  Fusion requires refit="exact": under "auto" a
+    # frozen-refit selector silently stays unfused (the frozen incremental
+    # update has no kernel), while an explicit "pallas"/"interpret" raises.
+    fused_selector: str = "auto"
+    # State-axis block size of the fused kernel's grid: each block keeps its
+    # whole [fused_block_states, M] candidate sweep in VMEM.
+    fused_block_states: int = 32
+
+
+def _fused_mode(s: Settings) -> str | None:
+    """Resolve ``s.fused_selector`` to "pallas" | "interpret" | None (unfused).
+
+    Trace-time only (Settings is static), so the unfused program is traced
+    untouched whenever this returns None — including the "auto" default off
+    accelerators, where ``kernels.dispatch.resolve_mode`` logs the degrade
+    once.
+    """
+    if s.fused_selector == "ref":
+        return None
+    if s.fused_selector == "auto":
+        if s.refit == "frozen":
+            return None
+        mode = _resolve_kernel_mode(None, op="select_step")
+        return None if mode == "ref" else mode
+    if s.fused_selector not in ("pallas", "interpret"):
+        raise ValueError(
+            f"fused_selector={s.fused_selector!r}: expected 'auto', "
+            "'pallas', 'interpret' or 'ref'")
+    if s.refit == "frozen":
+        raise ValueError(
+            "fused_selector='pallas'/'interpret' requires refit='exact': "
+            "the frozen incremental leaf update has no fused kernel")
+    return s.fused_selector
 
 
 # --------------------------------------------------------------------------- #
@@ -135,6 +174,25 @@ def _fit_batch_exact(key, y_b, m_b, cens_b, points, left, thresholds, floor,
     return mu, sigma
 
 
+def _fit_batch_params(key, y_b, m_b, points, left, thresholds, s: Settings):
+    """Per-state forest *parameters* [S, B, D, W] for the fused kernel.
+
+    The same ``fold_in(key, state_index)`` key schedule as
+    :func:`_fit_batch_exact` — the fused kernel re-derives each state's
+    leaf assignment by traversal instead of consuming the fit-side gather,
+    so only the parameters cross the kernel boundary.
+    """
+    keys = jax.vmap(jax.random.fold_in, (None, 0))(
+        key, jnp.arange(y_b.shape[0]))
+
+    def one(k, y, m):
+        p, _ = trees.fit_forest(k, y, m, points, left, thresholds,
+                                n_trees=s.n_trees, depth=s.depth)
+        return p
+
+    return jax.vmap(one)(keys, y_b, m_b)
+
+
 def _fit_batch_frozen(root_assign, root_preds, boot_w, sel_b, c_b, floor):
     """Frozen-structure incremental refit.
 
@@ -189,32 +247,56 @@ def _recurse(key, y_b, m_b, beta_b, bf_b, depth_left, *, points, left,
     lanes are never candidates, at any speculation depth.
     """
     k_fit, k_next = jax.random.split(key)
-    if s.refit == "frozen" and frozen_ctx is not None:
-        mu, sigma = _fit_batch_frozen(*frozen_ctx, floor)
-        if cens_b is not None:
-            mu, sigma = acq.censored_adjust(mu, sigma, y_b, cens_b,
-                                            s.cens_sigma_rel)
+    fused = _fused_mode(s)
+    xi, w = acq.gauss_hermite(s.k_gh)
+    if fused is not None:
+        # Fused hot path (kernels/select_step): the per-state forest *fit*
+        # stays outside — identical key schedule to _fit_batch_exact — and
+        # the [S, M] sweep (ensemble descent -> censored adjust -> EI_c ->
+        # Gamma -> quantized argmax) runs in one Pallas program.
+        params = _fit_batch_params(k_fit, y_b, m_b, points, left,
+                                   thresholds, s)
+        out = select_step_call(
+            params.feat, params.thr, params.leaf, y_b, m_b, beta_b, bf_b,
+            points, u, t_max, floor, jnp.asarray(xi), cens=cens_b,
+            valid=valid, conf=s.conf, cens_rel=s.cens_sigma_rel,
+            score_mode="eic", use_budget=True, emit_full=False,
+            want_nodes=depth_left > 0, bs=s.fused_block_states,
+            interpret=(fused == "interpret"))
+        sel, has_cand, eic_sel, mu_sel, sig_sel = out[:5]
+        r0 = jnp.where(has_cand, eic_sel, 0.0)
+        c0 = jnp.where(has_cand, mu_sel, 0.0)
+        if depth_left == 0:
+            return r0, c0
+        c_nodes = out[5]                                    # [S, K]
     else:
-        mu, sigma = _fit_batch_exact(k_fit, y_b, m_b, cens_b, points, left,
-                                     thresholds, floor, s)
-    ystar = _ystar(bf_b, y_b, m_b, sigma, valid)
-    eic = acq.ei_constrained(mu, sigma, ystar[:, None], u[None, :], t_max)
-    untested = ~m_b.astype(bool)
-    if valid is not None:
-        untested = untested & valid[None, :]
-    cand = untested & acq.budget_ok(mu, sigma, beta_b[:, None], s.conf)
-    score = acq.quantize_scores(jnp.where(cand, eic, -jnp.inf))
-    sel = jnp.argmax(score, axis=1)                             # [S]
-    has_cand = jnp.any(cand, axis=1)
-    take = lambda a: jnp.take_along_axis(a, sel[:, None], axis=1)[:, 0]
-    r0 = jnp.where(has_cand, take(eic), 0.0)
-    c0 = jnp.where(has_cand, take(mu), 0.0)
-    if depth_left == 0:
-        return r0, c0
+        if s.refit == "frozen" and frozen_ctx is not None:
+            mu, sigma = _fit_batch_frozen(*frozen_ctx, floor)
+            if cens_b is not None:
+                mu, sigma = acq.censored_adjust(mu, sigma, y_b, cens_b,
+                                                s.cens_sigma_rel)
+        else:
+            mu, sigma = _fit_batch_exact(k_fit, y_b, m_b, cens_b, points,
+                                         left, thresholds, floor, s)
+        ystar = _ystar(bf_b, y_b, m_b, sigma, valid)
+        eic = acq.ei_constrained(mu, sigma, ystar[:, None], u[None, :],
+                                 t_max)
+        untested = ~m_b.astype(bool)
+        if valid is not None:
+            untested = untested & valid[None, :]
+        cand = untested & acq.budget_ok(mu, sigma, beta_b[:, None], s.conf)
+        score = acq.quantize_scores(jnp.where(cand, eic, -jnp.inf))
+        sel = jnp.argmax(score, axis=1)                         # [S]
+        has_cand = jnp.any(cand, axis=1)
+        take = lambda a: jnp.take_along_axis(a, sel[:, None], axis=1)[:, 0]
+        r0 = jnp.where(has_cand, take(eic), 0.0)
+        c0 = jnp.where(has_cand, take(mu), 0.0)
+        if depth_left == 0:
+            return r0, c0
+        c_nodes = acq.gh_cost_nodes(take(mu), take(sigma),
+                                    jnp.asarray(xi))            # [S, K]
 
     # Branch: Gauss-Hermite speculation on the selected config's cost.
-    xi, w = acq.gauss_hermite(s.k_gh)
-    c_nodes = acq.gh_cost_nodes(take(mu), take(sigma), jnp.asarray(xi))  # [S,K]
     s_dim, m_dim = y_b.shape
     sel_oh = jax.nn.one_hot(sel, m_dim, dtype=bool)             # [S, M]
     y_child = jnp.where(sel_oh[:, None, :], c_nodes[:, :, None],
@@ -243,10 +325,111 @@ def _recurse(key, y_b, m_b, beta_b, bf_b, depth_left, *, points, left,
         frozen_ctx=child_frozen, cens_b=cens_child, valid=valid)
     r_ch = r_ch.reshape(s_dim, s.k_gh)
     c_ch = c_ch.reshape(s_dim, s.k_gh)
-    w = jnp.asarray(w)
-    reward = jnp.where(has_cand, r0 + s.gamma * (r_ch @ w), 0.0)
-    cost = jnp.where(has_cand, c0 + (c_ch @ w), 0.0)
+    # G-H expectation via the pinned fenced dot (acq.gh_expect): a raw `@ w`
+    # would let the backend pick the accumulation/FMA shape per compilation
+    # context, splitting the fused and unfused selector programs bitwise.
+    reward = jnp.where(
+        has_cand,
+        r0 + acq.no_contract(s.gamma * acq.gh_expect(r_ch, w)), 0.0)
+    cost = jnp.where(has_cand, c0 + acq.gh_expect(c_ch, w), 0.0)
     return reward, cost
+
+
+def _select_next_fused(key, y, obs_mask, beta, points, left, thresholds, u,
+                       t_max, s: Settings, cens, valid, mode: str):
+    """Fused-root twin of :func:`_select_next_impl` (same contract).
+
+    The root forest fit keeps the unfused key schedule (``k_root`` feeds
+    ``trees.fit_forest`` directly); the whole [M] sweep — traversal,
+    censored adjustment, y*, EI_c, Gamma, policy score, quantized argmax —
+    runs as one ``kernels/select_step`` program with ``emit_full=True`` so
+    the diagnostics are the kernel's own arrays.  Lookahead recursion and
+    the final reward/cost ratio argmax stay outside (they consume the whole
+    recursion tree, not one state's sweep).
+    """
+    m_dim = y.shape[0]
+    floor = _sigma_floor(y, obs_mask, s.sigma_floor_rel)
+    k_root, k_path = jax.random.split(key)
+    params, _ = trees.fit_forest(k_root, y, obs_mask, points, left,
+                                 thresholds, n_trees=s.n_trees,
+                                 depth=s.depth)
+
+    obs = obs_mask.astype(bool)
+    feas_obs = obs & (y <= t_max * u)
+    if cens is not None:
+        feas_obs = feas_obs & ~cens.astype(bool)
+    best_feas = jnp.min(jnp.where(feas_obs, y, jnp.inf))
+
+    if s.policy == "bo":
+        score_mode, use_budget = "eic", False
+    elif s.policy == "la0" or (s.policy == "lynceus" and s.la == 0):
+        score_mode, use_budget = "ratio", True
+    elif s.policy == "lynceus":
+        score_mode, use_budget = "eic", True
+    else:
+        raise ValueError(f"unknown policy {s.policy!r}")
+    lookahead = s.policy == "lynceus" and s.la > 0
+    xi, w = acq.gauss_hermite(s.k_gh)
+
+    out = select_step_call(
+        params.feat[None], params.thr[None], params.leaf[None], y[None],
+        obs[None], jnp.asarray(beta, jnp.float32)[None], best_feas[None],
+        points, u, t_max, floor, jnp.asarray(xi),
+        cens=None if cens is None else cens.astype(bool)[None],
+        valid=valid, conf=s.conf, cens_rel=s.cens_sigma_rel,
+        score_mode=score_mode, use_budget=use_budget, emit_full=True,
+        want_nodes=lookahead, bs=s.fused_block_states,
+        interpret=(mode == "interpret"))
+    mu0, sig0, eic0 = out[0][0], out[1][0], out[2][0]
+    ystar0, cand0, sel0, has0 = out[3][0], out[4][0], out[5][0], out[6][0]
+    diagnostics = {"mu": acq.quantize_scores(mu0),
+                   "sigma": acq.quantize_scores(sig0),
+                   "ei_c": acq.quantize_scores(eic0),
+                   "y_star": acq.quantize_scores(ystar0)}
+
+    def finish(sel, valid_flag):
+        if s.timeout:
+            diagnostics["timeout"] = acq.timeout_cap(
+                best_feas, sig0[sel], u[sel], beta, t_max, s.timeout_kappa,
+                s.timeout_tmax_mult)
+        return sel, valid_flag, diagnostics
+
+    if not lookahead:
+        # bo / la0 / lynceus-la0: the kernel's in-kernel argmax is the pick
+        # (cand0 is `untested` for bo, Gamma for the budget-aware scores).
+        return finish(sel0, has0)
+
+    # ---- Lynceus lookahead below the fused root sweep. ----
+    gamma0 = cand0
+    c_nodes = out[7][0]                                     # [M, K]
+    reward = eic0
+    cost = mu0
+    eye = jnp.eye(m_dim, dtype=bool)
+    if valid is not None:
+        eye = eye & valid.astype(bool)[None, :]
+    y1 = jnp.where(eye[:, None, :], c_nodes[:, :, None], y[None, None, :])
+    m1 = jnp.broadcast_to((obs[None, :] | eye)[:, None, :],
+                          (m_dim, s.k_gh, m_dim))
+    beta1 = beta - c_nodes
+    feas1 = c_nodes <= (t_max * u)[:, None]
+    bf1 = jnp.minimum(best_feas, jnp.where(feas1, c_nodes, jnp.inf))
+    flat = lambda a: a.reshape((m_dim * s.k_gh,) + a.shape[2:])
+    cens1 = None
+    if cens is not None:
+        cens1 = flat(jnp.broadcast_to(cens.astype(bool)[None, None, :],
+                                      (m_dim, s.k_gh, m_dim)))
+    r1, c1 = _recurse(
+        k_path, flat(y1), flat(m1), flat(beta1), flat(bf1), s.la - 1,
+        points=points, left=left, thresholds=thresholds, u=u, t_max=t_max,
+        floor=floor, s=s, frozen_ctx=None, cens_b=cens1, valid=valid)
+    reward = reward + acq.no_contract(
+        s.gamma * acq.gh_expect(r1.reshape(m_dim, s.k_gh), w))
+    cost = cost + acq.gh_expect(c1.reshape(m_dim, s.k_gh), w)
+    score = acq.quantize_scores(
+        jnp.where(gamma0, reward / jnp.maximum(cost, _EPS), -jnp.inf))
+    diagnostics["reward"] = acq.quantize_scores(reward)
+    diagnostics["path_cost"] = acq.quantize_scores(cost)
+    return finish(jnp.argmax(score), jnp.any(gamma0))
 
 
 def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
@@ -264,7 +447,16 @@ def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
 
     With ``s.timeout`` the diagnostics carry ``"timeout"``: the predictive
     cap τ (runtime units) the driver must abort the selected exploration at.
+
+    ``s.fused_selector`` routes the whole step through the Pallas-fused
+    kernel (:func:`_select_next_fused`) when resolved on; the body below is
+    the unfused program, traced untouched whenever fusion is off.
     """
+    fused = _fused_mode(s)
+    if fused is not None:
+        return _select_next_fused(key, y, obs_mask, beta, points, left,
+                                  thresholds, u, t_max, s, cens, valid,
+                                  fused)
     m_dim = y.shape[0]
     floor = _sigma_floor(y, obs_mask, s.sigma_floor_rel)
     k_root, k_path = jax.random.split(key)
@@ -282,7 +474,15 @@ def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
     eic0 = acq.ei_constrained(mu0, sig0, ystar0, u, t_max)
     untested = ~obs if valid is None else ~obs & valid.astype(bool)
     gamma0 = untested & acq.budget_ok(mu0, sig0, beta, s.conf)
-    diagnostics = {"mu": mu0, "sigma": sig0, "ei_c": eic0, "y_star": ystar0}
+    # Diagnostics are emitted on the quantize_scores grid: ei_c (and the
+    # lookahead reward/path_cost below) pass through erf/exp, and mu/sigma
+    # through the fit's leaf-mean reductions, all of which XLA rounds
+    # differently per compilation context.  Quantized emission is what lets
+    # the fused kernel program replay the unfused diagnostics bit for bit.
+    diagnostics = {"mu": acq.quantize_scores(mu0),
+                   "sigma": acq.quantize_scores(sig0),
+                   "ei_c": acq.quantize_scores(eic0),
+                   "y_star": acq.quantize_scores(ystar0)}
 
     def finish(sel, valid):
         if s.timeout:
@@ -347,13 +547,13 @@ def _select_next_impl(key, y, obs_mask, beta, points, left, thresholds, u,
         points=points, left=left, thresholds=thresholds, u=u, t_max=t_max,
         floor=floor, s=s, frozen_ctx=frozen_ctx, cens_b=cens1,
         valid=valid)
-    w = jnp.asarray(w)
-    reward = reward + s.gamma * (r1.reshape(m_dim, s.k_gh) @ w)
-    cost = cost + (c1.reshape(m_dim, s.k_gh) @ w)
+    reward = reward + acq.no_contract(
+        s.gamma * acq.gh_expect(r1.reshape(m_dim, s.k_gh), w))
+    cost = cost + acq.gh_expect(c1.reshape(m_dim, s.k_gh), w)
     score = acq.quantize_scores(
         jnp.where(gamma0, reward / jnp.maximum(cost, _EPS), -jnp.inf))
-    diagnostics["reward"] = reward
-    diagnostics["path_cost"] = cost
+    diagnostics["reward"] = acq.quantize_scores(reward)
+    diagnostics["path_cost"] = acq.quantize_scores(cost)
     return finish(jnp.argmax(score), jnp.any(gamma0))
 
 

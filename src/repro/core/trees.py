@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.acquisition import no_contract as _no_contract
 from repro.core.acquisition import quantize_scores as _quantize_scores
 
 __all__ = [
@@ -44,6 +45,30 @@ __all__ = [
 ]
 
 _EPS = 1e-12
+
+
+def _pinned_sum0(x: jax.Array) -> jax.Array:
+    """Sum over axis 0 in a fixed balanced pairwise order.
+
+    ``jnp.sum`` / ``@`` leave the accumulation order (and FMA formation) to
+    the backend, which re-decides both per compilation context — the same
+    weighted targets can produce last-ulp-different leaf means in the unfused
+    selector vs the fused Pallas program.  Zero-padding to a power of two and
+    repeatedly adding the two halves pins one association that every context
+    lowers identically (and stays vectorization-friendly: each step is a
+    single elementwise add of contiguous halves).
+    """
+    m = x.shape[0]
+    size = 1
+    while size < m:
+        size *= 2
+    if size != m:
+        x = jnp.concatenate(
+            [x, jnp.zeros((size - m,) + x.shape[1:], x.dtype)], axis=0)
+    while x.shape[0] > 1:
+        half = x.shape[0] // 2
+        x = x[:half] + x[half:]
+    return x[0]
 
 # Fixed iteration count of the Knuth Poisson sampler below.  P(Poisson(1)
 # >= 24) ~ 1e-24: the truncation is unobservable, and a static bound keeps
@@ -102,14 +127,18 @@ def _fit_one_tree(y: jax.Array, w: jax.Array, points: jax.Array,
     width = 2 ** (depth - 1) if depth > 0 else 1
 
     assign = jnp.zeros((m,), dtype=jnp.int32)          # node pos at current lvl
+    # Integer-valued weight sums (Poisson counts, well under 2^24) are exact
+    # float32 in any order and need no pinning; the w·y sums are not, and
+    # leaf means feed the decision path, so they go through the fenced
+    # fixed-order fold (w·y fenced so the fold's first add cannot FMA it).
     sw0 = jnp.sum(w)
-    val = jnp.full((1,), jnp.sum(w * y) / jnp.maximum(sw0, _EPS))
+    wy = _no_contract(w * y)
+    val = jnp.full((1,), _pinned_sum0(wy) / jnp.maximum(sw0, _EPS))
 
     feat_lvls, thr_lvls = [], []
     for lvl in range(depth):
         n = 2 ** lvl
         onehot = (assign[:, None] == jnp.arange(n)[None, :]).astype(jnp.float32)
-        wy = w * y
         sw_n = onehot.T @ w                              # [n]
         swy_n = onehot.T @ wy
         # Left-branch stats per (node, feature, threshold).  Contract the M
@@ -169,7 +198,10 @@ def _fit_one_tree(y: jax.Array, w: jax.Array, points: jax.Array,
         n2 = 2 * n
         oh2 = (assign[:, None] == jnp.arange(n2)[None, :]).astype(jnp.float32)
         sw2 = oh2.T @ w
-        swy2_ = oh2.T @ wy
+        # One-hot masking (0/1 products are exact) + pinned fold keeps the
+        # child means bit-stable across compilation contexts; the matmul
+        # above may stay — its integer sums are exact in any order.
+        swy2_ = _pinned_sum0(oh2 * wy[:, None])
         parent = jnp.repeat(val, 2)
         val = jnp.where(sw2 > min_weight - 1e-9,
                         swy2_ / jnp.maximum(sw2, _EPS), parent)
@@ -242,9 +274,31 @@ def predict_forest(params: ForestParams, xq: jax.Array) -> jax.Array:
 
 
 def forest_mu_sigma(preds: jax.Array, sigma_floor) -> tuple[jax.Array, jax.Array]:
-    """Ensemble mean / spread from per-tree predictions [B, Q]."""
-    mu = jnp.mean(preds, axis=0)
-    sigma = jnp.std(preds, axis=0)
+    """Ensemble mean / spread from per-tree predictions [B, Q].
+
+    The tree axis is reduced with an explicitly left-associated add chain
+    rather than ``jnp.mean``/``jnp.std``: XLA's ``reduce`` leaves the
+    accumulation order unspecified, so the same forest could yield
+    last-ulp-different mu/sigma depending on what the reduction fuses
+    with.  Each squared deviation is fenced (``acquisition.no_contract``)
+    so the backend cannot contract ``acc + d*d`` into an FMA in one
+    compile context but not another.  Pinning both keeps the unfused
+    selector and the fused Pallas kernel (kernels/select_step)
+    bit-identical.
+    """
+    n = preds.shape[0]
+    acc = preds[0]
+    for i in range(1, n):
+        acc = acc + preds[i]
+    mu = acc / n
+
+    def _sq(d):
+        return _no_contract(d * d)
+
+    acc2 = _sq(preds[0] - mu)
+    for i in range(1, n):
+        acc2 = acc2 + _sq(preds[i] - mu)
+    sigma = jnp.sqrt(acc2 / n)
     return mu, jnp.maximum(sigma, sigma_floor)
 
 

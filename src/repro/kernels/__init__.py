@@ -5,6 +5,12 @@
   ssm_scan         — chunked SSD / gated linear recurrence (Mamba2, mLSTM)
   tree_predict     — Lynceus forest mu/sigma via one-hot-matmul descent
   gh_ei            — fused constrained-EI + Gauss-Hermite expansion
+  select_step      — fused selector step: ensemble descent -> EI_c/Gamma ->
+                     quantized in-kernel argmax (the core selector hot path)
+
+Dispatch (``kernels/dispatch.py``): every op's ``force=None`` auto mode
+picks Pallas on TPU/GPU and the pure-jnp ref elsewhere, logging once per
+op when it degrades.
 """
 
 from repro.kernels.flash_attention.ops import flash_attention
@@ -12,6 +18,8 @@ from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.ssm_scan.ops import ssm_scan
 from repro.kernels.tree_predict.ops import tree_predict
 from repro.kernels.gh_ei.ops import gh_ei
+from repro.kernels.select_step.ops import select_step
+from repro.kernels.dispatch import resolve_mode
 
 __all__ = ["flash_attention", "decode_attention", "ssm_scan", "tree_predict",
-           "gh_ei"]
+           "gh_ei", "select_step", "resolve_mode"]

@@ -8,6 +8,7 @@ import jax
 
 from repro.kernels.decode_attention.kernel import decode_attention_call
 from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.dispatch import resolve_mode
 
 __all__ = ["decode_attention"]
 
@@ -15,9 +16,7 @@ __all__ = ["decode_attention"]
 @functools.partial(jax.jit, static_argnames=("scale", "window", "bk", "force"))
 def decode_attention(q, k, v, pos, *, scale=None, window=None, bk=1024,
                      force: str | None = None):
-    mode = force
-    if mode is None:
-        mode = "pallas" if jax.default_backend() == "tpu" else "ref"
+    mode = resolve_mode(force, op="decode_attention")
     if mode == "ref":
         return decode_attention_ref(q, k, v, pos, scale=scale, window=window)
     return decode_attention_call(q, k, v, pos, scale=scale, window=window,

@@ -1,0 +1,54 @@
+"""Shared kernel-dispatch policy for every op under ``repro.kernels``.
+
+Every ``kernels/*/ops.py`` wrapper takes a ``force`` argument: ``None``
+(auto), ``"pallas"``, ``"interpret"``, or ``"ref"``.  Auto used to be
+copy-pasted five times as ``"pallas" if backend == "tpu" else "ref"`` —
+which silently dropped GPU down to the pure-jnp reference path and never
+told anyone.  :func:`resolve_mode` is the single source of truth: Pallas
+on TPU *and* GPU, ``ref`` elsewhere, with a once-per-op log line when the
+auto policy degrades so a CPU/CI run states plainly that it is timing the
+reference implementation.
+"""
+
+from __future__ import annotations
+
+import logging
+
+import jax
+
+__all__ = ["ACCEL_BACKENDS", "MODES", "resolve_mode"]
+
+log = logging.getLogger("repro.kernels")
+
+# Backends where the Pallas lowering is expected to work and win.
+ACCEL_BACKENDS = ("tpu", "gpu")
+
+MODES = ("pallas", "interpret", "ref")
+
+# Ops that already logged an auto-degrade (log once per op per process).
+_degraded_logged: set[str] = set()
+
+
+def resolve_mode(force: str | None = None, *, op: str = "") -> str:
+    """Resolve a kernel execution mode from ``force`` and the backend.
+
+    ``force`` wins when given (validated against :data:`MODES`).  When
+    ``None``, picks ``"pallas"`` on accelerator backends (TPU/GPU) and
+    degrades to ``"ref"`` everywhere else, logging the degrade once per
+    ``op`` so the fallback is never silent.
+    """
+    if force is not None:
+        if force not in MODES:
+            raise ValueError(
+                f"force={force!r} for op {op or '<unnamed>'!r}: "
+                f"expected one of {MODES} or None")
+        return force
+    backend = jax.default_backend()
+    if backend in ACCEL_BACKENDS:
+        return "pallas"
+    if op not in _degraded_logged:
+        _degraded_logged.add(op)
+        log.info("kernel op %r: no accelerator (backend=%s) — "
+                 "degrading to the pure-jnp ref path",
+                 op or "<unnamed>", backend)
+    return "ref"

@@ -1,4 +1,4 @@
-"""jit'd public wrapper: picks the Pallas kernel on TPU, oracle elsewhere."""
+"""jit'd public wrapper: picks the Pallas kernel on TPU/GPU, oracle elsewhere."""
 
 from __future__ import annotations
 
@@ -6,6 +6,7 @@ import functools
 
 import jax
 
+from repro.kernels.dispatch import resolve_mode
 from repro.kernels.flash_attention.kernel import flash_attention_call
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -17,9 +18,7 @@ __all__ = ["flash_attention"]
 def flash_attention(q, k, v, *, scale=None, causal=True, window=None,
                     softcap=None, bq=128, bk=512, force: str | None = None):
     """Dispatch: 'pallas' | 'interpret' | 'ref' | None (auto by backend)."""
-    mode = force
-    if mode is None:
-        mode = "pallas" if jax.default_backend() == "tpu" else "ref"
+    mode = resolve_mode(force, op="flash_attention")
     if mode == "ref":
         return attention_ref(q, k, v, scale=scale, causal=causal,
                              window=window, softcap=softcap)

@@ -7,6 +7,7 @@ import functools
 import jax
 
 from repro.core import acquisition as acq
+from repro.kernels.dispatch import resolve_mode
 from repro.kernels.gh_ei.kernel import gh_ei_call
 from repro.kernels.gh_ei.ref import gh_ei_ref
 
@@ -29,9 +30,7 @@ def gh_ei(mu, sigma, u, y_star, t_max, beta, xi, *, cens=None, y_cens=None,
     if cens is not None:
         mu, sigma = acq.censored_adjust(mu, sigma, y_cens, cens,
                                         cens_sigma_rel)
-    mode = force
-    if mode is None:
-        mode = "pallas" if jax.default_backend() == "tpu" else "ref"
+    mode = resolve_mode(force, op="gh_ei")
     if mode == "ref":
         return gh_ei_ref(mu, sigma, u, y_star, t_max, beta, xi, conf=conf)
     return gh_ei_call(mu, sigma, u, y_star, t_max, beta, xi, conf=conf,

@@ -1,0 +1,263 @@
+"""Fused selector-step Pallas kernel — one pass per speculative-state block.
+
+The Lynceus selector's per-step hot path is, for every speculative state s
+of the lookahead frontier: traverse the bagged forest fit for s over all M
+candidate configs (``tree_predict``), turn the posterior into constrained
+EI + budget filter + Gauss-Hermite cost nodes (``gh_ei``), and argmax the
+quantized masked scores.  Unfused, each stage round-trips its [S, M]
+intermediates through HBM.  This kernel keeps one state block's whole
+[bs, M] sweep in VMEM: one-hot-matmul ensemble descent (the
+``tree_predict`` idiom), the *exact* acquisition expressions from
+``repro.core.acquisition`` (called verbatim, so the primitive sequence is
+the unfused selector's), and the in-kernel argmax over
+``quantize_scores``-rounded integers.
+
+Bit-exactness contract (pinned by tests/test_kernels.py): with the forest
+params of ``trees.fit_forest``, the in-kernel traversal reproduces the
+fit-side leaf ``assign`` exactly — ``right = x > thr`` with the stored
+threshold value is the complement of the fit's ``left`` table routing, and
+degenerate splits store ``thr = +inf`` (everything left) in both.  One-hot
+sums gather single finite values (exact), and mean/std/erf are evaluated
+by the same jnp calls the unfused program traces.
+
+Geometry-bucket padding lanes arrive via ``valid`` and are masked out of
+the untested set and the incumbent fallback before their ``-inf`` scores
+enter the quantized argmax — the PR 5 mask semantics, consumed natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import acquisition as acq
+from repro.core import trees
+
+__all__ = ["select_step_call"]
+
+# Same ratio-score guard as lookahead._EPS (the la0/lynceus cost divisor).
+_EPS = 1e-9
+
+
+def _kernel(*refs, n_trees, depth, width, n_leaves, n_feat, m_dim, conf,
+            cens_rel, score_mode, use_budget, emit_full, want_nodes,
+            has_cens, has_valid):
+    it = iter(refs)
+    scal_ref = next(it)
+    feat_ref = next(it)
+    thr_ref = next(it)
+    leaf_ref = next(it)
+    y_ref = next(it)
+    obs_ref = next(it)
+    beta_ref = next(it)
+    bf_ref = next(it)
+    cens_ref = next(it) if has_cens else None
+    points_ref = next(it)
+    u_ref = next(it)
+    valid_ref = next(it) if has_valid else None
+    xi_ref = next(it) if want_nodes else None
+    outs = list(it)
+
+    t_max = scal_ref[0]
+    floor = scal_ref[1]
+    x = points_ref[...]                                  # [M, F]
+    y = y_ref[...]                                       # [bs, M]
+    obs = obs_ref[...]                                   # [bs, M] bool
+    beta = beta_ref[...]                                 # [bs]
+    bf = bf_ref[...]                                     # [bs]
+    u = u_ref[...]                                       # [M]
+    bs = y.shape[0]
+
+    # Ensemble descent, batched over the state block: per (tree, level) a
+    # one-hot feature matmul yields every node's candidate value for all M
+    # points at once; the current position selects its column (VPU select)
+    # and doubles per level.  ``right = val > thr`` replays the fit-side
+    # left-table routing exactly (+inf threshold => degenerate => left).
+    preds = []
+    for b in range(n_trees):
+        pos = jnp.zeros((bs, m_dim), jnp.int32)
+        for lvl in range(depth):
+            feat_l = feat_ref[:, b, lvl]                 # [bs, W] int32
+            thr_l = thr_ref[:, b, lvl]                   # [bs, W] f32
+            onehot = (jax.lax.broadcasted_iota(
+                jnp.int32, (bs, n_feat, width), 1)
+                == feat_l[:, None, :]).astype(jnp.float32)
+            vals = jax.lax.dot_general(
+                x, onehot, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)      # [M, bs, W]
+            vals = vals.transpose(1, 0, 2)               # [bs, M, W]
+            sel_w = (jax.lax.broadcasted_iota(
+                jnp.int32, (bs, m_dim, width), 2) == pos[:, :, None])
+            val = jnp.sum(jnp.where(sel_w, vals, 0.0), axis=2)
+            th = jnp.sum(jnp.where(sel_w, thr_l[:, None, :], 0.0), axis=2)
+            right = val > th
+            pos = 2 * pos + right.astype(jnp.int32)
+        leaf_b = leaf_ref[:, b]                          # [bs, L]
+        lsel = (jax.lax.broadcasted_iota(
+            jnp.int32, (bs, m_dim, n_leaves), 2) == pos[:, :, None])
+        preds.append(jnp.sum(jnp.where(lsel, leaf_b[:, None, :], 0.0),
+                             axis=2))                    # [bs, M]
+    preds = jnp.stack(preds)                             # [B, bs, M]
+
+    mu, sigma = trees.forest_mu_sigma(preds, floor)
+    if has_cens:
+        mu, sigma = acq.censored_adjust(mu, sigma, y, cens_ref[...],
+                                        cens_rel)
+    valid = valid_ref[...] if has_valid else None
+    ystar = acq.incumbent_fallback(bf, y, obs, sigma, valid)
+    eic = acq.ei_constrained(mu, sigma, ystar[:, None], u[None, :], t_max)
+    untested = ~obs
+    if has_valid:
+        untested = untested & valid
+    cand = untested
+    if use_budget:
+        cand = cand & acq.budget_ok(mu, sigma, beta[:, None], conf)
+    raw = eic if score_mode == "eic" else eic / jnp.maximum(mu, _EPS)
+    score = acq.quantize_scores(jnp.where(cand, raw, -jnp.inf))
+    sel = jnp.argmax(score, axis=1).astype(jnp.int32)
+    has_cand = jnp.any(cand, axis=1)
+
+    if emit_full:
+        (mu_ref, sig_ref, eic_ref, ystar_ref, cand_ref, sel_ref,
+         has_ref) = outs[:7]
+        mu_ref[...] = mu
+        sig_ref[...] = sigma
+        eic_ref[...] = eic
+        ystar_ref[...] = ystar
+        cand_ref[...] = cand
+        sel_ref[...] = sel
+        has_ref[...] = has_cand
+        if want_nodes:
+            outs[7][...] = acq.gh_cost_nodes(mu, sigma, xi_ref[...])
+        return
+    sel_oh = (jax.lax.broadcasted_iota(jnp.int32, (bs, m_dim), 1)
+              == sel[:, None])
+    take = lambda a: jnp.sum(jnp.where(sel_oh, a, 0.0), axis=1)
+    eic_sel = take(eic)
+    mu_sel = take(mu)
+    sig_sel = take(sigma)
+    sel_ref, has_ref, eics_ref, mus_ref, sigs_ref = outs[:5]
+    sel_ref[...] = sel
+    has_ref[...] = has_cand
+    eics_ref[...] = eic_sel
+    mus_ref[...] = mu_sel
+    sigs_ref[...] = sig_sel
+    if want_nodes:
+        outs[5][...] = acq.gh_cost_nodes(mu_sel, sig_sel, xi_ref[...])
+
+
+def select_step_call(feat, thr, leaf, y, obs, beta, bf, points, u, t_max,
+                     floor, xi=None, cens=None, valid=None, *, conf=0.99,
+                     cens_rel=0.5, score_mode="eic", use_budget=True,
+                     emit_full=False, want_nodes=False, bs=32,
+                     interpret=False):
+    """Fused selector step over S speculative states.
+
+    feat/thr: [S, B, D, W]; leaf: [S, B, L]; y/obs[/cens]: [S, M];
+    beta/bf: [S]; points: [M, F]; u[/valid]: [M]; xi: [K] (required iff
+    ``want_nodes``); t_max/floor: scalars.  The grid tiles the state axis
+    in blocks of ``bs``; the whole [bs, M] candidate sweep of a block stays
+    in VMEM from ensemble descent to the quantized argmax.
+
+    Returns (all [:S] along the state axis):
+      ``emit_full=False`` — (sel i32, has_cand bool, eic_sel, mu_sel,
+      sig_sel[, nodes [S, K]]): each state's own argmax pick (the lookahead
+      recursion contract of ``lookahead._recurse``).
+      ``emit_full=True`` — (mu, sigma, eic [S, M], ystar [S], cand [S, M]
+      bool, sel [S], has_cand [S][, nodes [S, M, K]]): the root contract,
+      where diagnostics and the policy layer need the full sweep.
+    """
+    s_dim, n_trees, depth, width = feat.shape
+    n_leaves = leaf.shape[-1]
+    m_dim, n_feat = points.shape
+    if want_nodes and xi is None:
+        raise ValueError("want_nodes=True requires xi")
+    bs = min(bs, s_dim)
+    pad = (-s_dim) % bs
+    pad_s = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    if pad:
+        feat, thr, leaf, y, obs, beta, bf = map(
+            pad_s, (feat, thr, leaf, y, obs, beta, bf))
+        if cens is not None:
+            cens = pad_s(cens)
+    sp = s_dim + pad
+
+    scal = jnp.stack([jnp.asarray(t_max, jnp.float32),
+                      jnp.asarray(floor, jnp.float32)])
+    has_cens = cens is not None
+    has_valid = valid is not None
+
+    operands = [scal, feat.astype(jnp.int32), thr.astype(jnp.float32),
+                leaf.astype(jnp.float32), y.astype(jnp.float32),
+                obs.astype(bool), beta.astype(jnp.float32),
+                bf.astype(jnp.float32)]
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((bs, n_trees, depth, width), lambda i: (i, 0, 0, 0)),
+        pl.BlockSpec((bs, n_trees, depth, width), lambda i: (i, 0, 0, 0)),
+        pl.BlockSpec((bs, n_trees, n_leaves), lambda i: (i, 0, 0)),
+        pl.BlockSpec((bs, m_dim), lambda i: (i, 0)),
+        pl.BlockSpec((bs, m_dim), lambda i: (i, 0)),
+        pl.BlockSpec((bs,), lambda i: (i,)),
+        pl.BlockSpec((bs,), lambda i: (i,)),
+    ]
+    if has_cens:
+        operands.append(cens.astype(bool))
+        in_specs.append(pl.BlockSpec((bs, m_dim), lambda i: (i, 0)))
+    operands += [points.astype(jnp.float32), u.astype(jnp.float32)]
+    in_specs += [pl.BlockSpec((m_dim, n_feat), lambda i: (0, 0)),
+                 pl.BlockSpec((m_dim,), lambda i: (0,))]
+    if has_valid:
+        operands.append(valid.astype(bool))
+        in_specs.append(pl.BlockSpec((m_dim,), lambda i: (0,)))
+    if want_nodes:
+        k_gh = xi.shape[0]
+        operands.append(xi.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((k_gh,), lambda i: (0,)))
+
+    blk = lambda *tail: pl.BlockSpec((bs,) + tail,
+                                     lambda i: (i,) + (0,) * len(tail))
+    if emit_full:
+        out_specs = [blk(m_dim), blk(m_dim), blk(m_dim), blk(),
+                     blk(m_dim), blk(), blk()]
+        out_shape = [jax.ShapeDtypeStruct((sp, m_dim), jnp.float32),
+                     jax.ShapeDtypeStruct((sp, m_dim), jnp.float32),
+                     jax.ShapeDtypeStruct((sp, m_dim), jnp.float32),
+                     jax.ShapeDtypeStruct((sp,), jnp.float32),
+                     jax.ShapeDtypeStruct((sp, m_dim), jnp.bool_),
+                     jax.ShapeDtypeStruct((sp,), jnp.int32),
+                     jax.ShapeDtypeStruct((sp,), jnp.bool_)]
+        if want_nodes:
+            out_specs.append(blk(m_dim, k_gh))
+            out_shape.append(
+                jax.ShapeDtypeStruct((sp, m_dim, k_gh), jnp.float32))
+    else:
+        out_specs = [blk(), blk(), blk(), blk(), blk()]
+        out_shape = [jax.ShapeDtypeStruct((sp,), jnp.int32),
+                     jax.ShapeDtypeStruct((sp,), jnp.bool_),
+                     jax.ShapeDtypeStruct((sp,), jnp.float32),
+                     jax.ShapeDtypeStruct((sp,), jnp.float32),
+                     jax.ShapeDtypeStruct((sp,), jnp.float32)]
+        if want_nodes:
+            out_specs.append(blk(k_gh))
+            out_shape.append(jax.ShapeDtypeStruct((sp, k_gh), jnp.float32))
+
+    kernel = functools.partial(
+        _kernel, n_trees=n_trees, depth=depth, width=width,
+        n_leaves=n_leaves, n_feat=n_feat, m_dim=m_dim, conf=conf,
+        cens_rel=cens_rel, score_mode=score_mode, use_budget=use_budget,
+        emit_full=emit_full, want_nodes=want_nodes, has_cens=has_cens,
+        has_valid=has_valid)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(sp // bs,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    return tuple(o[:s_dim] for o in outs)

@@ -1,0 +1,34 @@
+"""jit'd wrapper for the fused selector step."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.dispatch import resolve_mode
+from repro.kernels.select_step.kernel import select_step_call
+from repro.kernels.select_step.ref import select_step_ref
+
+__all__ = ["select_step"]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "conf", "cens_rel", "score_mode", "use_budget", "emit_full",
+    "want_nodes", "bs", "force"))
+def select_step(feat, thr, leaf, y, obs, beta, bf, points, u, t_max, floor,
+                xi=None, cens=None, valid=None, *, conf=0.99, cens_rel=0.5,
+                score_mode="eic", use_budget=True, emit_full=False,
+                want_nodes=False, bs=32, force: str | None = None):
+    mode = resolve_mode(force, op="select_step")
+    if mode == "ref":
+        return select_step_ref(
+            feat, thr, leaf, y, obs, beta, bf, points, u, t_max, floor, xi,
+            cens, valid, conf=conf, cens_rel=cens_rel, score_mode=score_mode,
+            use_budget=use_budget, emit_full=emit_full,
+            want_nodes=want_nodes)
+    return select_step_call(
+        feat, thr, leaf, y, obs, beta, bf, points, u, t_max, floor, xi,
+        cens, valid, conf=conf, cens_rel=cens_rel, score_mode=score_mode,
+        use_budget=use_budget, emit_full=emit_full, want_nodes=want_nodes,
+        bs=bs, interpret=(mode == "interpret"))

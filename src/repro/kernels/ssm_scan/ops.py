@@ -6,6 +6,7 @@ import functools
 
 import jax
 
+from repro.kernels.dispatch import resolve_mode
 from repro.kernels.ssm_scan.kernel import ssm_scan_call
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
 
@@ -14,9 +15,7 @@ __all__ = ["ssm_scan"]
 
 @functools.partial(jax.jit, static_argnames=("chunk", "force"))
 def ssm_scan(k, v, q, log_decay, gate, *, chunk=256, force: str | None = None):
-    mode = force
-    if mode is None:
-        mode = "pallas" if jax.default_backend() == "tpu" else "ref"
+    mode = resolve_mode(force, op="ssm_scan")
     if mode == "ref":
         return ssm_scan_ref(k, v, q, log_decay, gate, chunk=chunk)
     return ssm_scan_call(k, v, q, log_decay, gate, chunk=chunk,

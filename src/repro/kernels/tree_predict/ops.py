@@ -6,6 +6,7 @@ import functools
 
 import jax
 
+from repro.kernels.dispatch import resolve_mode
 from repro.kernels.tree_predict.kernel import tree_predict_call
 from repro.kernels.tree_predict.ref import tree_predict_ref
 
@@ -15,9 +16,7 @@ __all__ = ["tree_predict"]
 @functools.partial(jax.jit, static_argnames=("sigma_floor", "bm", "force"))
 def tree_predict(x, feat, thr, leaf, *, sigma_floor=1e-6, bm=256,
                  force: str | None = None):
-    mode = force
-    if mode is None:
-        mode = "pallas" if jax.default_backend() == "tpu" else "ref"
+    mode = resolve_mode(force, op="tree_predict")
     if mode == "ref":
         return tree_predict_ref(x, feat, thr, leaf, sigma_floor=sigma_floor)
     return tree_predict_call(x, feat, thr, leaf, sigma_floor=sigma_floor,

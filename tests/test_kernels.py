@@ -172,3 +172,121 @@ def test_ssm_scan_sweep(b, l, h, n, p, chunk, dtype):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=(5e-2 if dtype == jnp.bfloat16 else 1e-4),
                                rtol=5e-2)
+
+
+# --------------------------------------------------------------------------- #
+# Shared dispatch policy (kernels/dispatch.py)
+# --------------------------------------------------------------------------- #
+_DISPATCHED_OPS = ("flash_attention", "decode_attention", "ssm_scan",
+                   "tree_predict", "gh_ei", "select_step")
+
+
+def test_dispatch_decision_identical_across_ops(monkeypatch):
+    """One auto policy for every op: Pallas on TPU *and* GPU, ref elsewhere
+    — no per-op drift back to the old copy-pasted TPU-only force blocks."""
+    from repro.kernels import dispatch
+    for backend, want in [("tpu", "pallas"), ("gpu", "pallas"),
+                          ("cpu", "ref"), ("METAL", "ref")]:
+        monkeypatch.setattr(dispatch.jax, "default_backend",
+                            lambda b=backend: b)
+        monkeypatch.setattr(dispatch, "_degraded_logged", set())
+        decisions = {op: dispatch.resolve_mode(None, op=op)
+                     for op in _DISPATCHED_OPS}
+        assert set(decisions.values()) == {want}, (backend, decisions)
+    for mode in dispatch.MODES:            # force always wins
+        assert dispatch.resolve_mode(mode, op="x") == mode
+    with pytest.raises(ValueError, match="force"):
+        dispatch.resolve_mode("cuda", op="x")
+
+
+def test_dispatch_logs_degrade_once_per_op(monkeypatch, caplog):
+    import logging
+    from repro.kernels import dispatch
+    monkeypatch.setattr(dispatch.jax, "default_backend", lambda: "cpu")
+    monkeypatch.setattr(dispatch, "_degraded_logged", set())
+    with caplog.at_level(logging.INFO, logger="repro.kernels"):
+        for _ in range(3):
+            dispatch.resolve_mode(None, op="gh_ei")
+        dispatch.resolve_mode(None, op="tree_predict")
+    degrades = [r for r in caplog.records if "degrading" in r.message]
+    assert len(degrades) == 2              # once per op, not per call
+
+
+# --------------------------------------------------------------------------- #
+# Fused selector step vs the unfused program: bit parity incl. diagnostics
+# --------------------------------------------------------------------------- #
+def _selector_job(seed=0):
+    from repro.jobs.tables import JobTable
+    rng = np.random.default_rng(seed)
+    space = DiscreteSpace.from_grid({"a": list(range(5)),
+                                     "b": list(range(3))})
+    runtime = rng.uniform(0.1, 1.0, space.n_points)
+    price = rng.uniform(0.5, 2.0, space.n_points)
+    return JobTable("j", space, runtime, price,
+                    t_max=float(np.median(runtime)))
+
+
+def _selector_obs(job, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(job.space.n_points, n, replace=False)
+    y = np.zeros(job.space.n_points, np.float32)
+    mask = np.zeros(job.space.n_points, bool)
+    y[idx] = job.cost[idx]
+    mask[idx] = True
+    cens = np.zeros(job.space.n_points, bool)
+    cens[idx[0]] = True
+    return y, mask, cens
+
+
+def _run_selector(job, space, s, y, mask, cens, beta, key):
+    """Run the bound selector on ``space`` (native or padded); returns
+    (idx, valid, diagnostics as numpy) restricted to native lanes."""
+    from repro.core import make_selector
+    m = space.n_points
+    native = job.space.n_points
+    u = np.zeros(m, np.float32)
+    u[:native] = job.unit_price
+    yp = np.zeros(m, np.float32)
+    yp[:native] = y
+    mp = np.zeros(m, bool)
+    mp[:native] = mask
+    cp = None
+    if cens is not None:
+        cp = np.zeros(m, bool)
+        cp[:native] = cens
+    sel = make_selector(space, u, job.t_max, s)
+    idx, valid, diag = sel(key, yp, mp, beta, cens=cp)
+    trim = lambda a: (np.asarray(a)[:native] if np.ndim(a) >= 1
+                      else np.asarray(a))
+    return int(idx), bool(valid), {k: trim(v) for k, v in diag.items()}
+
+
+@pytest.mark.parametrize("policy,la", [("bo", 0), ("la0", 0), ("lynceus", 1)])
+@pytest.mark.parametrize("timeout", [False, True])
+@pytest.mark.parametrize("padded", [False, True])
+def test_fused_selector_bit_parity(policy, la, timeout, padded):
+    """The fused kernel program must replay the unfused selector bit for bit
+    — decision, valid flag, and every diagnostic (incl. the billed timeout
+    cap) — on native and geometry-bucket-padded spaces alike."""
+    from repro.core import Settings
+    from repro.core.space import GeometryBucket
+    job = _selector_job(3)
+    y, mask, cens = _selector_obs(job, seed=3)
+    cens = cens if timeout else None
+    space = (job.space.pad_to(GeometryBucket(m=32, f=3, t=6))
+             if padded else job.space)
+    beta = job.budget(3.0)
+    key = jax.random.PRNGKey(7)
+    out = {}
+    for mode in ("ref", "interpret"):
+        s = Settings(policy=policy, la=la, k_gh=2, n_trees=3, depth=3,
+                     timeout=timeout, fused_selector=mode)
+        out[mode] = _run_selector(job, space, s, y, mask, cens, beta, key)
+    (ia, va, da), (ib, vb, db) = out["ref"], out["interpret"]
+    assert (ia, va) == (ib, vb)
+    assert sorted(da) == sorted(db)
+    if timeout:
+        assert "timeout" in da
+    for k in da:
+        np.testing.assert_array_equal(da[k], db[k], err_msg=k)
+        assert da[k].tobytes() == db[k].tobytes(), k   # bitwise, not just ==

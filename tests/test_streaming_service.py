@@ -291,3 +291,24 @@ def test_bootstrap_prefix_respected():
     out = t.result()
     boot = tuple(int(i) for i in req.resolved_bootstrap())
     assert out.explored[:len(boot)] == boot
+
+
+@pytest.mark.parametrize("timeout", [False, True])
+def test_mixed_geometry_streaming_fused_selector(timeout):
+    """The fused-selector acceptance pin, streamed: the same mixed-geometry
+    fleet driven through the service with the Pallas-fused selector
+    (interpret mode, exact refit) resolves every ticket bit-identically to
+    the *unfused* sequential oracle — spend trajectories and censored sets
+    included.  Fusion must be invisible to the spend ledger."""
+    jobs = _distinct_geometry_jobs()
+    base = dict(policy="lynceus", la=1, k_gh=2, n_trees=3, depth=3,
+                refit="exact", timeout=timeout)
+    reqs = [RunRequest(jobs[r % 3], seed=800 + r,
+                       budget_b=4.0 if r % 3 == 0 else 1.5)
+            for r in range(7)]
+    seq = run_queue(reqs, Settings(fused_selector="ref", **base))
+    outs = _stream(jobs, Settings(fused_selector="interpret", **base),
+                   reqs, [[3, 0, 6], [2, 5], [1, 4]],
+                   ServiceConfig(lane_slots=2, queue_capacity=3,
+                                 step_quota=5))
+    _assert_outcomes_equal(seq, outs)
