@@ -28,6 +28,15 @@ A fourth section gates the **fused selector step** (ISSUE-7): steps/sec
 with ``fused_selector="pallas"`` must be >= 1.3x the unfused ref path on
 the same streamed trace.  Where no accelerator exists the gate is skipped
 with a reason and an interpret-mode outcome-parity check runs instead.
+
+A fifth section drives the **full request lifecycle** (ISSUE-8) under
+queue pressure: a low-priority long-budget run is preempted by a burst of
+better-priority arrivals past the high-water mark, resumed, and runs to
+completion alongside cancellations of both unseated and seated tickets.
+The gates are *correctness*, not timing: zero drift vs the sequential
+oracle for every surviving run (the preempted-then-resumed one included,
+``spend_trajectory`` and all), preemption/resume/cancel counters all
+exercised and balanced, and no leaked lane slots.
 """
 
 from __future__ import annotations
@@ -193,6 +202,82 @@ def fused_selector_section(quick, out):
     csv_line("streaming", "fused_speedup_ge_1.3x", speedup >= 1.3)
 
 
+def lifecycle_section(quick, out):
+    """Preemption-under-pressure lifecycle trace (ISSUE-8).  One lane,
+    high_water=0: a low-priority long-budget victim is seated first, a
+    burst of better-priority arrivals preempts it at the next segment
+    boundary, and it later resumes from its banked carry rows.  One
+    unseated ticket and (when timing allows) one seated ticket are
+    cancelled along the way.  Gates are correctness-only: every surviving
+    run bit-matches the sequential oracle, the lifecycle counters are
+    exercised and balance, and no lane slot leaks."""
+    from repro.service import TicketCancelled
+
+    jobs = [synthetic_job(70 + k, n_a=6, n_b=5) for k in range(2)]
+    s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
+    n_rest = 2 if quick else 3
+    reqs = [RunRequest(jobs[r % len(jobs)], seed=71001 + r,
+                       budget_b=LONG_B if r == 0 else SHORT_B)
+            for r in range(3 + n_rest)]
+    oracle = run_queue(reqs, s)
+
+    cfg = ServiceConfig(lane_slots=1, queue_capacity=3, step_quota=3,
+                        high_water=0)
+    svc = StreamingTuner(jobs, s, cfg)
+    t0 = time.perf_counter()
+    victim = svc.submit(reqs[0], priority=5)      # long budget, low priority
+    svc.pump()                                    # seats the victim
+    unseen = svc.submit(reqs[1])
+    unseen.cancel()                               # tombstoned before seating
+    rest = [svc.submit(q) for q in reqs[2:2 + n_rest]]   # preempts the victim
+    svc.pump()
+    seated = svc.submit(reqs[2 + n_rest])
+    svc.pump()
+    seated_cancel = any(t is seated
+                        for t in svc._engine._slot_tickets)
+    if seated_cancel:
+        seated.cancel()                           # evicted at next boundary
+    svc.drain()
+    wall = time.perf_counter() - t0
+
+    drift = sum(not outcomes_equal(o, t.result())
+                for o, t in [(oracle[0], victim)]
+                + list(zip(oracle[2:2 + n_rest], rest)))
+    bad = 0
+    for t, o in ((unseen, oracle[1]), (seated, oracle[2 + n_rest])):
+        if not t.done():
+            bad += 1
+        elif t.state == "cancelled":
+            try:
+                t.result()
+                bad += 1
+            except TicketCancelled:
+                pass
+        elif not outcomes_equal(o, t.result()):
+            drift += 1
+    m = svc.metrics()
+    balanced = (m.submitted == m.resolved + m.cancelled
+                and m.outstanding == 0)
+    exercised = (m.preempted >= 1 and m.resumed >= 1 and m.cancelled >= 1
+                 and victim.preemptions >= 1)
+    leaks = svc._engine.in_flight()
+    out["lifecycle"] = {
+        "requests": len(reqs), "seconds": wall,
+        "preempted": m.preempted, "resumed": m.resumed,
+        "cancelled": m.cancelled, "victim_preemptions": victim.preemptions,
+        "seated_cancel_exercised": seated_cancel,
+        "drifting_runs": drift, "resolution_failures": bad,
+        "counters_balanced": balanced, "slot_leaks": leaks,
+    }
+    csv_line("streaming", "lifecycle_drifting_runs", drift)
+    csv_line("streaming", "lifecycle_preempted", m.preempted)
+    csv_line("streaming", "lifecycle_resumed", m.resumed)
+    csv_line("streaming", "lifecycle_cancelled", m.cancelled)
+    csv_line("streaming", "lifecycle_counters_balanced", balanced)
+    csv_line("streaming", "lifecycle_exercised", exercised)
+    csv_line("streaming", "lifecycle_slot_leaks", leaks)
+
+
 def main(n_runs=20, quick=False):
     jobs = [synthetic_job(30 + k, **SPACE) for k in range(2)]
     s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
@@ -245,4 +330,5 @@ def main(n_runs=20, quick=False):
     csv_line("streaming", "speedup_ge_1.5x", speedup >= 1.5)
     mixed_geometry_stream(n_bursts=4 if quick else 6, out=out)
     fused_selector_section(quick, out)
+    lifecycle_section(quick, out)
     write_json("streaming", out)

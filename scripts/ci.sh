@@ -22,10 +22,13 @@ python -m pytest -q
 
 # The property suites must also pass on the no-hypothesis fallback path
 # (tests/_hypothesis_fallback.py) — network-less CI boxes have no
-# hypothesis, and both code paths have to stay green.
-REPRO_NO_HYPOTHESIS=1 python -m pytest -q \
+# hypothesis, and both code paths have to stay green.  The lifecycle
+# fuzzer runs a bounded-example profile here (3 schedules per drawn
+# example vs the >=200-schedule local default) so the gate stays cheap.
+REPRO_NO_HYPOTHESIS=1 REPRO_FUZZ_SCHEDULES=3 python -m pytest -q \
     tests/test_censored_properties.py tests/test_xla_wobble_regression.py \
-    tests/test_core_acquisition.py tests/test_padded_space.py
+    tests/test_core_acquisition.py tests/test_padded_space.py \
+    tests/test_lifecycle_fuzz.py
 
 # Determinism-contract gate (hard): AST lint over src/repro, R1-R4 jaxpr
 # audit of every registered program, and the mutation self-check that

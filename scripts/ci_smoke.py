@@ -152,6 +152,57 @@ if compiles != 1 or sel_compiles != 0:
           "compile per bucket and 0 standalone selector compiles")
     failures += 1
 
+# Lifecycle smoke (timeout on, mixed geometry): cancellation of unseated
+# AND seated tickets plus a forced preemption+resume must leave every
+# surviving run oracle-exact, resolve every cancelled ticket with a
+# well-formed partial, leak no slots, and balance the counters.
+from repro.service import TicketCancelled
+lc_cfg = ServiceConfig(lane_slots=1, queue_capacity=3, step_quota=3,
+                       high_water=0)
+svc = StreamingTuner(geo_jobs, s, lc_cfg)
+bad = 0
+t_pre = svc.submit(geo_reqs[0], priority=5)      # long budget, low priority
+svc.pump()                                       # seats it
+t_unseen = svc.submit(geo_reqs[1])
+t_unseen.cancel()                                # tombstoned before seating
+rest = [svc.submit(q) for q in geo_reqs[2:5]]    # better priority: preempts
+svc.pump()
+t_seated = svc.submit(geo_reqs[5])
+svc.pump()
+if any(t is t_seated for t in svc._engine._slot_tickets):
+    t_seated.cancel()                            # evicted at next boundary
+svc.drain()
+survivors = [(geo_seq[0], t_pre)] + \
+    [(o, t) for o, t in zip(geo_seq[2:5], rest)]
+bad += sum(not outcomes_equal(o, t.result()) for o, t in survivors)
+for t, o in ((t_unseen, geo_seq[1]), (t_seated, geo_seq[5])):
+    if not t.done() or t.state not in ("cancelled", "done"):
+        bad += 1
+    if t.state == "cancelled":
+        try:
+            t.result()
+            bad += 1
+        except TicketCancelled:
+            pass
+    elif not outcomes_equal(o, t.result()):
+        bad += 1
+m = svc.metrics()
+print(f"ci-smoke lifecycle: {bad} failures, preempted {m.preempted} "
+      f"resumed {m.resumed} cancelled {m.cancelled}")
+failures += bad
+if t_unseen.state != "cancelled":
+    print("ci-smoke lifecycle: unseated cancel did not stick")
+    failures += 1
+if m.preempted < 1 or m.resumed < 1 or t_pre.preemptions < 1:
+    print("ci-smoke lifecycle: preemption+resume not exercised")
+    failures += 1
+if svc._engine.in_flight() != 0:
+    print("ci-smoke lifecycle: slot leak")
+    failures += 1
+if m.submitted != m.resolved + m.cancelled or m.outstanding != 0:
+    print("ci-smoke lifecycle: counters do not balance")
+    failures += 1
+
 # Fused-selector parity smoke: the Pallas-fused selection step, run under
 # the interpreter (host-independent), must replay the unfused program's
 # whole run bit for bit — timeout censoring on and off.

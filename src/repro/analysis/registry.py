@@ -216,24 +216,30 @@ def _segment(bucketed: bool):
                  "beta": jnp.ones((c_dim,), jnp.float32),
                  "explored": jnp.full((c_dim, m), -1, jnp.int32),
                  "n_exp": jnp.zeros((c_dim,), jnp.int32)}
+        # The evict flag is part of the audited program: a traced [L] bool
+        # (service-layer cancellation/preemption banks flagged seats at the
+        # boundary) that must never introduce recompiles or new reductions.
+        evict = jnp.zeros((l_dim,), bool)
         if bucketed:
-            example = (carry, queue, jnp.int32(c_dim), valid)
+            example = (carry, queue, jnp.int32(c_dim), evict, valid)
 
-            def fn(carry_, queue_, qtail, valid_):
+            def fn(carry_, queue_, qtail, evict_, valid_):
                 return optimizer._episode_segment(
-                    carry_, queue_, qtail, np.int32(0), np.int32(4), job_ids,
-                    cost, runtime, pts, left, thr, valid_, u, t_max, s)
+                    carry_, queue_, qtail, evict_, np.int32(0), np.int32(4),
+                    job_ids, cost, runtime, pts, left, thr, valid_, u,
+                    t_max, s)
 
             sel = lambda p, leaf: _mask_select(p, leaf) or leaf is valid
             rules = default_rules(m=m,
                                   mask_argnums=flat_argnums(example, sel))
         else:
-            example = (carry, queue, jnp.int32(c_dim))
+            example = (carry, queue, jnp.int32(c_dim), evict)
 
-            def fn(carry_, queue_, qtail):
+            def fn(carry_, queue_, qtail, evict_):
                 return optimizer._episode_segment(
-                    carry_, queue_, qtail, np.int32(0), np.int32(4), job_ids,
-                    cost, runtime, pts, left, thr, valid, u, t_max, s)
+                    carry_, queue_, qtail, evict_, np.int32(0), np.int32(4),
+                    job_ids, cost, runtime, pts, left, thr, valid, u,
+                    t_max, s)
 
             rules = default_rules()
         return fn, example, rules

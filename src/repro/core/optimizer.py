@@ -658,9 +658,9 @@ def _seed_carry_from_queue(queue: dict, l_dim: int,
 
 
 @functools.partial(jax.jit, static_argnames=("s",))
-def _episode_segment(carry, queue, qtail, low_water, step_quota, job_ids,
-                     cost, runtime, points, left, thresholds, valid, u,
-                     t_max, s: lookahead.Settings):
+def _episode_segment(carry, queue, qtail, evict, low_water, step_quota,
+                     job_ids, cost, runtime, points, left, thresholds,
+                     valid, u, t_max, s: lookahead.Settings):
     """Advance ``l_dim`` lane *slots* through one bounded episode segment.
 
     One ``lax.while_loop``; each iteration selects for every slot at once
@@ -694,6 +694,19 @@ def _episode_segment(carry, queue, qtail, low_water, step_quota, job_ids,
     output row ``l_dim + j``; rows below ``l_dim`` are banking targets for
     runs already seated at segment start (the streaming broker re-keys
     in-flight runs to their slot index between segments).
+
+    ``evict`` is a traced [l_dim] bool "evict at boundary" flag (pass
+    all-False for the one-shot drain): before the first step, any seated
+    slot whose flag is set banks its *partial* run state into its
+    run-id-indexed output row — the exact buffers a finished run banks
+    into, with ``out_done`` left False so the caller can tell an evicted
+    run from a completed one — and the seat is freed for refill inside the
+    same segment.  The service layer uses this for cancellation of seated
+    runs (the banked row becomes the partial :class:`Outcome`) and for
+    preemption under queue pressure (the host snapshots the evicted slot's
+    carry rows into a resumable request; bootstrap replay makes resume
+    bit-identical to an uninterrupted run).  Because the flag is traced,
+    cancel/preempt decisions never recompile the segment program.
 
     ``job_ids`` is None for a single-job queue (``cost``/``runtime``/``u``
     are [M] rows and ``t_max`` a scalar, shared by every slot — the same
@@ -811,6 +824,26 @@ def _episode_segment(carry, queue, qtail, low_water, step_quota, job_ids,
     if s.timeout:
         st0["out_cexpl"] = jnp.zeros((n_out, m_dim), bool)
         st0["out_bexpl"] = jnp.zeros((n_out, m_dim), jnp.float32)
+
+    # Boundary eviction: bank flagged seats' partial state by run id
+    # (out_done stays False — these rows are partial, not completed) and
+    # free the seat before the loop so it refills like any drained slot.
+    kill = carry["active"] & evict
+    tgt0 = jnp.where(kill, jnp.maximum(carry["rid"], 0), n_out)
+    st0["out_beta"] = st0["out_beta"].at[tgt0].set(carry["beta"],
+                                                   mode="drop")
+    st0["out_nexp"] = st0["out_nexp"].at[tgt0].set(carry["n_exp"],
+                                                   mode="drop")
+    st0["out_expl"] = st0["out_expl"].at[tgt0].set(carry["explored"],
+                                                   mode="drop")
+    if s.timeout:
+        st0["out_cexpl"] = st0["out_cexpl"].at[tgt0].set(carry["cexpl"],
+                                                         mode="drop")
+        st0["out_bexpl"] = st0["out_bexpl"].at[tgt0].set(carry["bexpl"],
+                                                         mode="drop")
+    st0["active"] = carry["active"] & ~kill
+    st0["rid"] = jnp.where(kill, -1, carry["rid"])
+
     st = jax.lax.while_loop(cond, body, st0)
     report = {k: st.pop(k) for k in list(st)
               if k.startswith("out_") or k in ("steps", "busy")}
@@ -995,7 +1028,8 @@ def run_queue_batched(requests: list[RunRequest],
     # whole queue — the streaming service drives the same compiled body in
     # bounded slices instead (src/repro/service/).
     _, report = jax.block_until_ready(_episode_segment(
-        carry, qarrays, np.int32(r_tot), np.int32(0), _STEPS_UNBOUNDED,
+        carry, qarrays, np.int32(r_tot),
+        jnp.zeros((lane_slots,), bool), np.int32(0), _STEPS_UNBOUNDED,
         job_ids, cost_t, runtime_t if settings.timeout else None, points,
         left, thresholds, valid_t, u_t, tmax_t, settings))
     steps = int(report["steps"])

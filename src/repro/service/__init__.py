@@ -21,17 +21,31 @@ Layout:
 * ``metrics`` — :class:`ServiceMetrics`: throughput, lane occupancy, queue
   depth, per-request latency
 
+Request lifecycle (docs/ARCHITECTURE.md has the state diagram):
+``TuningTicket.cancel()`` drops unseated tickets at seating time and
+banks seated ones at the next segment boundary (resolving with
+``TicketCancelled`` + the partial Outcome); ``submit(deadline=...)``
+feeds deadline-aware admission (``DeadlineUnmeetable``) and SLO-miss
+accounting; under backlog pressure past ``ServiceConfig.high_water`` the
+broker preempts the lowest-priority seated run and re-queues it as a
+resumable request.
+
 Determinism contract: streamed outcomes are bit-identical to the
-sequential oracle — arrival order, priorities, and segment pacing decide
-*when* a run executes, never *what* it computes
-(``tests/test_streaming_service.py``; docs/ARCHITECTURE.md).
+sequential oracle — arrival order, priorities, segment pacing,
+cancellations of *other* runs, and even preemption+resume of the run
+itself decide *when* it executes, never *what* it computes
+(``tests/test_streaming_service.py``, ``tests/test_lifecycle_fuzz.py``;
+docs/ARCHITECTURE.md).
 """
 
-from repro.service.broker import QueueFull, StreamingTuner, TuningTicket
+from repro.service.broker import (DeadlineUnmeetable, QueueFull,
+                                  StreamingTuner, TicketCancelled,
+                                  TuningTicket)
 from repro.service.config import ServiceConfig
 from repro.service.engine import SegmentEngine, SegmentReport
 from repro.service.metrics import MetricsRecorder, ServiceMetrics
 
-__all__ = ["QueueFull", "ServiceConfig", "ServiceMetrics", "SegmentEngine",
-           "SegmentReport", "MetricsRecorder", "StreamingTuner",
+__all__ = ["DeadlineUnmeetable", "QueueFull", "ServiceConfig",
+           "ServiceMetrics", "SegmentEngine", "SegmentReport",
+           "MetricsRecorder", "StreamingTuner", "TicketCancelled",
            "TuningTicket"]

@@ -34,11 +34,32 @@ from repro.service.config import ServiceConfig
 from repro.service.engine import SegmentEngine, SegmentReport
 from repro.service.metrics import MetricsRecorder, ServiceMetrics
 
-__all__ = ["QueueFull", "StreamingTuner", "TuningTicket"]
+__all__ = ["DeadlineUnmeetable", "QueueFull", "StreamingTuner",
+           "TicketCancelled", "TuningTicket"]
 
 
 class QueueFull(RuntimeError):
     """Backpressure: ``max_pending`` outstanding requests already admitted."""
+
+
+class TicketCancelled(RuntimeError):
+    """Terminal state of a cancelled ticket — ``result()`` raises this.
+
+    ``partial`` carries the partial :class:`~repro.core.Outcome` banked
+    before the cancel took effect (what the run already paid for — spend
+    trajectory and censored observations included, paper §3 mechanism i),
+    or None when the run never held a seat.
+    """
+
+    def __init__(self, message: str, partial: Outcome | None = None):
+        super().__init__(message)
+        self.partial = partial
+
+
+class DeadlineUnmeetable(RuntimeError):
+    """Deadline-aware admission rejected a submit: the requested deadline
+    is below the fastest resolution this service has ever produced, so the
+    SLO is provably unmeetable (``ServiceConfig.deadline_policy``)."""
 
 
 class TuningTicket:
@@ -48,6 +69,13 @@ class TuningTicket:
     banked out of a segment (pumping inline when the service has no
     background worker).  Tickets compare by id, which is also the
     admission FIFO tie-break within a priority class.
+
+    Four terminal states, each with its own ``result()`` behaviour:
+    **done** returns the Outcome; **cancelled** raises
+    :class:`TicketCancelled` (carrying the partial Outcome, if any);
+    **failed** raises RuntimeError chained to the service failure;
+    unresolved-within-``timeout`` raises TimeoutError.  ``state`` exposes
+    which one holds without raising.
     """
 
     def __init__(self, tid: int, request: RunRequest, priority: int,
@@ -57,6 +85,8 @@ class TuningTicket:
         self.priority = priority
         self.submitted_at = time.perf_counter()
         self.resolved_at: float | None = None
+        self.deadline: float | None = None   # absolute perf_counter SLO
+        self.preemptions = 0                 # boundary evictions survived
         # Engine-managed: replayed bootstrap rows, budget B, job index.
         self.rows = None
         self.budget: float | None = None
@@ -65,29 +95,68 @@ class TuningTicket:
         self._event = threading.Event()
         self._outcome: Outcome | None = None
         self._error: BaseException | None = None
+        self._partial: Outcome | None = None
+        self._cancel_requested = False       # tombstone: drop at next seat
+        self._cancelled = False              # terminal, pump thread only
+        self._pending_resume = False         # preempted, awaiting reseat
 
     def done(self) -> bool:
         return self._event.is_set()
 
+    @property
+    def state(self) -> str:
+        """``"pending"`` / ``"done"`` / ``"cancelled"`` / ``"failed"``."""
+        if not self._event.is_set():
+            return "pending"
+        if self._cancelled:
+            return "cancelled"
+        if self._outcome is not None:
+            return "done"
+        return "failed"
+
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def cancel(self) -> bool:
+        """Request cancellation; returns False when the ticket already
+        resolved (an existing resolution always stands).
+
+        Unseated: the ticket is tombstoned and purged from the admission
+        heap / dropped at seating time — it never reaches a slot.  Seated:
+        the slot banks its partial state at the next segment boundary and
+        the ticket resolves with :class:`TicketCancelled` carrying the
+        partial :class:`~repro.core.Outcome`.  A run that completes in the
+        same segment the cancel raced with resolves ``done`` — check
+        ``state`` after the fact.  ``result()`` (or ``wait``) still
+        unblocks promptly either way.
+        """
+        return self._tuner._cancel(self)
+
+    def partial_outcome(self) -> Outcome | None:
+        """The partial Outcome banked before cancellation, or None."""
+        return self._partial
+
     def result(self, timeout: float | None = None) -> Outcome:
         if not self._event.is_set():
             self._tuner._wait_for(self, timeout)
+        if self._cancelled:
+            raise TicketCancelled(f"ticket {self.id} was cancelled",
+                                  partial=self._partial)
         if self._error is not None:
             raise RuntimeError("tuning service failed while this ticket "
                                "was outstanding") from self._error
-        if self._outcome is None:
-            if self._tuner._failure is not None:
-                raise RuntimeError("tuning service failed while this "
-                                   "ticket was outstanding") \
-                    from self._tuner._failure
-            raise TimeoutError(f"ticket {self.id} not resolved within "
-                               f"{timeout}s")
-        return self._outcome
+        if self._outcome is not None:
+            return self._outcome
+        if self._tuner._failure is not None:
+            raise RuntimeError("tuning service failed while this "
+                               "ticket was outstanding") \
+                from self._tuner._failure
+        raise TimeoutError(f"ticket {self.id} not resolved within "
+                           f"{timeout}s")
 
     def __repr__(self):
-        state = "done" if self.done() else "pending"
         return (f"TuningTicket(id={self.id}, job={self.request.job.name!r}, "
-                f"seed={self.request.seed}, {state})")
+                f"seed={self.request.seed}, {self.state})")
 
 
 class _AdmissionBuffer:
@@ -108,13 +177,25 @@ class _AdmissionBuffer:
         with self._lock:
             heapq.heappush(self._front, (ticket.priority, ticket.id, ticket))
 
-    def stage(self, k: int) -> list[TuningTicket]:
+    def stage(self, k: int, aging_rate: float = 0.0) -> list[TuningTicket]:
         """Move up to ``k`` highest-priority tickets to the caller.  Pump
-        thread only."""
+        thread only.
+
+        With ``aging_rate > 0`` the backlog is re-keyed by *effective*
+        priority ``priority - aging_rate * wait_seconds`` before popping,
+        so an old low-priority ticket eventually outranks fresh
+        high-priority traffic and cannot starve.  Aging reorders seating
+        only — it can never change an outcome (determinism contract).
+        """
         with self._lock:
             front, self._front = self._front, []
         if front:
             self._back.extend(front)
+            heapq.heapify(self._back)
+        if aging_rate > 0.0 and self._back:
+            now = time.perf_counter()
+            self._back = [(t.priority - aging_rate * (now - t.submitted_at),
+                           t.id, t) for _, _, t in self._back]
             heapq.heapify(self._back)
         out = [heapq.heappop(self._back)[2]
                for _ in range(min(k, len(self._back)))]
@@ -125,6 +206,20 @@ class _AdmissionBuffer:
         only."""
         for t in tickets:
             heapq.heappush(self._back, (t.priority, t.id, t))
+
+    def purge_cancelled(self) -> list[TuningTicket]:
+        """Drop tombstoned (cancel-requested) tickets from both heaps and
+        return them.  Pump thread only — the caller resolves each as
+        cancelled."""
+        with self._lock:
+            front, self._front = self._front, []
+        self._back.extend(front)
+        purged = [t for _, _, t in self._back if t._cancel_requested]
+        if purged:
+            self._back = [e for e in self._back
+                          if not e[2]._cancel_requested]
+        heapq.heapify(self._back)
+        return purged
 
     def __len__(self) -> int:
         with self._lock:
@@ -166,7 +261,8 @@ class StreamingTuner:
     def submit(self, request: RunRequest | None = None, *, job=None,
                seed: int | None = None, budget_b: float = 3.0,
                bootstrap=None, priority: int = 0, block: bool = True,
-               timeout: float | None = None) -> TuningTicket:
+               timeout: float | None = None,
+               deadline: float | None = None) -> TuningTicket:
         """Admit one tuning run; returns its :class:`TuningTicket` future.
 
         Pass a prebuilt :class:`RunRequest`, or its fields (``job``,
@@ -177,6 +273,14 @@ class StreamingTuner:
         or raises :class:`QueueFull` immediately with ``block=False``.
         Priorities and admission timing never change a run's outcome, only
         when it runs.
+
+        ``deadline`` (seconds from now) attaches a per-ticket SLO: under
+        ``deadline_policy="reject"`` a deadline below the fastest
+        resolution the service has ever produced is rejected at admission
+        with :class:`DeadlineUnmeetable` (the run provably cannot make
+        it); under ``"admit"`` the ticket is admitted regardless and a
+        late resolution is counted in ``ServiceMetrics.slo_missed``.
+        Deadlines shape admission and accounting only — never an Outcome.
         """
         if self._failure is not None:
             raise RuntimeError("tuning service already failed") \
@@ -187,6 +291,17 @@ class StreamingTuner:
                                  "seed=")
             request = RunRequest(job, seed, budget_b, bootstrap)
         self._engine.job_index(request.job)      # eager registration check
+        if deadline is not None:
+            if deadline <= 0:
+                raise ValueError("deadline must be > 0 seconds from now")
+            floor = self._metrics.latency_floor()
+            if (self.config.deadline_policy == "reject"
+                    and floor is not None and deadline < floor):
+                self._metrics.record_deadline_reject()
+                raise DeadlineUnmeetable(
+                    f"deadline {deadline:.3g}s is below this service's "
+                    f"observed resolution floor {floor:.3g}s")
+        deadline_abs = deadline
         deadline = (time.perf_counter() + timeout) if timeout is not None \
             else None
         cap = self.config.max_pending
@@ -199,6 +314,9 @@ class StreamingTuner:
                     self._next_id += 1
                     ticket = TuningTicket(self._next_id, request, priority,
                                           self)
+                    if deadline_abs is not None:
+                        ticket.deadline = (ticket.submitted_at
+                                           + deadline_abs)
                     self._outstanding += 1
                     break
                 if not block:
@@ -230,13 +348,74 @@ class StreamingTuner:
             raise TimeoutError(f"{what} timed out")
 
     # ------------------------------------------------------------------ #
+    # Cancellation
+    # ------------------------------------------------------------------ #
+    def _cancel(self, ticket: TuningTicket) -> bool:
+        """Tombstone ``ticket`` (see :meth:`TuningTicket.cancel`).  The
+        pump thread honors the tombstone at the next boundary: purged from
+        the heap, dropped at seating time, or evicted from its seat."""
+        with self._cond:
+            if ticket._event.is_set():
+                return False
+            ticket._cancel_requested = True
+            self._cond.notify_all()          # wake the worker promptly
+        return True
+
+    def _finish_cancel(self, ticket: TuningTicket,
+                       partial: Outcome | None = None) -> None:
+        """Resolve ``ticket`` as cancelled (pump thread only).  A ticket
+        that already resolved — its run completed in the segment the
+        cancel raced with, or the service failed it — keeps that
+        resolution: a set event is never overwritten, so a ticket can
+        never resolve twice."""
+        if ticket._event.is_set():
+            return
+        if partial is None:
+            partial = self._engine.partial_outcome(ticket)
+        ticket._partial = partial
+        ticket._cancelled = True
+        ticket.resolved_at = time.perf_counter()
+        self._metrics.record_cancel()
+        with self._cond:
+            self._outstanding -= 1
+            ticket._event.set()
+            self._cond.notify_all()
+
+    def _preemption_victim(self, evicting: list, staged: list,
+                           depth: int) -> TuningTicket | None:
+        """The seated ticket to preempt this segment, or None.
+
+        Preemption fires only under real pressure: the backlog depth at
+        pump start exceeded ``high_water``, every seat is occupied, and
+        the best pending priority is *strictly* better than the worst
+        seated one (strict, so a re-queued victim can never evict itself
+        — no thrash, no livelock).  The victim is the lowest-priority
+        seated run, latest admission breaking ties.
+        """
+        hw = self.config.high_water
+        if hw is None or depth <= hw or not staged:
+            return None
+        if self._engine.in_flight() < self.config.lane_slots:
+            return None                       # an idle seat serves instead
+        cands = [t for t in self._engine._slot_tickets
+                 if t is not None and not t._cancel_requested
+                 and not any(t is e for e in evicting)]
+        if not cands:
+            return None
+        best = min(t.priority for t in staged)
+        victim = max(cands, key=lambda t: (t.priority, t.id))
+        return victim if victim.priority > best else None
+
+    # ------------------------------------------------------------------ #
     # Pumping
     # ------------------------------------------------------------------ #
     def pump(self) -> SegmentReport:
-        """Run one bounded segment: refill the device queue from the
-        admission buffer, advance up to ``step_quota`` steps, harvest and
-        resolve finished runs.  Safe to call concurrently with submits;
-        segment execution itself is serialized."""
+        """Run one bounded segment: resolve tombstoned (cancelled)
+        backlog, refill the device queue from the admission buffer, evict
+        cancel-requested or preempted seats at the boundary, advance up to
+        ``step_quota`` steps, harvest and resolve finished runs.  Safe to
+        call concurrently with submits; segment execution itself is
+        serialized."""
         with self._pump_lock:
             if self._failure is not None:
                 # A failed service must not re-fill the device: the worker's
@@ -244,18 +423,29 @@ class StreamingTuner:
                 # has swept must stay failed.
                 raise RuntimeError("tuning service already failed") \
                     from self._failure
+            for t in self._admission.purge_cancelled():
+                self._finish_cancel(t)
             depth = len(self._admission)      # admitted, not yet staged
             staged = self._admission.stage(
                 self._engine.c_dim + self.config.lane_slots
-                - self._engine.in_flight())
+                - self._engine.in_flight(),
+                aging_rate=self.config.aging_rate)
+            # Boundary evictions: tombstoned seats always; plus at most one
+            # preemption when the backlog is past the high-water mark.
+            evict = [t for t in self._engine._slot_tickets
+                     if t is not None and t._cancel_requested]
+            victim = self._preemption_victim(evict, staged, depth)
+            if victim is not None:
+                evict.append(victim)
             # Early-exit at the low-water mark only pays off if there is
             # backlog left to inject afterwards; otherwise run the segment
             # to its quota (or to drained).
             low = (self.config.resolved_low_water()
                    if len(self._admission) else 0)
             try:
-                resolved, leftover, rep = self._engine.run_segment(
-                    staged, low, self.config.step_quota)
+                (resolved, leftover, dropped, evicted,
+                 rep) = self._engine.run_segment(staged, evict, low,
+                                                 self.config.step_quota)
             except BaseException:
                 # Don't strand staged tickets: whatever was not seated goes
                 # back to the backlog (seated ones live in the engine's
@@ -270,9 +460,27 @@ class StreamingTuner:
             for ticket, outcome in resolved:
                 ticket._outcome = outcome
                 ticket.resolved_at = now
+                if ticket.deadline is not None and now > ticket.deadline:
+                    self._metrics.record_slo_miss()
                 self._metrics.record_resolve(now - ticket.submitted_at,
                                              outcome.nex)
                 ticket._event.set()
+            for t in dropped:                 # tombstoned at seating time
+                self._finish_cancel(t)
+            for t, rows, partial in evicted:
+                if t._cancel_requested:
+                    self._finish_cancel(t, partial)
+                else:
+                    # Preempted: the banked carry rows ARE the resumable
+                    # request — reseating them replays the rest of the run
+                    # bit-identically (prepare() is idempotent on rows).
+                    t.rows = rows
+                    t.preemptions += 1
+                    t._pending_resume = True
+                    self._metrics.record_preempt()
+                    self._admission.push(t)
+            if rep.resumed:
+                self._metrics.record_resume(rep.resumed)
             if rep.steps:
                 self._metrics.record_segment(rep.steps, rep.busy_slot_steps,
                                              rep.wall_seconds, depth)

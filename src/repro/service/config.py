@@ -53,6 +53,30 @@ class ServiceConfig:
     requests.  ``submit`` blocks — or raises with ``block=False`` — while
     the cap is reached.  None disables backpressure."""
 
+    high_water: int | None = None
+    """Preemption trigger: when the host backlog (admitted, not yet
+    staged) exceeds this depth at pump start and every seat is occupied,
+    the broker may preempt the lowest-priority seated run at the segment
+    boundary — bank its partial carry, re-queue it as a resumable request
+    — provided a pending ticket has *strictly* better priority (so a
+    re-queued victim never evicts itself).  None disables preemption.
+    Resume replays bit-identically, so this only re-orders work."""
+
+    aging_rate: float = 0.0
+    """Priority aging in priority-units per second of wait: a backlogged
+    ticket's effective staging priority is
+    ``priority - aging_rate * wait_seconds``, so old low-priority tickets
+    eventually outrank fresh high-priority traffic and cannot starve
+    under sustained pressure.  0 disables aging (strict priority)."""
+
+    deadline_policy: str = "reject"
+    """What ``submit(deadline=...)`` does with a provably unmeetable
+    deadline (below the service's observed resolution-latency floor):
+    ``"reject"`` raises ``DeadlineUnmeetable`` at admission; ``"admit"``
+    admits anyway and counts late resolutions in
+    ``ServiceMetrics.slo_missed``.  Tickets without a deadline are never
+    affected."""
+
     bucket: tuple[int, int, int] | None = None
     """Geometry bucket ``(m, f, t)`` the registered jobs' spaces are
     right-padded into (see ``repro.core.space.GeometryBucket``).  None =
@@ -75,6 +99,13 @@ class ServiceConfig:
             raise ValueError("low_water must be >= 0 (or None for auto)")
         if self.max_pending is not None and self.max_pending < 1:
             raise ValueError("max_pending must be >= 1 (or None)")
+        if self.high_water is not None and self.high_water < 0:
+            raise ValueError("high_water must be >= 0 (or None to disable "
+                             "preemption)")
+        if self.aging_rate < 0:
+            raise ValueError("aging_rate must be >= 0")
+        if self.deadline_policy not in ("reject", "admit"):
+            raise ValueError("deadline_policy must be 'reject' or 'admit'")
         if self.bucket is not None:
             if len(self.bucket) != 3 or any(int(w) < 1 for w in self.bucket):
                 raise ValueError("bucket must be three positive widths "

@@ -63,6 +63,9 @@ class SegmentReport:
     consumed: int           # device queue rows seated on device mid-segment
     completed: int          # runs banked + reconstructed this segment
     in_flight: int          # seats still holding a live run afterwards
+    evicted: int = 0        # seats banked partial + freed at the boundary
+    resumed: int = 0        # previously preempted runs re-seated on device
+    dropped: int = 0        # cancel-requested staged runs filtered pre-seat
 
     @property
     def occupancy(self) -> float:
@@ -198,16 +201,28 @@ class SegmentEngine:
             queue[f] = jnp.asarray(buf)
         return queue
 
-    def run_segment(self, staged: list, low_water: int,
-                    step_quota: int) -> tuple[list, list, SegmentReport]:
+    def run_segment(self, staged: list, evict_tickets: list,
+                    low_water: int, step_quota: int
+                    ) -> tuple[list, list, list, list, SegmentReport]:
         """One seat/inject/dispatch/harvest cycle.
 
         ``staged`` must hold at most ``queue_capacity + idle slots``
-        prepared tickets, in admission (priority) order.  Returns
-        ``(resolved, leftover, report)``: finished ``(ticket, Outcome)``
-        pairs, the staged tickets that neither seated nor started (they go
-        back to the broker's backlog), and the segment facts.
+        prepared tickets, in admission (priority) order; ``evict_tickets``
+        names seated tickets whose slot must bank partial state and free at
+        this boundary (cancellation or preemption — the traced evict flag
+        means neither recompiles the segment).  Cancel-requested staged
+        tickets are filtered out *here*, at seating time, which closes the
+        cancel-between-stage-and-seat race: a tombstoned ticket can never
+        reach a slot.  Returns ``(resolved, leftover, dropped, evicted,
+        report)``: finished ``(ticket, Outcome)`` pairs, the staged tickets
+        that neither seated nor started (back to the broker's backlog), the
+        cancel-requested staged tickets that were dropped pre-seat, the
+        ``(ticket, rows, partial_outcome)`` triples for evicted seats
+        (``rows`` is the banked slot carry — reseating it resumes the run
+        bit-identically), and the segment facts.
         """
+        dropped = [t for t in staged if t._cancel_requested]
+        staged = [t for t in staged if not t._cancel_requested]
         self.prepare(staged)
         t0 = time.perf_counter()
         staged_q, seated = self._seat(staged)
@@ -215,8 +230,29 @@ class SegmentEngine:
             raise ValueError(f"staged {len(staged_q)} queue rows but device "
                              f"capacity is {self.c_dim}")
         if not staged_q and self.in_flight() == 0:
-            return [], [], SegmentReport(0, 0, self.l_dim, 0.0, seated,
-                                         0, 0, 0, 0)
+            return [], [], dropped, [], SegmentReport(
+                0, 0, self.l_dim, 0.0, seated, 0, 0, 0, 0,
+                dropped=len(dropped))
+
+        # Evict mask + pre-segment carry snapshot (the banked state a
+        # preempted run resumes from — identical to what the prologue banks
+        # into the out rows, read host-side for the resumable request).
+        ev = np.zeros(self.l_dim, bool)
+        for t in evict_tickets:
+            for i, held in enumerate(self._slot_tickets):
+                if held is t:
+                    ev[i] = True
+        ev_slots = np.nonzero(ev)[0]
+        ev_rows: dict[int, dict] = {}
+        if len(ev_slots):
+            fields = _STATE_FIELDS + (_CARRY_TIMEOUT_KEYS
+                                      if self.settings.timeout else ())
+            host = {f: np.asarray(self._carry[_CARRY_NAME.get(f, f)])
+                    for f in fields}
+            for i in ev_slots:
+                ev_rows[int(i)] = {f: host[f][i:i + 1].copy()
+                                   for f in fields}
+
         queue = self._queue_arrays(staged_q)
         if self._single:
             job_ids = None
@@ -226,7 +262,7 @@ class SegmentEngine:
                  np.array([t.jid for t in staged_q], np.int32),
                  np.zeros(self.c_dim - len(staged_q), np.int32)]))
         carry, report = jax.block_until_ready(_episode_segment(
-            self._carry, queue, np.int32(len(staged_q)),
+            self._carry, queue, np.int32(len(staged_q)), jnp.asarray(ev),
             np.int32(low_water), np.int32(step_quota), job_ids,
             self._cost, self._runtime if self.settings.timeout else None,
             *self._space, self._valid, self._u, self._tmax, self.settings))
@@ -253,6 +289,16 @@ class SegmentEngine:
             resolved.append((t, self._outcome_from_row(t, report, int(r),
                                                        sel_s)))
 
+        # Evicted seats banked into their own out row (rid == slot at
+        # segment start; out_done stays False there, so the loop above
+        # never double-harvests them).
+        evicted = []
+        for i in ev_slots:
+            t = row_ticket[int(i)]
+            evicted.append((t, ev_rows[int(i)],
+                            self._outcome_from_row(t, report, int(i),
+                                                   sel_s)))
+
         # Re-key in-flight runs to their seat and recycle the queue rows.
         tickets = [row_ticket[int(rid[i])] if active[i] else None
                    for i in range(self.l_dim)]
@@ -266,12 +312,39 @@ class SegmentEngine:
         self._carry = carry
 
         leftover = staged_q[consumed:]
+        started = staged[:seated] + staged_q[:consumed]
+        resumed = 0
+        for t in started:
+            if t._pending_resume:
+                t._pending_resume = False
+                resumed += 1
         rep = SegmentReport(
             steps=steps, busy_slot_steps=int(report["busy"]),
             lane_slots=self.l_dim, wall_seconds=wall, seated=seated,
             injected=len(staged_q), consumed=consumed,
-            completed=len(resolved), in_flight=self.in_flight())
-        return resolved, leftover, rep
+            completed=len(resolved), in_flight=self.in_flight(),
+            evicted=len(evicted), resumed=resumed, dropped=len(dropped))
+        return resolved, leftover, dropped, evicted, rep
+
+    def partial_outcome(self, t) -> Outcome | None:
+        """Partial :class:`Outcome` from a ticket's banked carry rows —
+        what a cancelled-while-pending ticket that previously ran (was
+        preempted) has already paid for.  None when the ticket never held
+        a seat (its rows are the untouched bootstrap replay)."""
+        if t.rows is None or t.preemptions == 0:
+            return None
+        n = int(t.rows["n_exp"][0])
+        explored = [int(i) for i in t.rows["explored"][0, :n]]
+        if self.settings.timeout:
+            cflags = [bool(f) for f in t.rows["cexpl"][0, :n]]
+            billed = np.asarray(t.rows["bexpl"][0, :n])
+        else:
+            cflags = [False] * len(explored)
+            billed = t.request.job.host_view().cost[explored]
+        sel_s = self._wall / max(self._steps * self.l_dim, 1)
+        return _reconstruct_outcome(t.request.job, self.settings, t.budget,
+                                    explored, cflags, billed,
+                                    np.float32(t.rows["beta"][0]), sel_s)
 
     def _outcome_from_row(self, t, report, r: int, sel_s: float) -> Outcome:
         n = int(report["out_nexp"][r])

@@ -36,7 +36,12 @@ class ServiceMetrics:
     lane_occupancy: float    # busy_slot_steps / (steps * lane_slots)
     submitted: int
     resolved: int
-    outstanding: int         # submitted - resolved
+    cancelled: int           # tickets resolved as cancelled
+    preempted: int           # seat evictions under queue pressure
+    resumed: int             # preempted runs re-seated on device
+    slo_missed: int          # resolved after their per-ticket deadline
+    deadline_rejected: int   # submits refused as provably unmeetable
+    outstanding: int         # submitted - resolved - cancelled
     explorations: int        # sum of resolved runs' NEX
     serve_seconds: float     # wall time inside segments (excludes idle)
     runs_per_second: float   # resolved / serve_seconds
@@ -74,17 +79,51 @@ class MetricsRecorder:
             self._busy = 0
             self._submitted = 0
             self._resolved = 0
+            self._cancelled = 0
+            self._preempted = 0
+            self._resumed = 0
+            self._slo_missed = 0
+            self._deadline_rejected = 0
             self._explorations = 0
             self._serve_seconds = 0.0
             self._depth_sum = 0
             self._depth_max = 0
             self._latency_sum = 0.0
+            self._latency_min: float | None = None
             self._latencies: collections.deque[float] = collections.deque(
                 maxlen=self._latency_window)
 
     def record_submit(self) -> None:
         with self._lock:
             self._submitted += 1
+
+    def record_cancel(self) -> None:
+        with self._lock:
+            self._cancelled += 1
+
+    def record_preempt(self) -> None:
+        with self._lock:
+            self._preempted += 1
+
+    def record_resume(self, n: int = 1) -> None:
+        with self._lock:
+            self._resumed += n
+
+    def record_slo_miss(self) -> None:
+        with self._lock:
+            self._slo_missed += 1
+
+    def record_deadline_reject(self) -> None:
+        with self._lock:
+            self._deadline_rejected += 1
+
+    def latency_floor(self) -> float | None:
+        """Fastest submit->resolution latency ever observed (full history,
+        survives the window) — the deadline-admission bound: a deadline
+        below this floor is provably unmeetable.  None before the first
+        resolution (an empty service admits any deadline)."""
+        with self._lock:
+            return self._latency_min
 
     def record_segment(self, steps: int, busy_slot_steps: int,
                        wall_seconds: float, queue_depth: int) -> None:
@@ -101,6 +140,9 @@ class MetricsRecorder:
             self._resolved += 1
             self._explorations += nex
             self._latency_sum += latency_seconds
+            if (self._latency_min is None
+                    or latency_seconds < self._latency_min):
+                self._latency_min = latency_seconds
             self._latencies.append(latency_seconds)
 
     def snapshot(self) -> ServiceMetrics:
@@ -116,11 +158,18 @@ class MetricsRecorder:
                                                 * self._lane_slots, 1),
                 submitted=self._submitted,
                 resolved=self._resolved,
+                cancelled=self._cancelled,
+                preempted=self._preempted,
+                resumed=self._resumed,
+                slo_missed=self._slo_missed,
+                deadline_rejected=self._deadline_rejected,
                 # Clamped: a reset() taken while runs were in flight zeroes
                 # the submit counter before those runs resolve, and the gap
                 # must read as "none outstanding since reset", not as a
-                # negative count.
-                outstanding=max(self._submitted - self._resolved, 0),
+                # negative count.  Counter balance invariant:
+                # submitted == resolved + cancelled + outstanding.
+                outstanding=max(self._submitted - self._resolved
+                                - self._cancelled, 0),
                 explorations=self._explorations,
                 serve_seconds=serve,
                 runs_per_second=self._resolved / serve if serve else 0.0,

@@ -1,0 +1,145 @@
+"""Randomized lifecycle-schedule fuzzer for the streaming service.
+
+Property: no interleaving of submit / cancel / deadline / preemption /
+pump events over a mixed-geometry fleet can break the service's
+lifecycle contract —
+
+1. every ticket that runs to completion bit-matches its sequential
+   oracle, ``spend_trajectory`` included (even after preempt+resume);
+2. every successfully cancelled ticket resolves (no hangs) with a
+   well-formed partial Outcome: None, or an exact prefix of its oracle;
+3. the engine returns to all-idle (no slot leaks);
+4. metrics counters balance: submitted == resolved + cancelled and
+   nothing stays outstanding.
+
+Runs under real hypothesis when installed; under the deterministic
+``_hypothesis_fallback`` shim otherwise, or when REPRO_NO_HYPOTHESIS is
+set.  Each drawn example executes ``REPRO_FUZZ_SCHEDULES`` derived
+sub-schedules (default 34: 6 fallback examples x 34 >= 200 schedules
+locally; scripts/ci.sh bounds it to 3 so the gate stays cheap).
+
+The fuzz fleet reuses the suite's mixed-geometry jobs and the
+(lane_slots=2, queue_capacity=3) program shape of the existing streaming
+tests, so every schedule drives the already-compiled segment programs —
+pacing, eviction and priorities are traced, never shapes.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+try:
+    if os.environ.get("REPRO_NO_HYPOTHESIS"):
+        raise ImportError("fallback forced by REPRO_NO_HYPOTHESIS")
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # no-network CI: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import RunRequest, Settings, run_queue
+from repro.service import ServiceConfig, StreamingTuner, TicketCancelled
+from tests.test_batched_harness import (_assert_outcomes_equal,
+                                        _distinct_geometry_jobs)
+
+_SCHEDULES = int(os.environ.get("REPRO_FUZZ_SCHEDULES", "34"))
+
+_JOBS = _distinct_geometry_jobs()
+_REQUESTS = [RunRequest(_JOBS[r % 3], seed=640 + r,
+                        budget_b=4.0 if r % 3 == 0 else 1.5)
+             for r in range(8)]
+
+
+def _settings(timeout: bool) -> Settings:
+    return Settings(policy="lynceus", la=1, k_gh=2, refit="frozen",
+                    timeout=timeout)
+
+
+_ORACLE: dict[bool, list] = {}
+
+
+def _oracle(timeout: bool) -> list:
+    """Sequential-oracle outcomes for the fixed request pool, one sweep
+    per timeout setting, cached across every schedule."""
+    if timeout not in _ORACLE:
+        _ORACLE[timeout] = run_queue(_REQUESTS, _settings(timeout))
+    return _ORACLE[timeout]
+
+
+def _run_schedule(rng: np.random.Generator, timeout: bool) -> None:
+    """One random interleaving of lifecycle events, then the full
+    contract check."""
+    oracle = _oracle(timeout)
+    cfg = ServiceConfig(
+        lane_slots=2, queue_capacity=3,
+        step_quota=int(rng.integers(2, 6)),
+        high_water=0 if rng.random() < 0.5 else None,
+        aging_rate=float(rng.choice([0.0, 1.0])),
+        deadline_policy="admit")
+    svc = StreamingTuner(_JOBS, _settings(timeout), cfg)
+
+    picks = rng.choice(len(_REQUESTS), size=int(rng.integers(3, 7)),
+                       replace=False)
+    tickets: list = []          # (request index, ticket)
+    want_cancelled: list = []
+    for r in picks:
+        deadline = (float(rng.choice([1e-9, 60.0]))
+                    if rng.random() < 0.3 else None)
+        t = svc.submit(_REQUESTS[r], priority=int(rng.integers(-1, 3)),
+                       deadline=deadline)
+        tickets.append((int(r), t))
+        if rng.random() < 0.35:  # cancel someone, maybe ourselves
+            _, victim = tickets[int(rng.integers(0, len(tickets)))]
+            if victim.cancel():
+                want_cancelled.append(victim)
+        if rng.random() < 0.5:
+            svc.pump()
+    outs = svc.drain()
+
+    # 1) every ticket resolved, exactly one way
+    for _, t in tickets:
+        assert t.done(), f"ticket {t.id} never resolved"
+        assert not (t.cancelled() and t._outcome is not None)
+    # a sync-mode cancel that was accepted always wins (the tombstone is
+    # honored at the next boundary, before the run can complete)
+    for t in want_cancelled:
+        assert t.state == "cancelled"
+
+    # 2) completed == oracle, bit for bit (spend_trajectory included via
+    #    the shared comparator), regardless of what happened around them
+    done = [(r, t) for r, t in tickets if t.state == "done"]
+    _assert_outcomes_equal([oracle[r] for r, _ in done],
+                           [t.result() for _, t in done])
+    assert len(outs) == len(done)   # drain returns completions only
+
+    # 3) cancelled tickets: well-formed partials (prefix of the oracle)
+    for r, t in tickets:
+        if t.state != "cancelled":
+            continue
+        with pytest.raises(TicketCancelled):
+            t.result()
+        p = t.partial_outcome()
+        if p is not None:
+            full = oracle[r]
+            assert 0 < p.nex <= full.nex
+            assert p.explored == full.explored[:p.nex]
+            assert (p.spend_trajectory
+                    == full.spend_trajectory[:len(p.spend_trajectory)])
+
+    # 4) no slot leaks, counters balance
+    eng = svc._engine
+    assert eng.in_flight() == 0
+    assert not np.asarray(eng._carry["active"]).any()
+    m = svc.metrics()
+    assert m.submitted == len(tickets)
+    assert m.submitted == m.resolved + m.cancelled
+    assert m.outstanding == 0
+    assert m.resolved == len(done)
+    assert m.resumed <= m.preempted
+
+
+@settings(max_examples=6, deadline=None)
+@given(block=st.integers(0, 9), timeout=st.sampled_from([False, True]))
+def test_lifecycle_schedules(block, timeout):
+    for k in range(_SCHEDULES):
+        rng = np.random.default_rng((block, k, int(timeout)))
+        _run_schedule(rng, timeout)

@@ -9,13 +9,16 @@ broker mechanics (backpressure, priorities, futures, background worker,
 metrics) are pinned alongside.
 """
 
+import threading
+import time
+
 import numpy as np
 import pytest
 
 from repro.core import RunRequest, Settings, run_queue, run_queue_batched
 from repro.jobs import synthetic_job
-from repro.service import (QueueFull, ServiceConfig, StreamingTuner,
-                           TuningTicket)
+from repro.service import (DeadlineUnmeetable, QueueFull, ServiceConfig,
+                           StreamingTuner, TicketCancelled, TuningTicket)
 from tests.test_batched_harness import (_assert_outcomes_equal,
                                         _distinct_geometry_jobs)
 
@@ -191,11 +194,11 @@ def test_pump_failure_restages_staged_tickets(monkeypatch):
     orig = svc._engine.run_segment
     calls = {"n": 0}
 
-    def boom(staged, low, quota):
+    def boom(staged, evict, low, quota):
         calls["n"] += 1
         if calls["n"] == 1:
             raise RuntimeError("transient device failure")
-        return orig(staged, low, quota)
+        return orig(staged, evict, low, quota)
 
     monkeypatch.setattr(svc._engine, "run_segment", boom)
     with pytest.raises(RuntimeError, match="transient"):
@@ -274,6 +277,12 @@ def test_config_validation():
         ServiceConfig(bucket=(16, 2))
     with pytest.raises(ValueError, match="bucket"):
         ServiceConfig(bucket=(16, 0, 4))
+    with pytest.raises(ValueError, match="high_water"):
+        ServiceConfig(high_water=-1)
+    with pytest.raises(ValueError, match="aging_rate"):
+        ServiceConfig(aging_rate=-0.5)
+    with pytest.raises(ValueError, match="deadline_policy"):
+        ServiceConfig(deadline_policy="defer")
     assert ServiceConfig(lane_slots=4, queue_capacity=2,
                          low_water=None).resolved_low_water() == 2
 
@@ -291,6 +300,288 @@ def test_bootstrap_prefix_respected():
     out = t.result()
     boot = tuple(int(i) for i in req.resolved_bootstrap())
     assert out.explored[:len(boot)] == boot
+
+
+# --------------------------------------------------------------------------- #
+# Request lifecycle: cancellation, preemption, deadlines (ROADMAP item 2)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("mode", ["cancel_unseated", "cancel_seated",
+                                  "preempt_resume"])
+def test_lifecycle_arrival_order_invariance(mode):
+    """The arrival-order invariance pin extended to lifecycle events: 3
+    arrival schedules x {cancel-unseated, cancel-seated, preempt+resume}.
+
+    Survivors stay bit-identical to the sequential oracle (spend
+    trajectories included) no matter what was cancelled or preempted
+    around them; a cancelled seated run's partial Outcome is an exact
+    prefix of its oracle; a preempted-then-resumed run's final Outcome is
+    byte-identical to the same request run uninterrupted — THE acceptance
+    pin of the lifecycle tentpole."""
+    jobs = _jobs()
+    s = Settings(policy="lynceus", la=1, k_gh=2, refit="frozen",
+                 timeout=True)
+    reqs = _requests(jobs)
+    seq = run_queue(reqs, s)
+    victim = 0                       # long-budget: survives early segments
+    others = [r for r in range(len(reqs)) if r != victim]
+    schedules = [[others],
+                 [others[:3], others[3:]],
+                 [others[4:], others[:2], others[2:4]]]
+    for arrival in schedules:
+        if mode == "preempt_resume":
+            cfg = ServiceConfig(lane_slots=1, queue_capacity=3,
+                                step_quota=3, high_water=0)
+        else:
+            cfg = ServiceConfig(lane_slots=2, queue_capacity=3,
+                                step_quota=2)
+        svc = StreamingTuner(jobs, s, cfg)
+        tickets = {}
+        if mode == "cancel_unseated":
+            tickets[victim] = svc.submit(reqs[victim])
+            assert tickets[victim].cancel()   # tombstoned before any pump
+        elif mode == "cancel_seated":
+            tickets[victim] = svc.submit(reqs[victim], priority=-1)
+            svc.pump()                        # seats it, runs 2 steps
+            assert any(t is tickets[victim]
+                       for t in svc._engine._slot_tickets)
+            assert tickets[victim].cancel()   # evicted at next boundary
+        else:
+            tickets[victim] = svc.submit(reqs[victim], priority=5)
+            svc.pump()                        # seats the low-prio victim
+        for batch in arrival:
+            for r in batch:
+                tickets[r] = svc.submit(reqs[r])
+            svc.pump()
+        svc.drain()
+        if mode == "preempt_resume":
+            _assert_outcomes_equal(
+                seq, [tickets[r].result() for r in range(len(reqs))])
+            assert tickets[victim].preemptions >= 1
+            assert svc.metrics().preempted >= 1
+            assert svc.metrics().resumed >= 1
+        else:
+            t = tickets[victim]
+            assert t.state == "cancelled" and t.cancelled()
+            with pytest.raises(TicketCancelled) as ei:
+                t.result()
+            partial = ei.value.partial
+            if mode == "cancel_unseated":
+                assert partial is None        # never ran: nothing paid for
+            else:
+                full = seq[victim]
+                assert partial is not None
+                assert 0 < partial.nex < full.nex
+                assert partial.explored == full.explored[:partial.nex]
+                assert (partial.spend_trajectory
+                        == full.spend_trajectory[
+                            :len(partial.spend_trajectory)])
+            _assert_outcomes_equal([seq[r] for r in others],
+                                   [tickets[r].result() for r in others])
+        assert svc._engine.in_flight() == 0   # no slot leaks
+        m = svc.metrics()
+        assert m.submitted == m.resolved + m.cancelled
+        assert m.outstanding == 0
+
+
+def test_result_resolution_paths():
+    """All four terminal behaviours of ``TuningTicket.result()`` — done,
+    cancelled, service-failure, timeout — each with its own exception type
+    (the old code shadowed cancellation behind a misleading
+    TimeoutError)."""
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    # done: returns the Outcome; a later cancel is refused.
+    svc = StreamingTuner(jobs, s, CFG)
+    t_done = svc.submit(RunRequest(jobs[0], seed=1, budget_b=1.5))
+    svc.drain()
+    assert t_done.state == "done" and t_done.result() is not None
+    assert t_done.cancel() is False           # resolution stands
+    assert t_done.state == "done"
+    # cancelled: raises TicketCancelled, not TimeoutError.
+    t_canc = svc.submit(RunRequest(jobs[0], seed=2, budget_b=1.5))
+    assert t_canc.cancel() is True
+    svc.pump()
+    assert t_canc.state == "cancelled"
+    with pytest.raises(TicketCancelled):
+        t_canc.result()
+    assert t_canc.cancel() is False           # idempotent once terminal
+    # timeout: an unresolved ticket with an expired wait deadline.
+    svc2 = StreamingTuner(jobs, s, CFG)
+    t_slow = svc2.submit(RunRequest(jobs[0], seed=3, budget_b=1.5))
+    with pytest.raises(TimeoutError):
+        t_slow.result(timeout=0)
+    assert t_slow.state == "pending"          # still drivable
+    # service failure: the worker dies; waiters get the chained failure.
+    svc3 = StreamingTuner(jobs, s, CFG).start()
+
+    def boom(*args):
+        raise RuntimeError("device on fire")
+
+    svc3._engine.run_segment = boom
+    t_fail = svc3.submit(RunRequest(jobs[0], seed=4, budget_b=1.5))
+    with pytest.raises(RuntimeError, match="failed"):
+        t_fail.result(timeout=60)
+    svc3.stop()
+    assert t_fail.state == "failed"
+
+
+def test_broker_thread_safety_stress():
+    """>= 4 threads hammer submit()/cancel() against the background
+    worker: no deadlock, every ticket reaches exactly one terminal state,
+    completed tickets still bit-match their oracles, counters balance."""
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    results: dict[int, list] = {}
+    lock = threading.Lock()
+    with StreamingTuner(jobs, s, ServiceConfig(lane_slots=2,
+                                               queue_capacity=3,
+                                               step_quota=4)).start() as svc:
+        def worker(w):
+            rng = np.random.default_rng(w)
+            tix = []
+            for i in range(6):
+                t = svc.submit(RunRequest(jobs[(w + i) % 2],
+                                          seed=1000 + w * 10 + i,
+                                          budget_b=1.5))
+                tix.append(t)
+                if rng.random() < 0.4:
+                    t.cancel()
+            with lock:
+                results[w] = tix
+        threads = [threading.Thread(target=worker, args=(w,))
+                   for w in range(4)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        svc.drain(timeout=600)
+    tickets = [t for ts in results.values() for t in ts]
+    assert len(tickets) == 24
+    for t in tickets:
+        assert t.done()                       # no hangs, no strays
+        # exactly one terminal state — never cancelled AND resolved
+        assert not (t._cancelled and t._outcome is not None)
+        assert t.state in ("done", "cancelled")
+    done = [t for t in tickets if t.state == "done"]
+    if done:
+        _assert_outcomes_equal(
+            run_queue([t.request for t in done], s),
+            [t.result() for t in done])
+    m = svc.metrics()
+    assert m.submitted == 24
+    assert m.resolved + m.cancelled == 24
+    assert m.resolved == len(done)
+    assert m.outstanding == 0
+    assert svc._engine.in_flight() == 0
+
+
+def test_failure_propagation_reaches_cancelled_and_outstanding():
+    """A dying worker fails every outstanding ticket; tickets already
+    cancelled keep their cancellation (no double resolution)."""
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    svc = StreamingTuner(jobs, s, CFG)
+
+    def boom(*args):
+        raise RuntimeError("dead device")
+
+    svc._engine.run_segment = boom
+    svc.start()
+    tix = [svc.submit(RunRequest(jobs[0], seed=5000 + i, budget_b=1.5))
+           for i in range(4)]
+    tix[0].cancel()
+    with pytest.raises(RuntimeError, match="failed"):
+        svc.drain(timeout=60)
+    svc.stop()                                # join: sweep has finished
+    for t in tix:
+        assert t.done()
+        assert t.state in ("failed", "cancelled")
+    assert any(t.state == "failed" for t in tix)
+    with pytest.raises(RuntimeError, match="failed"):
+        svc.submit(RunRequest(jobs[0], seed=5999, budget_b=1.5))
+
+
+def test_deadline_validation_and_rejection():
+    """submit(deadline=...) validates, and under the default "reject"
+    policy refuses a deadline below the observed resolution floor."""
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    svc = StreamingTuner(jobs, s, CFG)
+    with pytest.raises(ValueError, match="deadline"):
+        svc.submit(RunRequest(jobs[0], seed=1, budget_b=1.5), deadline=0)
+    # No history yet: nothing is provably unmeetable, so it admits.
+    t = svc.submit(RunRequest(jobs[0], seed=1, budget_b=1.5),
+                   deadline=1e-9)
+    svc.drain()
+    assert t.state == "done"
+    assert svc.metrics().slo_missed == 1      # admitted, but it was late
+    floor = svc._metrics.latency_floor()
+    assert floor is not None and floor > 0
+    with pytest.raises(DeadlineUnmeetable):
+        svc.submit(RunRequest(jobs[0], seed=2, budget_b=1.5),
+                   deadline=floor / 1e6)
+    m = svc.metrics()
+    assert m.deadline_rejected == 1
+    # a rejected submit admits nothing
+    assert m.submitted == m.resolved == 1
+    # generous deadlines pass admission untouched
+    t2 = svc.submit(RunRequest(jobs[0], seed=2, budget_b=1.5),
+                    deadline=3600.0)
+    svc.drain()
+    assert t2.state == "done"
+    assert svc.metrics().slo_missed == 1      # no new misses
+
+
+def test_deadline_admit_policy_counts_slo_misses():
+    """deadline_policy="admit" never rejects; late resolutions are counted
+    instead of refused."""
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    svc = StreamingTuner(jobs, s, ServiceConfig(lane_slots=2,
+                                                queue_capacity=2,
+                                                step_quota=8,
+                                                deadline_policy="admit"))
+    svc.submit(RunRequest(jobs[0], seed=3, budget_b=1.5))
+    svc.drain()                               # floor now known
+    assert svc._metrics.latency_floor() is not None
+    t = svc.submit(RunRequest(jobs[0], seed=4, budget_b=1.5),
+                   deadline=1e-9)             # unmeetable, still admitted
+    svc.drain()
+    assert t.state == "done"
+    m = svc.metrics()
+    assert m.slo_missed == 1 and m.deadline_rejected == 0
+
+
+def test_admission_aging_and_tombstone_purge():
+    """_AdmissionBuffer unit pins: aging lets an old low-priority ticket
+    overtake fresh high-priority traffic (no starvation); purge drops
+    tombstoned tickets from both heaps."""
+    from repro.service.broker import _AdmissionBuffer
+
+    class Stub:
+        def __init__(self, tid, priority, age=0.0):
+            self.id = tid
+            self.priority = priority
+            self.submitted_at = time.perf_counter() - age
+            self._cancel_requested = False
+
+    buf = _AdmissionBuffer()
+    old_low = Stub(1, priority=10, age=100.0)
+    fresh_high = Stub(2, priority=0)
+    buf.push(old_low)
+    buf.push(fresh_high)
+    assert [t.id for t in buf.stage(2)] == [2, 1]       # strict priority
+    buf.push(old_low)
+    buf.push(fresh_high)
+    # 100s * 1.0/s of aging beats the 10-point priority gap
+    assert [t.id for t in buf.stage(2, aging_rate=1.0)] == [1, 2]
+    a, b = Stub(3, 0), Stub(4, 1)
+    buf.push(a)
+    buf.push(b)
+    b._cancel_requested = True
+    assert [t.id for t in buf.purge_cancelled()] == [4]
+    assert [t.id for t in buf.stage(4)] == [3]
+    assert len(buf) == 0
 
 
 @pytest.mark.parametrize("timeout", [False, True])
