@@ -65,11 +65,10 @@ def datasets():
 
 # Every Outcome field that determinism pins (everything except the
 # wall-clock select_seconds).  THE comparator for backend/scheduler/
-# streaming parity — shared by the benchmark gates and the scripts/ci.sh
-# smokes so a new Outcome field cannot silently drop out of one copy.
-OUTCOME_FIELDS = ("explored", "recommended", "cno", "nex", "spent",
-                  "budget", "found_optimum", "trajectory",
-                  "spend_trajectory", "censored")
+# streaming parity — re-exported from repro.obs (the forensics layer owns
+# the single copy) so the benchmark gates, the scripts/ci.sh smokes and
+# the divergence artifacts can never drift apart.
+from repro.obs import PINNED_OUTCOME_FIELDS as OUTCOME_FIELDS
 
 
 def outcomes_equal(a, b) -> bool:
@@ -192,6 +191,16 @@ def cno_stats_d(outs):
 def write_json(name, payload):
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def write_bench_json(name, payload):
+    """Persist one benchmark's measured numbers as results/BENCH_<name>.json
+    (the committed-artifact convention: gates print booleans, the measured
+    values land here for the record)."""
+    path = pathlib.Path("results") / f"BENCH_{name}.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=1, default=str))
+    return path
 
 
 def csv_line(*fields):

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_line, write_json
+from benchmarks.common import csv_line, write_bench_json, write_json
 from repro.kernels import (decode_attention, flash_attention, gh_ei,
                            select_step, ssm_scan, tree_predict)
 from repro.kernels.dispatch import ACCEL_BACKENDS
@@ -131,3 +131,4 @@ def main(n_runs=0, quick=False):
            jnp.float32(10.0), jnp.float32(0.01), out=out)
 
     write_json("kernels_bench", out)
+    write_bench_json("kernels", out)

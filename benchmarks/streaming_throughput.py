@@ -37,16 +37,28 @@ The gates are *correctness*, not timing: zero drift vs the sequential
 oracle for every surviving run (the preempted-then-resumed one included,
 ``spend_trajectory`` and all), preemption/resume/cancel counters all
 exercised and balanced, and no leaked lane slots.
+
+A sixth section gates the **observability overhead** (ISSUE-9, the
+zero-perturbation rule made quantitative): the same streamed trace with
+the flight recorder ON must hold >= 0.95x the trace-off steps/sec
+(best-of-interleaved repeats, so one scheduler hiccup cannot fail the
+gate) and replay it bit for bit.  Any drift gate in this file that trips
+freezes its evidence via ``repro.obs.dump_divergence`` before reporting.
+
+Measured numbers land in ``results/BENCH_streaming.json`` alongside the
+gate booleans printed as CSV.
 """
 
 from __future__ import annotations
 
 import time
 
-from benchmarks.common import csv_line, outcomes_equal, write_json
+from benchmarks.common import (csv_line, outcomes_equal, write_bench_json,
+                               write_json)
 from repro.core import (RunRequest, Settings, episode_cache_size, run_queue,
                         run_queue_batched)
 from repro.jobs import synthetic_job
+from repro.obs import dump_divergence
 from repro.service import ServiceConfig, StreamingTuner
 
 LANE_SLOTS = 4
@@ -124,6 +136,11 @@ def mixed_geometry_stream(n_bursts, out):
 
     m = svc.metrics()
     drift = sum(not outcomes_equal(a, b) for a, b in zip(seq, outs))
+    if drift:
+        dump_divergence("mixed_geometry_drift", expected=seq, actual=outs,
+                        recorder=svc.recorder,
+                        context={"bench": "streaming_throughput",
+                                 "section": "mixed_geometry"})
     out["mixed_geometry_stream"] = {
         "requests": len(reqs), "bursts": n_bursts, "jobs": len(jobs),
         "bucket": list(svc._engine.bucket.shape),
@@ -278,6 +295,62 @@ def lifecycle_section(quick, out):
     csv_line("streaming", "lifecycle_slot_leaks", leaks)
 
 
+def obs_overhead_section(quick, out):
+    """Obs-overhead gate (ISSUE-9): trace-on steps/sec >= 0.95x trace-off
+    on the same streamed trace, measured best-of-interleaved-repeats so
+    shared machine noise hits both sides alike.  Parity between the two
+    runs is a hard zero: on drift the trace-on flight record plus field
+    diffs are frozen via ``dump_divergence`` before the gate reports."""
+    jobs = [synthetic_job(85 + k, n_a=8, n_b=8) for k in range(2)]
+    s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
+    n_bursts = 2 if quick else 4
+    bursts = _trace(jobs, n_bursts, seed0=85001)
+    base = dict(lane_slots=LANE_SLOTS, queue_capacity=4 * LANE_SLOTS,
+                step_quota=4)
+
+    def measure(svc):
+        svc.recorder.clear()
+        svc.reset_metrics()
+        t0 = time.perf_counter()
+        outs = _run_stream(svc, bursts)
+        wall = time.perf_counter() - t0
+        return sum(o.nex for o in outs) / wall, outs
+
+    svc_off = StreamingTuner(jobs, s, ServiceConfig(**base))
+    svc_on = StreamingTuner(jobs, s, ServiceConfig(
+        **base, trace=True, trace_capacity=1 << 15))
+    warm = _trace(jobs, 1, seed0=95001)           # warm compiles both sides
+    _run_stream(svc_off, warm)
+    _run_stream(svc_on, warm)
+
+    best_off = best_on = 0.0
+    for _ in range(2 if quick else 3):            # interleaved repeats
+        sps_off, outs_off = measure(svc_off)
+        sps_on, outs_on = measure(svc_on)
+        best_off = max(best_off, sps_off)
+        best_on = max(best_on, sps_on)
+
+    drift = sum(not outcomes_equal(a, b)
+                for a, b in zip(outs_off, outs_on))
+    if drift:
+        dump_divergence("obs_overhead_drift", expected=outs_off,
+                        actual=outs_on, recorder=svc_on.recorder,
+                        context={"bench": "streaming_throughput",
+                                 "section": "obs_overhead"})
+    ratio = best_on / best_off
+    events = sum(svc_on.recorder.counts().values())
+    out["obs_overhead"] = {
+        "requests": sum(len(b) for b in bursts),
+        "steps_per_s_trace_off": best_off, "steps_per_s_trace_on": best_on,
+        "trace_on_ratio": ratio, "events_recorded": events,
+        "drifting_runs": drift,
+    }
+    csv_line("streaming", "obs_trace_events", events)
+    csv_line("streaming", "obs_drifting_runs", drift)
+    csv_line("streaming", "obs_trace_on_ratio", round(ratio, 3))
+    csv_line("streaming", "obs_overhead_le_5pct", ratio >= 0.95)
+
+
 def main(n_runs=20, quick=False):
     jobs = [synthetic_job(30 + k, **SPACE) for k in range(2)]
     s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
@@ -328,7 +401,14 @@ def main(n_runs=20, quick=False):
     csv_line("streaming", "occupancy_ge_0.8", m.lane_occupancy >= 0.8)
     csv_line("streaming", "speedup", round(speedup, 2))
     csv_line("streaming", "speedup_ge_1.5x", speedup >= 1.5)
+    if drift:
+        dump_divergence("stream_vs_batch_drift", expected=batch_outs,
+                        actual=stream_outs, recorder=svc.recorder,
+                        context={"bench": "streaming_throughput",
+                                 "section": "main"})
     mixed_geometry_stream(n_bursts=4 if quick else 6, out=out)
     fused_selector_section(quick, out)
     lifecycle_section(quick, out)
+    obs_overhead_section(quick, out)
     write_json("streaming", out)
+    write_bench_json("streaming", out)

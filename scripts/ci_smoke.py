@@ -5,7 +5,9 @@ on, lockstep AND compacting schedulers), any streamed-vs-oracle divergence
 on the arrival-trace smoke, any mixed-geometry divergence (three distinct
 [M, F, T] jobs padded into one bucket, through the queue and the streaming
 service, timeout on), a bucketed drain that compiles more than one episode
-program, or a missing batched speedup.  Run from anywhere:
+program, a missing batched speedup, or a lifecycle-smoke flight record
+(written to ``results/ci/lifecycle_trace.jsonl``) that fails the
+``repro.obs`` schema or state-machine validators.  Run from anywhere:
 
   python scripts/ci_smoke.py
 """
@@ -158,7 +160,7 @@ if compiles != 1 or sel_compiles != 0:
 # well-formed partial, leak no slots, and balance the counters.
 from repro.service import TicketCancelled
 lc_cfg = ServiceConfig(lane_slots=1, queue_capacity=3, step_quota=3,
-                       high_water=0)
+                       high_water=0, trace=True)
 svc = StreamingTuner(geo_jobs, s, lc_cfg)
 bad = 0
 t_pre = svc.submit(geo_reqs[0], priority=5)      # long budget, low priority
@@ -201,6 +203,25 @@ if svc._engine.in_flight() != 0:
     failures += 1
 if m.submitted != m.resolved + m.cancelled or m.outstanding != 0:
     print("ci-smoke lifecycle: counters do not balance")
+    failures += 1
+
+# Flight-record smoke (the lifecycle smoke above ran with trace=True):
+# freeze its flight record to a JSONL artifact, reload it, and hold it to
+# both validators — the schema check and the per-ticket lifecycle state
+# machine with every ticket terminal (the service is drained).
+from repro.obs import read_trace_jsonl, validate_lifecycle, validate_trace
+trace_path = ROOT / "results" / "ci" / "lifecycle_trace.jsonl"
+svc.dump_trace(trace_path)
+events = read_trace_jsonl(trace_path)
+issues = (validate_trace(events)
+          + validate_lifecycle(events, require_terminal=True))
+print(f"ci-smoke flight record: {len(events)} events, {len(issues)} "
+      f"validation issue(s) -> {trace_path}")
+for msg in issues[:10]:
+    print(f"  {msg}")
+failures += len(issues)
+if not events:
+    print("ci-smoke flight record: trace is empty")
     failures += 1
 
 # Fused-selector parity smoke: the Pallas-fused selection step, run under

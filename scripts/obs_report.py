@@ -1,0 +1,144 @@
+"""Render a flight-recorder JSONL trace: timelines, occupancy, spans.
+
+Reads a trace written by ``StreamingTuner.dump_trace()`` (or
+``repro.obs.write_trace_jsonl``) and prints:
+
+* validation  — the schema check (``validate_trace``) and the per-ticket
+  lifecycle state machine (``validate_lifecycle``); nonzero exit on any
+  violation, so CI can gate on a trace artifact;
+* timeline    — per-ticket event history with relative timestamps
+  (submit -> ... -> terminal), one line per event;
+* occupancy   — per-slot seating table: which tickets held each lane seat
+  and for how many segments;
+* spans       — per-phase timing summary (count / total / mean / max) with
+  compile counts attributed to the dispatch phase.
+
+Run from anywhere:
+
+  PYTHONPATH=src python scripts/obs_report.py results/trace.jsonl
+  PYTHONPATH=src python scripts/obs_report.py trace.jsonl --ticket 3
+  PYTHONPATH=src python scripts/obs_report.py trace.jsonl --require-terminal
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def _fmt_extra(e) -> str:
+    parts = []
+    if e.slot is not None:
+        parts.append(f"slot={e.slot}")
+    if e.segment is not None:
+        parts.append(f"seg={e.segment}")
+    parts += [f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+              for k, v in e.data.items()]
+    return " ".join(parts)
+
+
+def validation_section(events, require_terminal: bool) -> int:
+    from repro.obs import validate_lifecycle, validate_trace
+    issues = validate_trace(events)
+    issues += validate_lifecycle(events, require_terminal=require_terminal)
+    print(f"== validation: {len(events)} events, "
+          f"{len(issues)} issue(s) ==")
+    for msg in issues:
+        print(f"  VIOLATION  {msg}")
+    return len(issues)
+
+
+def timeline_section(events, only_ticket: int | None) -> None:
+    by_ticket: dict[int, list] = collections.defaultdict(list)
+    for e in events:
+        if e.ticket is not None:
+            by_ticket[e.ticket].append(e)
+    t0 = min((e.t for e in events), default=0.0)
+    print(f"\n== per-ticket timeline ({len(by_ticket)} tickets) ==")
+    for tid in sorted(by_ticket):
+        if only_ticket is not None and tid != only_ticket:
+            continue
+        print(f"ticket {tid}:")
+        for e in by_ticket[tid]:
+            print(f"  +{e.t - t0:9.4f}s  {e.kind:<15} {_fmt_extra(e)}")
+
+
+def occupancy_section(events) -> None:
+    # A seat holds its ticket from the seat event until that ticket's next
+    # evict/harvest; segments held = distinct dispatch segments in between.
+    dispatches = [e for e in events if e.kind == "dispatch"]
+    seats: dict[int, list] = collections.defaultdict(list)
+    seated_at: dict[int, tuple[int, int]] = {}       # ticket -> (slot, seg)
+    for e in events:
+        if e.kind == "seat" and e.slot is not None:
+            seated_at[e.ticket] = (e.slot, e.segment or 0)
+        elif e.kind in ("evict", "harvest") and e.ticket in seated_at:
+            slot, seg0 = seated_at.pop(e.ticket)
+            seats[slot].append((e.ticket, seg0, e.segment or seg0, e.kind))
+    for tid, (slot, seg0) in seated_at.items():      # still seated at EOF
+        seats[slot].append((tid, seg0, None, "in-flight"))
+    print(f"\n== per-slot occupancy ({len(dispatches)} dispatches; "
+          "host-visible seats only) ==")
+    if not seats:
+        print("  (no host-seated tickets in this trace)")
+    for slot in sorted(seats):
+        spans = ", ".join(
+            f"t{tid}[seg {a}..{'?' if b is None else b} {how}]"
+            for tid, a, b, how in seats[slot])
+        print(f"  slot {slot}: {spans}")
+
+
+def spans_section(events) -> None:
+    agg: dict[str, list[float]] = collections.defaultdict(list)
+    compiles = collections.Counter()
+    for e in events:
+        if e.kind != "span":
+            continue
+        agg[e.data["phase"]].append(e.data["dur_s"])
+        for k in ("episode_compiles", "selector_compiles"):
+            compiles[k] += e.data.get(k, 0)
+    print("\n== phase spans ==")
+    if not agg:
+        print("  (no spans in this trace)")
+        return
+    print(f"  {'phase':<14} {'count':>6} {'total_s':>9} {'mean_s':>9} "
+          f"{'max_s':>9}")
+    from repro.obs import PHASES
+    for phase in PHASES:
+        durs = agg.get(phase)
+        if not durs:
+            continue
+        print(f"  {phase:<14} {len(durs):>6} {sum(durs):>9.4f} "
+              f"{sum(durs) / len(durs):>9.4f} {max(durs):>9.4f}")
+    print(f"  compiles inside dispatch spans: "
+          f"episode={compiles['episode_compiles']} "
+          f"selector={compiles['selector_compiles']}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="JSONL trace file "
+                    "(StreamingTuner.dump_trace output)")
+    ap.add_argument("--ticket", type=int, default=None,
+                    help="restrict the timeline to one ticket id")
+    ap.add_argument("--require-terminal", action="store_true",
+                    help="also require every ticket to have reached a "
+                    "terminal event (use on drained-service traces)")
+    args = ap.parse_args()
+
+    from repro.obs import read_trace_jsonl
+    events = read_trace_jsonl(args.trace)
+    issues = validation_section(events, args.require_terminal)
+    timeline_section(events, args.ticket)
+    occupancy_section(events)
+    spans_section(events)
+    return 1 if issues else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,129 @@
+"""Divergence forensics: one artifact per parity failure, not a rerun.
+
+When a parity/drift gate trips (a streamed run that does not bit-match its
+sequential oracle, a fused kernel that drifts from the ref), the useful
+evidence — which Outcome fields differ and where, what the service was
+doing around the failure, which compiled program served the run — is gone
+by the time anyone re-runs with prints.  :func:`dump_divergence` freezes
+all of it into a single JSON artifact at failure time:
+
+* per-run field diffs over :data:`PINNED_OUTCOME_FIELDS` (the determinism
+  contract's comparator fields) plus full expected/actual dumps,
+* the flight record (events + full-history counts) when a recorder is
+  passed,
+* canonical program ``signature``\\ s from ``repro.analysis`` (via
+  :func:`registry_signatures`) so XLA-wobble triage can tell "different
+  program" from "same program, different arithmetic" without retracing.
+
+Wired into ``tests/test_batched_harness._assert_outcomes_equal`` (every
+parity suite funnels through it) and the drift gates in
+``benchmarks/streaming_throughput.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Iterable, Sequence
+
+__all__ = ["PINNED_OUTCOME_FIELDS", "diff_outcomes", "dump_divergence",
+           "outcome_to_dict", "registry_signatures"]
+
+# Every Outcome field the determinism contract pins (everything except the
+# wall-clock select_seconds).  THE comparator field list — benchmarks/
+# common.py re-exports it as OUTCOME_FIELDS so the benchmark gates, the ci
+# smokes and the forensic diffs can never drift apart.
+PINNED_OUTCOME_FIELDS = ("explored", "recommended", "cno", "nex", "spent",
+                         "budget", "found_optimum", "trajectory",
+                         "spend_trajectory", "censored")
+
+_DEFAULT_OUT_DIR = "results/forensics"
+
+
+def outcome_to_dict(o) -> dict:
+    """JSON-safe dump of one Outcome's pinned fields (tuples -> lists)."""
+    d = {}
+    for f in PINNED_OUTCOME_FIELDS:
+        v = getattr(o, f, None)
+        d[f] = list(v) if isinstance(v, (tuple, set)) else v
+    return d
+
+
+def diff_outcomes(expected: Sequence, actual: Sequence,
+                  fields: Iterable[str] = PINNED_OUTCOME_FIELDS
+                  ) -> list[str]:
+    """Human-readable per-run field mismatches (empty list = bit-equal)."""
+    diffs = []
+    if len(expected) != len(actual):
+        diffs.append(f"length: expected {len(expected)} outcomes, "
+                     f"got {len(actual)}")
+    for i, (a, b) in enumerate(zip(expected, actual)):
+        for f in fields:
+            va, vb = getattr(a, f, None), getattr(b, f, None)
+            if va != vb:
+                diffs.append(f"run {i}: {f} differs "
+                             f"(expected {va!r}, actual {vb!r})")
+    return diffs
+
+
+def registry_signatures(names: Iterable[str]) -> dict[str, str]:
+    """Canonical ``repro.analysis`` signatures of registered programs.
+
+    ``names`` selects registry entries by exact name or name prefix (e.g.
+    ``"episode/segment"`` matches the native and bucketed segment bodies).
+    Unknown names are skipped; a program whose example fails to trace maps
+    to the error string instead — forensics must degrade, not raise.
+    """
+    from repro.analysis import registered_programs, signature
+    out: dict[str, str] = {}
+    wanted = tuple(names)
+    for spec in registered_programs():
+        if not any(spec.name == n or spec.name.startswith(n + "/")
+                   for n in wanted):
+            continue
+        try:
+            fn, example, _ = spec.build()
+            out[spec.name] = signature(fn, *example)
+        except Exception as e:          # pragma: no cover - degraded path
+            out[spec.name] = f"<signature failed: {type(e).__name__}: {e}>"
+    return out
+
+
+def dump_divergence(tag: str, *, expected: Sequence = (),
+                    actual: Sequence = (), recorder=None,
+                    signatures: dict[str, str] | Iterable[str] | None = None,
+                    context: dict | None = None,
+                    out_dir=_DEFAULT_OUT_DIR) -> pathlib.Path:
+    """Freeze one parity failure into ``<out_dir>/<tag>__NNN.json``.
+
+    ``expected``/``actual`` are the diverging Outcome sequences (diffs are
+    computed here); ``recorder`` contributes its event ring + counts;
+    ``signatures`` is either a ready ``{name: signature}`` mapping or an
+    iterable of registry names/prefixes to resolve via
+    :func:`registry_signatures`.  Returns the artifact path (NNN increments
+    so repeated failures under one tag never overwrite each other).
+    """
+    out_dir = pathlib.Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    artifact = {
+        "tag": tag,
+        "created_unix": time.time(),
+        "context": context or {},
+        "diffs": diff_outcomes(expected, actual),
+        "expected": [outcome_to_dict(o) for o in expected],
+        "actual": [outcome_to_dict(o) for o in actual],
+    }
+    if recorder is not None:
+        artifact["flight_record"] = [e.to_json() for e in recorder.events()]
+        artifact["event_counts"] = recorder.counts()
+        artifact["events_dropped"] = recorder.dropped
+    if signatures is not None:
+        if not isinstance(signatures, dict):
+            signatures = registry_signatures(signatures)
+        artifact["program_signatures"] = dict(signatures)
+    n = 0
+    while (path := out_dir / f"{tag}__{n:03d}.json").exists():
+        n += 1
+    path.write_text(json.dumps(artifact, indent=1, default=str))
+    return path

@@ -21,6 +21,14 @@ Layout:
 * ``metrics`` — :class:`ServiceMetrics`: throughput, lane occupancy, queue
   depth, per-request latency
 
+Observability rides along behind ``ServiceConfig.trace``: a
+``repro.obs.FlightRecorder`` records every lifecycle transition, segment
+dispatch and per-phase timing span (``StreamingTuner.flight_record()`` /
+``dump_trace()``; ``scripts/obs_report.py`` renders it).  The recorder
+watches the service, it never joins the decision path — trace-on replays
+trace-off bit for bit (the zero-perturbation rule, docs/ARCHITECTURE.md
+"Observability").
+
 Request lifecycle (docs/ARCHITECTURE.md has the state diagram):
 ``TuningTicket.cancel()`` drops unseated tickets at seating time and
 banks seated ones at the next segment boundary (resolving with

@@ -30,6 +30,7 @@ import time
 
 from repro.core.optimizer import Outcome, RunRequest
 from repro.jobs.tables import JobTable
+from repro.obs import FlightRecorder
 from repro.service.config import ServiceConfig
 from repro.service.engine import SegmentEngine, SegmentReport
 from repro.service.metrics import MetricsRecorder, ServiceMetrics
@@ -243,7 +244,13 @@ class StreamingTuner:
         jobs = [jobs] if isinstance(jobs, JobTable) else list(jobs)
         self.config = config or ServiceConfig()
         self.settings = settings
-        self._engine = SegmentEngine(jobs, settings, self.config)
+        # Flight recorder (repro.obs): every lifecycle transition + segment
+        # dispatch when config.trace is on; a disabled recorder's emit is a
+        # single attribute check (the zero-perturbation rule).
+        self.recorder = FlightRecorder(capacity=self.config.trace_capacity,
+                                       enabled=self.config.trace)
+        self._engine = SegmentEngine(jobs, settings, self.config,
+                                     recorder=self.recorder)
         self._admission = _AdmissionBuffer()
         self._metrics = MetricsRecorder(self.config.lane_slots)
         self._cond = threading.Condition()
@@ -298,6 +305,9 @@ class StreamingTuner:
             if (self.config.deadline_policy == "reject"
                     and floor is not None and deadline < floor):
                 self._metrics.record_deadline_reject()
+                self.recorder.emit("deadline_reject", job=request.job.name,
+                                   seed=request.seed, deadline_s=deadline,
+                                   floor_s=floor)
                 raise DeadlineUnmeetable(
                     f"deadline {deadline:.3g}s is below this service's "
                     f"observed resolution floor {floor:.3g}s")
@@ -330,6 +340,14 @@ class StreamingTuner:
             # always progresses toward resolution).
             self._check_deadline(deadline, "submit")
             self.pump()
+        # Emit submit+admit *before* the push: once the ticket is in the
+        # heap a racing pump may stage it, and its stage event must not
+        # outrun the admit event in the record.
+        self.recorder.emit("submit", ticket=ticket.id,
+                           job=request.job.name, seed=request.seed,
+                           priority=priority)
+        self.recorder.emit("admit", ticket=ticket.id,
+                           backlog=len(self._admission))
         self._admission.push(ticket)
         self._metrics.record_submit()
         with self._cond:
@@ -339,6 +357,9 @@ class StreamingTuner:
                 # ticket, so fail it here.
                 ticket._error = self._failure
                 ticket._event.set()
+                self.recorder.emit(
+                    "fail", ticket=ticket.id,
+                    error=type(self._failure).__name__)
             self._cond.notify_all()              # wake the worker
         return ticket
 
@@ -358,6 +379,7 @@ class StreamingTuner:
             if ticket._event.is_set():
                 return False
             ticket._cancel_requested = True
+            self.recorder.emit("cancel_request", ticket=ticket.id)
             self._cond.notify_all()          # wake the worker promptly
         return True
 
@@ -376,6 +398,8 @@ class StreamingTuner:
         ticket._cancelled = True
         ticket.resolved_at = time.perf_counter()
         self._metrics.record_cancel()
+        self.recorder.emit("cancel", ticket=ticket.id,
+                           had_partial=partial is not None)
         with self._cond:
             self._outstanding -= 1
             ticket._event.set()
@@ -430,6 +454,9 @@ class StreamingTuner:
                 self._engine.c_dim + self.config.lane_slots
                 - self._engine.in_flight(),
                 aging_rate=self.config.aging_rate)
+            for t in staged:
+                self.recorder.emit("stage", ticket=t.id,
+                                   priority=t.priority)
             # Boundary evictions: tombstoned seats always; plus at most one
             # preemption when the backlog is past the high-water mark.
             evict = [t for t in self._engine._slot_tickets
@@ -456,14 +483,21 @@ class StreamingTuner:
                      if not any(t is s for s in seated)])
                 raise
             self._admission.restage(leftover)
+            for t in leftover:
+                self.recorder.emit("restage", ticket=t.id)
             now = time.perf_counter()
             for ticket, outcome in resolved:
                 ticket._outcome = outcome
                 ticket.resolved_at = now
-                if ticket.deadline is not None and now > ticket.deadline:
+                missed = (ticket.deadline is not None
+                          and now > ticket.deadline)
+                if missed:
                     self._metrics.record_slo_miss()
                 self._metrics.record_resolve(now - ticket.submitted_at,
                                              outcome.nex)
+                self.recorder.emit("resolve", ticket=ticket.id,
+                                   latency_s=now - ticket.submitted_at,
+                                   nex=outcome.nex, slo_missed=missed)
                 ticket._event.set()
             for t in dropped:                 # tombstoned at seating time
                 self._finish_cancel(t)
@@ -478,6 +512,8 @@ class StreamingTuner:
                     t.preemptions += 1
                     t._pending_resume = True
                     self._metrics.record_preempt()
+                    self.recorder.emit("preempt", ticket=t.id,
+                                       preemptions=t.preemptions)
                     self._admission.push(t)
             if rep.resumed:
                 self._metrics.record_resume(rep.resumed)
@@ -587,6 +623,8 @@ class StreamingTuner:
                     if t is not None and not t._event.is_set():
                         t._error = e
                         t._event.set()
+                        self.recorder.emit("fail", ticket=t.id,
+                                           error=type(e).__name__)
                 return
 
     def __enter__(self) -> "StreamingTuner":
@@ -596,6 +634,16 @@ class StreamingTuner:
         self.stop()
 
     # ------------------------------------------------------------------ #
+    def flight_record(self):
+        """Snapshot of the flight recorder's event ring, oldest first
+        (empty unless ``config.trace`` is on).  ``repro.obs`` has the
+        validators; ``scripts/obs_report.py`` renders it."""
+        return self.recorder.events()
+
+    def dump_trace(self, path):
+        """Freeze the flight record to a JSONL file; returns the path."""
+        return self.recorder.dump_jsonl(path)
+
     def metrics(self) -> ServiceMetrics:
         return self._metrics.snapshot()
 

@@ -1,11 +1,12 @@
 """Streaming-service knobs: segment pacing, device queue sizing, admission.
 
-All knobs here are *host-side pacing and capacity* controls — none of them
-can change a run's Outcome (the determinism contract in
-docs/ARCHITECTURE.md: outcomes are bit-identical to the sequential oracle
-regardless of arrival order, seating order, or segment boundaries).  They
-trade device utilization against admission latency instead.  docs/KNOBS.md
-documents each field with tuning guidance.
+All knobs here are *host-side pacing, capacity and observability*
+controls — none of them can change a run's Outcome (the determinism
+contract in docs/ARCHITECTURE.md: outcomes are bit-identical to the
+sequential oracle regardless of arrival order, seating order, segment
+boundaries, or whether the flight recorder is on).  They trade device
+utilization against admission latency instead.  docs/KNOBS.md documents
+each field with tuning guidance.
 """
 
 from __future__ import annotations
@@ -77,6 +78,25 @@ class ServiceConfig:
     ``ServiceMetrics.slo_missed``.  Tickets without a deadline are never
     affected."""
 
+    trace: bool = False
+    """Flight recorder on/off (``repro.obs.FlightRecorder``): record every
+    lifecycle transition and segment dispatch plus per-phase timing spans.
+    Observability only — it cannot change a run's Outcome (the
+    zero-perturbation rule, docs/ARCHITECTURE.md "Observability"; the
+    obs-overhead benchmark gate pins the cost at <= 5% steps/sec)."""
+
+    trace_capacity: int = 4096
+    """Flight-recorder ring size: the most recent events kept for
+    ``StreamingTuner.flight_record()``/``dump_trace()``.  Per-kind counts
+    accrue over the full history regardless, so counter-balance checks
+    survive ring eviction."""
+
+    trace_profiler: bool = False
+    """Additionally wrap each segment phase (seat/inject/dispatch/
+    device_block/harvest) in a ``jax.profiler.TraceAnnotation`` named
+    scope, so captured device traces show the phases by name.  Requires
+    ``trace=True``."""
+
     bucket: tuple[int, int, int] | None = None
     """Geometry bucket ``(m, f, t)`` the registered jobs' spaces are
     right-padded into (see ``repro.core.space.GeometryBucket``).  None =
@@ -106,6 +126,11 @@ class ServiceConfig:
             raise ValueError("aging_rate must be >= 0")
         if self.deadline_policy not in ("reject", "admit"):
             raise ValueError("deadline_policy must be 'reject' or 'admit'")
+        if self.trace_capacity < 1:
+            raise ValueError("trace_capacity must be >= 1")
+        if self.trace_profiler and not self.trace:
+            raise ValueError("trace_profiler requires trace=True (profiler "
+                             "scopes annotate the recorded spans)")
         if self.bucket is not None:
             if len(self.bucket) != 3 or any(int(w) < 1 for w in self.bucket):
                 raise ValueError("bucket must be three positive widths "

@@ -37,6 +37,7 @@ from repro.core.optimizer import (_CARRY_TIMEOUT_KEYS, _episode_segment,
                                   _fresh_slot_carry, _init_run_states,
                                   _queue_spaces, _queue_tables,
                                   _reconstruct_outcome, _resolve_bucket)
+from repro.obs import FlightRecorder, phase_span
 
 if TYPE_CHECKING:  # service <-> jobs import hygiene mirrors core's
     from repro.core.optimizer import Outcome
@@ -87,7 +88,7 @@ class SegmentEngine:
     """
 
     def __init__(self, jobs: list[JobTable], settings,
-                 config: ServiceConfig):
+                 config: ServiceConfig, recorder: FlightRecorder | None = None):
         if not jobs:
             raise ValueError("register at least one JobTable")
         if settings.policy == "rnd":
@@ -123,6 +124,13 @@ class SegmentEngine:
         # (same estimator as run_queue_batched's, accrued across segments).
         self._wall = 0.0
         self._steps = 0
+        # Observability (zero-perturbation: the recorder watches the
+        # handshake, it never feeds the traced program).  A disabled
+        # recorder makes every emit/span a no-op.
+        self._recorder = (recorder if recorder is not None
+                          else FlightRecorder(enabled=False))
+        self._profiler = config.trace_profiler
+        self._segment_seq = 0
 
     # ------------------------------------------------------------------ #
     def job_index(self, job) -> int:
@@ -178,6 +186,11 @@ class SegmentEngine:
         for i, t in zip(slots, seated):
             self._slot_tickets[i] = t
             self._slot_jids[i] = t.jid
+            self._recorder.emit("seat", ticket=t.id, slot=int(i),
+                                segment=self._segment_seq, via="host")
+            if t._pending_resume:
+                self._recorder.emit("resume", ticket=t.id, slot=int(i),
+                                    segment=self._segment_seq)
         return staged[n:], n
 
     def _queue_arrays(self, staged: list) -> dict:
@@ -224,8 +237,10 @@ class SegmentEngine:
         dropped = [t for t in staged if t._cancel_requested]
         staged = [t for t in staged if not t._cancel_requested]
         self.prepare(staged)
+        rec, seg, prof = self._recorder, self._segment_seq, self._profiler
         t0 = time.perf_counter()
-        staged_q, seated = self._seat(staged)
+        with phase_span(rec, "seat", segment=seg, profiler=prof):
+            staged_q, seated = self._seat(staged)
         if len(staged_q) > self.c_dim:
             raise ValueError(f"staged {len(staged_q)} queue rows but device "
                              f"capacity is {self.c_dim}")
@@ -253,7 +268,10 @@ class SegmentEngine:
                 ev_rows[int(i)] = {f: host[f][i:i + 1].copy()
                                    for f in fields}
 
-        queue = self._queue_arrays(staged_q)
+        with phase_span(rec, "inject", segment=seg, profiler=prof):
+            queue = self._queue_arrays(staged_q)
+            for j, t in enumerate(staged_q):
+                rec.emit("inject", ticket=t.id, segment=seg, row=j)
         if self._single:
             job_ids = None
         else:
@@ -261,11 +279,20 @@ class SegmentEngine:
                 [self._slot_jids,
                  np.array([t.jid for t in staged_q], np.int32),
                  np.zeros(self.c_dim - len(staged_q), np.int32)]))
-        carry, report = jax.block_until_ready(_episode_segment(
-            self._carry, queue, np.int32(len(staged_q)), jnp.asarray(ev),
-            np.int32(low_water), np.int32(step_quota), job_ids,
-            self._cost, self._runtime if self.settings.timeout else None,
-            *self._space, self._valid, self._u, self._tmax, self.settings))
+        # dispatch = host-side trace/compile + launch; device_block = the
+        # wait for the device to finish.  Splitting them is what lets the
+        # report tell compile stalls from slow segments.
+        with phase_span(rec, "dispatch", segment=seg, profiler=prof,
+                        compiles=True):
+            carry, report = _episode_segment(
+                self._carry, queue, np.int32(len(staged_q)), jnp.asarray(ev),
+                np.int32(low_water), np.int32(step_quota), job_ids,
+                self._cost,
+                self._runtime if self.settings.timeout else None,
+                *self._space, self._valid, self._u, self._tmax,
+                self.settings)
+        with phase_span(rec, "device_block", segment=seg, profiler=prof):
+            carry, report = jax.block_until_ready((carry, report))
         wall = time.perf_counter() - t0
         report = {k: np.asarray(v) for k, v in report.items()}
 
@@ -276,40 +303,52 @@ class SegmentEngine:
 
         # Harvest banked runs: out row i < L is the run seated in slot i at
         # segment start, row L + j the run injected as queue row j.
-        done = np.asarray(report["out_done"])
-        rid = np.asarray(carry["rid"])
-        active = np.asarray(carry["active"])
-        consumed = int(carry["qhead"])
-        row_ticket = dict(enumerate(self._slot_tickets))
-        for j, t in enumerate(staged_q):
-            row_ticket[self.l_dim + j] = t
-        resolved = []
-        for r in np.nonzero(done)[0]:
-            t = row_ticket[int(r)]
-            resolved.append((t, self._outcome_from_row(t, report, int(r),
+        with phase_span(rec, "harvest", segment=seg, profiler=prof):
+            done = np.asarray(report["out_done"])
+            rid = np.asarray(carry["rid"])
+            active = np.asarray(carry["active"])
+            consumed = int(carry["qhead"])
+            # Queue rows the device consumed became seats mid-segment; the
+            # host only learns it here, so the seat (and any resume) event
+            # lands at harvest time — still before the row's harvest event.
+            for t in staged_q[:consumed]:
+                rec.emit("seat", ticket=t.id, segment=seg, via="queue")
+                if t._pending_resume:
+                    rec.emit("resume", ticket=t.id, segment=seg)
+            row_ticket = dict(enumerate(self._slot_tickets))
+            for j, t in enumerate(staged_q):
+                row_ticket[self.l_dim + j] = t
+            resolved = []
+            for r in np.nonzero(done)[0]:
+                t = row_ticket[int(r)]
+                resolved.append((t, self._outcome_from_row(t, report, int(r),
+                                                           sel_s)))
+                rec.emit("harvest", ticket=t.id, segment=seg, row=int(r),
+                         nex=int(report["out_nexp"][r]))
+
+            # Evicted seats banked into their own out row (rid == slot at
+            # segment start; out_done stays False there, so the loop above
+            # never double-harvests them).
+            evicted = []
+            for i in ev_slots:
+                t = row_ticket[int(i)]
+                evicted.append((t, ev_rows[int(i)],
+                                self._outcome_from_row(t, report, int(i),
                                                        sel_s)))
+                rec.emit("evict", ticket=t.id, slot=int(i), segment=seg,
+                         cancel=bool(t._cancel_requested))
 
-        # Evicted seats banked into their own out row (rid == slot at
-        # segment start; out_done stays False there, so the loop above
-        # never double-harvests them).
-        evicted = []
-        for i in ev_slots:
-            t = row_ticket[int(i)]
-            evicted.append((t, ev_rows[int(i)],
-                            self._outcome_from_row(t, report, int(i),
-                                                   sel_s)))
-
-        # Re-key in-flight runs to their seat and recycle the queue rows.
-        tickets = [row_ticket[int(rid[i])] if active[i] else None
-                   for i in range(self.l_dim)]
-        self._slot_tickets = tickets
-        self._slot_jids = np.array([t.jid if t else 0 for t in tickets],
-                                   np.int32)
-        carry["rid"] = jnp.where(jnp.asarray(active),
-                                 jnp.arange(self.l_dim, dtype=jnp.int32),
-                                 jnp.int32(-1))
-        carry["qhead"] = jnp.int32(0)
-        self._carry = carry
+            # Re-key in-flight runs to their seat and recycle queue rows.
+            tickets = [row_ticket[int(rid[i])] if active[i] else None
+                       for i in range(self.l_dim)]
+            self._slot_tickets = tickets
+            self._slot_jids = np.array([t.jid if t else 0 for t in tickets],
+                                       np.int32)
+            carry["rid"] = jnp.where(jnp.asarray(active),
+                                     jnp.arange(self.l_dim, dtype=jnp.int32),
+                                     jnp.int32(-1))
+            carry["qhead"] = jnp.int32(0)
+            self._carry = carry
 
         leftover = staged_q[consumed:]
         started = staged[:seated] + staged_q[:consumed]
@@ -324,6 +363,12 @@ class SegmentEngine:
             injected=len(staged_q), consumed=consumed,
             completed=len(resolved), in_flight=self.in_flight(),
             evicted=len(evicted), resumed=resumed, dropped=len(dropped))
+        rec.emit("dispatch", segment=seg, steps=steps,
+                 busy=int(report["busy"]), seated=seated,
+                 injected=len(staged_q), consumed=consumed,
+                 completed=len(resolved), evicted=len(evicted),
+                 in_flight=rep.in_flight, wall_s=wall)
+        self._segment_seq += 1
         return resolved, leftover, dropped, evicted, rep
 
     def partial_outcome(self, t) -> Outcome | None:

@@ -51,6 +51,15 @@ class ServiceMetrics:
     latency_mean_s: float    # submit -> outcome resolution (full history)
     latency_p50_s: float     # percentiles over the recent window
     latency_p95_s: float
+    latency_p99_s: float
+    latency_floor_s: float   # fastest resolution EVER (survives reset();
+                             # 0.0 before the first resolution) — the
+                             # deadline-admission bound
+
+    def to_dict(self) -> dict:
+        """Field -> value mapping (JSON-safe) — what the Prometheus
+        renderer (``repro.obs.metrics_to_prometheus``) iterates."""
+        return dataclasses.asdict(self)
 
 
 class MetricsRecorder:
@@ -68,11 +77,19 @@ class MetricsRecorder:
         self._lane_slots = lane_slots
         self._latency_window = latency_window
         self._lock = threading.Lock()
+        self._latency_min: float | None = None
         self.reset()
 
     def reset(self) -> None:
-        """Zero all counters (e.g. after a warmup pass, so benchmark gates
-        measure steady state rather than compile time)."""
+        """Zero the window counters (e.g. after a warmup pass, so benchmark
+        gates measure steady state rather than compile time).
+
+        The latency *floor* deliberately survives: it is the deadline-
+        admission bound (:meth:`latency_floor`), a property of the service's
+        lifetime, not of a metrics window.  Resetting it would make
+        ``deadline_policy="reject"`` silently admit every unmeetable
+        deadline until a post-reset resolution re-primed it
+        (``tests/test_service_metrics.py`` pins this)."""
         with self._lock:
             self._segments = 0
             self._steps = 0
@@ -89,7 +106,6 @@ class MetricsRecorder:
             self._depth_sum = 0
             self._depth_max = 0
             self._latency_sum = 0.0
-            self._latency_min: float | None = None
             self._latencies: collections.deque[float] = collections.deque(
                 maxlen=self._latency_window)
 
@@ -183,4 +199,8 @@ class MetricsRecorder:
                 latency_p50_s=(float(np.percentile(lat, 50))
                                if lat.size else 0.0),
                 latency_p95_s=(float(np.percentile(lat, 95))
-                               if lat.size else 0.0))
+                               if lat.size else 0.0),
+                latency_p99_s=(float(np.percentile(lat, 99))
+                               if lat.size else 0.0),
+                latency_floor_s=(self._latency_min
+                                 if self._latency_min is not None else 0.0))

@@ -26,18 +26,28 @@ POLICIES = [
 ]
 
 
-def _assert_outcomes_equal(seq, bat):
-    assert len(seq) == len(bat)
+def _assert_outcomes_equal(seq, bat, recorder=None, tag="parity"):
+    """The shared parity comparator: every suite that pins bit-equality
+    against the sequential oracle funnels through here.  On divergence it
+    freezes the evidence (field diffs, the flight record if a recorder is
+    passed) into ``results/forensics/<tag>__NNN.json`` via
+    ``repro.obs.dump_divergence`` before failing — the artifact survives
+    the rerun-with-prints cycle the failure would otherwise trigger."""
+    from repro.obs import PINNED_OUTCOME_FIELDS, diff_outcomes, \
+        dump_divergence
+    diffs = diff_outcomes(seq, bat)
+    if diffs:
+        path = dump_divergence(tag, expected=seq, actual=bat,
+                               recorder=recorder)
+        raise AssertionError(
+            f"outcome parity broken ({len(diffs)} diffs; forensic artifact "
+            f"at {path}):\n  " + "\n  ".join(diffs[:20]))
+    # diff_outcomes covers every pinned field; keep the explicit loop as a
+    # belt-and-braces guard that the pin list itself has not shrunk.
+    assert set(PINNED_OUTCOME_FIELDS) >= {
+        "explored", "recommended", "cno", "nex", "spent", "budget",
+        "trajectory", "found_optimum", "censored", "spend_trajectory"}
     for i, (a, b) in enumerate(zip(seq, bat)):
-        assert a.explored == b.explored, f"run {i}: exploration order differs"
-        assert a.recommended == b.recommended, f"run {i}"
-        assert a.cno == b.cno, f"run {i}"
-        assert a.nex == b.nex, f"run {i}"
-        assert a.spent == b.spent, f"run {i}"
-        assert a.budget == b.budget, f"run {i}"
-        assert a.trajectory == b.trajectory, f"run {i}"
-        assert a.found_optimum == b.found_optimum, f"run {i}"
-        assert a.censored == b.censored, f"run {i}: censored sets differ"
         assert a.spend_trajectory == b.spend_trajectory, f"run {i}"
 
 

@@ -10,7 +10,11 @@ lifecycle contract —
    well-formed partial Outcome: None, or an exact prefix of its oracle;
 3. the engine returns to all-idle (no slot leaks);
 4. metrics counters balance: submitted == resolved + cancelled and
-   nothing stays outstanding.
+   nothing stays outstanding;
+5. the flight record (the fuzzer runs with ``trace=True``) forms a valid
+   per-ticket lifecycle state machine — no seat without admit, no resolve
+   after cancel, nothing after a terminal event — and its full-history
+   event counts balance with the ``ServiceMetrics`` counters.
 
 Runs under real hypothesis when installed; under the deterministic
 ``_hypothesis_fallback`` shim otherwise, or when REPRO_NO_HYPOTHESIS is
@@ -37,6 +41,7 @@ except ImportError:          # no-network CI: deterministic fallback
     from _hypothesis_fallback import given, settings, st
 
 from repro.core import RunRequest, Settings, run_queue
+from repro.obs import validate_lifecycle, validate_trace
 from repro.service import ServiceConfig, StreamingTuner, TicketCancelled
 from tests.test_batched_harness import (_assert_outcomes_equal,
                                         _distinct_geometry_jobs)
@@ -74,7 +79,7 @@ def _run_schedule(rng: np.random.Generator, timeout: bool) -> None:
         step_quota=int(rng.integers(2, 6)),
         high_water=0 if rng.random() < 0.5 else None,
         aging_rate=float(rng.choice([0.0, 1.0])),
-        deadline_policy="admit")
+        deadline_policy="admit", trace=True)
     svc = StreamingTuner(_JOBS, _settings(timeout), cfg)
 
     picks = rng.choice(len(_REQUESTS), size=int(rng.integers(3, 7)),
@@ -135,6 +140,23 @@ def _run_schedule(rng: np.random.Generator, timeout: bool) -> None:
     assert m.outstanding == 0
     assert m.resolved == len(done)
     assert m.resumed <= m.preempted
+
+    # 5) the flight record is a valid per-ticket state machine (no seat
+    #    without admit, no resolve after cancel, nothing after a terminal;
+    #    every ticket terminal after drain) and its full-history counts
+    #    balance with the ServiceMetrics counters event for event
+    events = svc.flight_record()
+    assert validate_trace(events) == []
+    assert validate_lifecycle(events, require_terminal=True) == []
+    counts = svc.recorder.counts()
+    assert counts.get("submit", 0) == m.submitted
+    assert counts.get("resolve", 0) == m.resolved == counts.get("harvest", 0)
+    assert counts.get("cancel", 0) == m.cancelled
+    assert counts.get("preempt", 0) == m.preempted
+    assert counts.get("resume", 0) == m.resumed
+    assert counts.get("deadline_reject", 0) == m.deadline_rejected
+    assert sum(e.data.get("slo_missed", False) for e in events
+               if e.kind == "resolve") == m.slo_missed
 
 
 @settings(max_examples=6, deadline=None)

@@ -96,6 +96,41 @@ def test_reset_zeroes_everything():
     assert m.latency_p95_s == 0.0 and m.serve_seconds == 0.0
 
 
+def test_latency_floor_survives_reset():
+    """The floor is the deadline-admission bound — a lifetime property,
+    not a window counter.  If reset() dropped it, a post-warmup
+    ``reset_metrics()`` would make ``deadline_policy="reject"`` silently
+    admit every unmeetable deadline until the next resolution re-primed
+    it."""
+    rec = MetricsRecorder(lane_slots=1)
+    rec.record_submit()
+    rec.record_resolve(0.25, nex=3)
+    assert rec.latency_floor() == pytest.approx(0.25)
+    rec.reset()
+    assert rec.latency_floor() == pytest.approx(0.25)
+    m = rec.snapshot()
+    assert m.resolved == 0                       # window did reset
+    assert m.latency_floor_s == pytest.approx(0.25)
+    rec.record_submit()
+    rec.record_resolve(0.1, nex=1)               # a faster run lowers it
+    assert rec.latency_floor() == pytest.approx(0.1)
+
+
+def test_p99_and_floor_in_snapshot():
+    rec = MetricsRecorder(lane_slots=1)
+    lat = [float(i) for i in range(1, 101)]
+    for v in lat:
+        rec.record_submit()
+        rec.record_resolve(v, nex=1)
+    m = rec.snapshot()
+    assert m.latency_p99_s == pytest.approx(np.percentile(lat, 99))
+    assert m.latency_p95_s <= m.latency_p99_s
+    assert m.latency_floor_s == pytest.approx(1.0)
+    d = m.to_dict()
+    assert d["latency_p99_s"] == m.latency_p99_s
+    assert set(d) == set(m.__dataclass_fields__)
+
+
 def test_zero_wall_segments_do_not_divide_by_zero():
     """Segments can complete in ~0 wall seconds on mocked clocks; rate
     denominators must degrade to zero, not raise."""
