@@ -45,6 +45,15 @@ the flight recorder ON must hold >= 0.95x the trace-off steps/sec
 gate) and replay it bit for bit.  Any drift gate in this file that trips
 freezes its evidence via ``repro.obs.dump_divergence`` before reporting.
 
+A seventh section gates **sharded serving** (ISSUE-10): the bursty trace
+through a 2-shard fleet (one resident engine per device, segments
+overlapping across devices) must hold >= 1.6x the single-shard aggregate
+steps/sec with zero outcome drift — shard count is capacity, never a
+result change.  Where fewer than 2 devices or 2 host cores exist nothing
+can physically overlap, so the timing gate is skipped with a reason and
+the drift check runs alone (the hard parity gate also lives in
+``scripts/ci_sharded_smoke.py``).
+
 Measured numbers land in ``results/BENCH_streaming.json`` alongside the
 gate booleans printed as CSV.
 """
@@ -351,6 +360,89 @@ def obs_overhead_section(quick, out):
     csv_line("streaming", "obs_overhead_le_5pct", ratio >= 0.95)
 
 
+def sharded_section(quick, out):
+    """Sharded-serving scaling gate (ISSUE-10): the bursty trace through a
+    2-shard fleet — one resident engine per device, segments overlapping
+    across devices — must hold **>= 1.6x** the single-shard aggregate
+    steps/sec, with zero outcome drift vs the 1-shard run (shard count is
+    pure capacity; the determinism contract).
+
+    The gate needs two things to overlap: >= 2 JAX devices AND >= 2 host
+    cores (virtual CPU devices on a single core time-slice instead of
+    overlapping — measuring "scaling" there is measuring thread
+    contention).  Where either is missing the gate is skipped with a
+    reason and the drift check — which needs no parallel hardware — runs
+    on a short 2-shard trace instead."""
+    import os
+
+    import jax
+
+    jobs = [synthetic_job(95 + k, **SPACE) for k in range(2)]
+    s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
+    n_devices = len(jax.devices())
+    n_cores = os.cpu_count() or 1
+
+    def run_shards(num_shards, bursts, warm_bursts):
+        cfg = ServiceConfig(lane_slots=LANE_SLOTS,
+                            queue_capacity=4 * LANE_SLOTS, step_quota=4,
+                            num_shards=num_shards)
+        svc = StreamingTuner(jobs, s, cfg)
+        _run_stream(svc, warm_bursts)             # warm per-device compiles
+        svc.reset_metrics()
+        t0 = time.perf_counter()
+        outs = _run_stream(svc, bursts)
+        wall = time.perf_counter() - t0
+        return sum(o.nex for o in outs) / wall, outs, svc
+
+    if n_devices < 2 or n_cores < 2:
+        bursts = _trace(jobs, 2, seed0=96001)
+        warm = _trace(jobs, 1, seed0=97001)
+        _, outs1, _ = run_shards(1, bursts, warm)
+        _, outs2, svc2 = run_shards(2, bursts, warm)
+        drift = sum(not outcomes_equal(a, b)
+                    for a, b in zip(outs1, outs2))
+        if drift:
+            dump_divergence("sharded_drift", expected=outs1, actual=outs2,
+                            recorder=svc2.recorder,
+                            context={"bench": "streaming_throughput",
+                                     "section": "sharded"})
+        reason = (f"skipped (devices={n_devices}, cores={n_cores}: "
+                  "nothing overlaps; shard-parity checked instead)")
+        out["sharded"] = {"skipped": reason, "drifting_runs": drift,
+                          "devices": n_devices, "cores": n_cores}
+        csv_line("streaming", "sharded_drifting_runs", drift)
+        csv_line("streaming", "sharded_steps_per_s", reason)
+        csv_line("streaming", "sharded_scaling_ge_1.6x", reason)
+        return
+
+    n_bursts = 4 if quick else 8
+    bursts = _trace(jobs, n_bursts, seed0=96001)
+    warm = _trace(jobs, 2, seed0=97001)
+    sps1, outs1, _ = run_shards(1, bursts, warm)
+    sps2, outs2, svc2 = run_shards(2, bursts, warm)
+    drift = sum(not outcomes_equal(a, b) for a, b in zip(outs1, outs2))
+    if drift:
+        dump_divergence("sharded_drift", expected=outs1, actual=outs2,
+                        recorder=svc2.recorder,
+                        context={"bench": "streaming_throughput",
+                                 "section": "sharded"})
+    scaling = sps2 / sps1
+    per = svc2.shard_metrics()
+    out["sharded"] = {
+        "devices": n_devices, "cores": n_cores,
+        "requests": sum(len(b) for b in bursts),
+        "steps_per_s_1shard": sps1, "steps_per_s_2shard": sps2,
+        "scaling": scaling, "drifting_runs": drift,
+        "per_shard_submitted": [m.submitted for m in per],
+        "per_shard_occupancy": [m.lane_occupancy for m in per],
+    }
+    csv_line("streaming", "sharded_drifting_runs", drift)
+    csv_line("streaming", "sharded_steps_per_s_1shard", round(sps1, 2))
+    csv_line("streaming", "sharded_steps_per_s_2shard", round(sps2, 2))
+    csv_line("streaming", "sharded_scaling", round(scaling, 2))
+    csv_line("streaming", "sharded_scaling_ge_1.6x", scaling >= 1.6)
+
+
 def main(n_runs=20, quick=False):
     jobs = [synthetic_job(30 + k, **SPACE) for k in range(2)]
     s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen")
@@ -410,5 +502,6 @@ def main(n_runs=20, quick=False):
     fused_selector_section(quick, out)
     lifecycle_section(quick, out)
     obs_overhead_section(quick, out)
+    sharded_section(quick, out)
     write_json("streaming", out)
     write_bench_json("streaming", out)

@@ -45,6 +45,12 @@ python -m compileall -q src tests examples benchmarks scripts
 # interpret parity, speedup floor).
 python scripts/ci_smoke.py
 
+# Sharded-serving smoke (hard gate): 4 virtual devices, one bursty
+# mixed-geometry trace with timeout censoring on, byte parity vs the
+# sequential oracle at num_shards 1/2/4, validated shard-tagged traces,
+# balanced per-shard counters, no slot leaks.
+python scripts/ci_sharded_smoke.py
+
 # Kernel microbench smoke: times ref vs Pallas through the real dispatch
 # (off-accelerator the Pallas rows are skipped with a reason, never
 # silently re-labeled ref timings).

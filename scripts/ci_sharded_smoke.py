@@ -1,0 +1,114 @@
+"""Sharded-serving CI smoke: shard-count invariance as a hard gate.
+
+Forces 4 virtual host devices (the flag must land before jax imports),
+then drives one bursty arrival trace — mixed geometry, mixed budgets,
+timeout censoring ON, mid-episode submits — through the streaming
+service at ``num_shards`` 1, 2 and 4.  Exits nonzero if ANY of:
+
+* any ticket's Outcome (``spend_trajectory`` included) drifts from the
+  sequential ``run_queue`` oracle at any shard count — shard count is
+  placement capacity, never a result change;
+* censoring was not exercised (the trace would not be testing the
+  timeout path);
+* the merged shard-tagged flight record fails the schema or lifecycle
+  validators — which includes the sticky-affinity check: a ticket
+  observed on two shards is cross-shard leakage;
+* per-shard counters do not balance (submitted == resolved + cancelled,
+  outstanding == 0 on every shard) or do not sum to the aggregate;
+* any shard's engine leaks a lane slot after drain.
+
+Run from anywhere:
+
+  python scripts/ci_sharded_smoke.py
+"""
+
+import os
+import pathlib
+import sys
+
+# 4 virtual devices BEFORE jax import; appended last so it wins.
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4"
+                           ).strip()
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+import jax  # noqa: E402
+
+from benchmarks.common import outcomes_equal  # noqa: E402
+from repro.core import RunRequest, Settings, run_queue  # noqa: E402
+from repro.jobs import synthetic_job  # noqa: E402
+from repro.obs import validate_lifecycle, validate_trace  # noqa: E402
+from repro.service import ServiceConfig, StreamingTuner  # noqa: E402
+
+failures = 0
+
+n_dev = len(jax.devices())
+print(f"ci-sharded: {n_dev} device(s): "
+      f"{[d.platform for d in jax.devices()]}")
+if n_dev != 4:
+    print("ci-sharded: expected 4 virtual devices "
+          "(--xla_force_host_platform_device_count did not take)")
+    failures += 1
+
+# Mixed-geometry fleet (mirrors scripts/ci_smoke.py) on a bursty trace
+# with timeout censoring on: the hardest program the service compiles.
+jobs = [synthetic_job(0, n_a=6, n_b=4, name="g24"),
+        synthetic_job(1, n_a=5, n_b=3, name="g15"),
+        synthetic_job(2, n_a=4, n_b=8, name="g32")]
+s = Settings(policy="lynceus", la=1, k_gh=3, refit="frozen", timeout=True)
+reqs = [RunRequest(jobs[r % 3], seed=700 + r,
+                   budget_b=4.0 if r % 3 == 0 else 1.5) for r in range(8)]
+oracle = run_queue(reqs, s)
+if sum(len(o.censored) for o in oracle) == 0:
+    print("ci-sharded: censoring not exercised")
+    failures += 1
+
+for num_shards in (1, 2, 4):
+    cfg = ServiceConfig(lane_slots=2, queue_capacity=3, step_quota=5,
+                        num_shards=num_shards, trace=True)
+    svc = StreamingTuner(jobs, s, cfg)
+    tix = [svc.submit(q) for q in reqs[:4]]
+    svc.pump()                           # rest land mid-episode
+    tix += [svc.submit(q) for q in reqs[4:]]
+    svc.drain()
+
+    bad = sum(not outcomes_equal(a, t.result())
+              for a, t in zip(oracle, tix))
+    events = svc.flight_record()
+    issues = (validate_trace(events)
+              + validate_lifecycle(events, require_terminal=True))
+    per = svc.shard_metrics()
+    m = svc.metrics()
+    imbalance = 0
+    for d, ms in enumerate(per):
+        if ms.submitted != ms.resolved + ms.cancelled or ms.outstanding:
+            print(f"ci-sharded shards={num_shards}: shard {d} counters "
+                  f"do not balance ({ms.submitted} != {ms.resolved} + "
+                  f"{ms.cancelled}, outstanding {ms.outstanding})")
+            imbalance += 1
+    for f in ("submitted", "resolved", "cancelled", "preempted",
+              "resumed", "slo_missed", "deadline_rejected"):
+        if getattr(m, f) != sum(getattr(ms, f) for ms in per):
+            print(f"ci-sharded shards={num_shards}: aggregate {f} != "
+                  "sum of per-shard values")
+            imbalance += 1
+    leaks = sum(eng.in_flight() != 0 for eng in svc._engines.shards)
+    used = sorted({t.shard for t in tix})
+    print(f"ci-sharded shards={num_shards}: {bad}/{len(reqs)} mismatching "
+          f"runs, {len(issues)} trace issue(s), {imbalance} counter "
+          f"imbalance(s), {leaks} slot leak(s); tickets placed on shards "
+          f"{used}")
+    for msg in issues[:10]:
+        print(f"  {msg}")
+    failures += bad + len(issues) + imbalance + leaks
+    if num_shards > 1 and len(used) < 2:
+        print(f"ci-sharded shards={num_shards}: placement never left "
+              "shard 0 — load balancing not exercised")
+        failures += 1
+
+if failures:
+    sys.exit(f"ci-sharded: {failures} failure(s)")
+print("ci-sharded OK")

@@ -179,7 +179,7 @@ def _episode_lockstep(timeout: bool):
     return build
 
 
-def _segment(bucketed: bool):
+def _segment(bucketed: bool, sharded: bool = False):
     def build():
         from repro.core import lookahead, optimizer
         space = _native_space()
@@ -221,13 +221,39 @@ def _segment(bucketed: bool):
         # boundary) that must never introduce recompiles or new reductions.
         evict = jnp.zeros((l_dim,), bool)
         if bucketed:
+            if sharded:
+                # The sharded service's per-shard entry point: the SAME
+                # segment program on inputs committed to a shard's device
+                # via the seeded shard.api rule table.  Tracing is
+                # placement-blind, so this jaxpr must be identical to the
+                # unsharded bucketed one — registering it pins that the
+                # sharded path can never grow unaudited shard-local math.
+                # shard_shardings is modulo-mapped, so the spec traces on
+                # any device count (including the 1-device lint env).
+                from repro.service.placement import (shard_segment,
+                                                     shard_shardings)
+                put = lambda x: jax.device_put(x, shard_shardings(2)[-1])
+                carry = {k: put(v) for k, v in carry.items()}
+                queue = {k: put(v) for k, v in queue.items()}
+                evict, valid = put(evict), put(valid)
+                job_ids, cost = put(job_ids), put(cost)
+                pts, left, thr = put(pts), put(left), put(thr)
+                u, t_max = put(u), put(t_max)
             example = (carry, queue, jnp.int32(c_dim), evict, valid)
 
-            def fn(carry_, queue_, qtail, evict_, valid_):
-                return optimizer._episode_segment(
-                    carry_, queue_, qtail, evict_, np.int32(0), np.int32(4),
-                    job_ids, cost, runtime, pts, left, thr, valid_, u,
-                    t_max, s)
+            if sharded:
+                def fn(carry_, queue_, qtail, evict_, valid_):
+                    from repro.service.placement import shard_segment
+                    return shard_segment(
+                        carry_, queue_, qtail, evict_, np.int32(0),
+                        np.int32(4), job_ids, cost, runtime, pts, left,
+                        thr, valid_, u, t_max, s)
+            else:
+                def fn(carry_, queue_, qtail, evict_, valid_):
+                    return optimizer._episode_segment(
+                        carry_, queue_, qtail, evict_, np.int32(0),
+                        np.int32(4), job_ids, cost, runtime, pts, left,
+                        thr, valid_, u, t_max, s)
 
             sel = lambda p, leaf: _mask_select(p, leaf) or leaf is valid
             rules = default_rules(m=m,
@@ -337,6 +363,11 @@ def registered_programs() -> list[ProgramSpec]:
     specs.append(ProgramSpec(
         "episode/segment/bucketed", _segment(bucketed=True),
         "lane-compacting segment body, geometry-bucketed mixed queue"))
+    specs.append(ProgramSpec(
+        "episode/segment/sharded",
+        _segment(bucketed=True, sharded=True),
+        "per-shard segment entry point: same bucketed program, inputs "
+        "committed to a shard device (placement, not a program change)"))
     for k in _KERNELS:
         specs.append(ProgramSpec(
             f"kernel/{k}/ref", _kernel(k, "ref"),

@@ -618,10 +618,17 @@ _STEPS_UNBOUNDED = np.int32(np.iinfo(np.int32).max)
 _CARRY_TIMEOUT_KEYS = ("cens", "cexpl", "bexpl")
 
 
-def _fresh_slot_carry(l_dim: int, m_dim: int, s: lookahead.Settings) -> dict:
+def _fresh_slot_carry(l_dim: int, m_dim: int, s: lookahead.Settings,
+                      device=None) -> dict:
     """All-idle slot carry for a segment-driven episode: every seat empty
     (``rid = -1``, inactive), queue head at 0.  The streaming service starts
-    from this and keeps the carry device-resident between segments."""
+    from this and keeps the carry device-resident between segments.
+
+    ``device`` (a ``jax.Device`` or ``Sharding``) commits the carry there —
+    how the sharded service births each shard's resident state on its own
+    device (``service/placement.py``).  None keeps the default-device,
+    uncommitted behaviour of the single-engine service.  Placement cannot
+    change the carry's values, only where they live."""
     carry = {"key": jnp.zeros((l_dim, 2), jnp.uint32),
              "y": jnp.zeros((l_dim, m_dim), jnp.float32),
              "mask": jnp.zeros((l_dim, m_dim), bool),
@@ -635,6 +642,8 @@ def _fresh_slot_carry(l_dim: int, m_dim: int, s: lookahead.Settings) -> dict:
         carry["cens"] = jnp.zeros((l_dim, m_dim), bool)
         carry["cexpl"] = jnp.zeros((l_dim, m_dim), bool)
         carry["bexpl"] = jnp.zeros((l_dim, m_dim), jnp.float32)
+    if device is not None:
+        carry = {k: jax.device_put(v, device) for k, v in carry.items()}
     return carry
 
 

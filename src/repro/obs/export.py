@@ -113,6 +113,12 @@ def validate_trace(events: list[Event]) -> list[str]:
                       "cancel_request", "cancel", "harvest", "resolve",
                       "fail") and e.ticket is None:
             issues.append(f"{where}: {e.kind} without a ticket id")
+        shard = e.data.get("shard")
+        if shard is not None and not (isinstance(shard, int)
+                                      and not isinstance(shard, bool)
+                                      and shard >= 0):
+            issues.append(f"{where}: shard must be a nonnegative int, "
+                          f"got {shard!r}")
     return issues
 
 
@@ -154,11 +160,18 @@ def validate_lifecycle(events: list[Event],
     event (so in particular no ``resolve`` after ``cancel``).  With
     ``require_terminal=True`` (a drained service) every ticket must have
     reached exactly one terminal event.
+
+    Sharded traces (events tagged ``shard=...``) additionally pin sticky
+    placement: every shard-tagged event of one ticket must name the same
+    shard — a ticket observed on two shards is cross-shard leakage, which
+    the broker's sticky affinity forbids (cancel/preempt/resume all stay
+    on the home shard).
     """
     issues: list[str] = []
     state: dict[int, str] = {}
     preempted: set[int] = set()
     cancel_requested: set[int] = set()
+    shard_of: dict[int, int] = {}
     for e in events:
         if e.ticket is None or e.kind in ("dispatch", "span",
                                           "deadline_reject"):
@@ -166,6 +179,13 @@ def validate_lifecycle(events: list[Event],
         tid, kind = e.ticket, e.kind
         cur = state.get(tid, "new")
         where = f"ticket {tid} seq={e.seq}"
+        sh = e.data.get("shard")
+        if sh is not None:
+            home = shard_of.setdefault(tid, sh)
+            if sh != home:
+                issues.append(f"{where}: {kind!r} on shard {sh} but the "
+                              f"ticket's home shard is {home} (sticky "
+                              "placement forbids cross-shard leakage)")
         if cur == "terminal":
             issues.append(f"{where}: {kind!r} after a terminal event")
             continue

@@ -45,13 +45,16 @@ def _profiler_scope(name: str):
 
 @contextlib.contextmanager
 def phase_span(recorder, phase: str, *, segment: int | None = None,
-               profiler: bool = False, compiles: bool = False):
+               profiler: bool = False, compiles: bool = False,
+               shard: int | None = None):
     """Time one phase into ``recorder`` (no-op when it is absent/disabled).
 
     Emits ``span`` with ``phase`` and ``dur_s``; with ``compiles=True``
     also ``episode_compiles``/``selector_compiles`` deltas across the
-    phase.  The span is emitted even when the body raises (a crashed
-    dispatch still shows up in the record — that is the point).
+    phase; with ``shard`` set, the emitting engine's shard id (the sharded
+    service runs one segment cycle per shard, so spans must say whose
+    phase they time).  The span is emitted even when the body raises (a
+    crashed dispatch still shows up in the record — that is the point).
     """
     if phase not in PHASES:
         raise ValueError(f"unknown phase {phase!r} (known: {PHASES})")
@@ -69,6 +72,8 @@ def phase_span(recorder, phase: str, *, segment: int | None = None,
             yield
     finally:
         data = {"phase": phase, "dur_s": time.perf_counter() - t0}
+        if shard is not None:
+            data["shard"] = shard
         if compiles:
             e1, s1 = _cache_sizes()
             data["episode_compiles"] = e1 - e0

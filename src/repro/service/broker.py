@@ -5,10 +5,16 @@
 back) while a lane-compacting episode stays resident on device; between
 bounded jitted segments the broker refills the device queue from its
 admission buffer, banks finished runs out of the segment's output buffers,
-and resolves tickets.  Determinism contract: an outcome is a function of
-its request alone — bit-identical to the sequential oracle no matter the
-arrival order, priorities, segment pacing, or what else shared the lanes
-(``tests/test_streaming_service.py`` pins it).
+and resolves tickets.  With ``config.num_shards > 1`` the broker runs one
+resident engine *per shard* — each with its own device, admission buffer
+and metrics recorder — and routes every new ticket to a home shard at
+admission (``service/placement.py``; sticky for the ticket's life, so
+cancel/preempt/resume stay single-shard).  Determinism contract: an
+outcome is a function of its request alone — bit-identical to the
+sequential oracle no matter the arrival order, priorities, segment pacing,
+shard count, or what else shared the lanes
+(``tests/test_streaming_service.py`` and ``tests/test_sharded_service.py``
+pin it).
 
 Two driving modes share all of that:
 
@@ -31,8 +37,10 @@ import time
 from repro.core.optimizer import Outcome, RunRequest
 from repro.jobs.tables import JobTable
 from repro.obs import FlightRecorder
+from repro.service import placement
 from repro.service.config import ServiceConfig
-from repro.service.engine import SegmentEngine, SegmentReport
+from repro.service.engine import (SegmentEngine, SegmentReport,
+                                  ShardedEngine)
 from repro.service.metrics import MetricsRecorder, ServiceMetrics
 
 __all__ = ["DeadlineUnmeetable", "QueueFull", "StreamingTuner",
@@ -88,6 +96,7 @@ class TuningTicket:
         self.resolved_at: float | None = None
         self.deadline: float | None = None   # absolute perf_counter SLO
         self.preemptions = 0                 # boundary evictions survived
+        self.shard: int | None = None        # home shard (sticky for life)
         # Engine-managed: replayed bootstrap rows, budget B, job index.
         self.rows = None
         self.budget: float | None = None
@@ -227,6 +236,43 @@ class _AdmissionBuffer:
             return len(self._front) + len(self._back)
 
 
+def _merge_reports(reps: list[SegmentReport],
+                   lane_slots: int) -> SegmentReport:
+    """Fan-in of per-shard segment reports into one service-level report.
+
+    Exactly one report passes through unchanged, so the ``num_shards=1``
+    service returns byte-identical reports to the pre-sharding broker.
+    Several merge by summing the work counters and taking the max wall
+    clock (the segments ran concurrently — summed steps over max wall IS
+    the fleet throughput); ``lane_slots`` becomes the fleet total.  A
+    merged report's ``occupancy`` is a conservative lower bound (steps are
+    summed across shards while each shard only held its own slots) — exact
+    aggregate occupancy comes from ``MetricsRecorder.aggregate``, which
+    keeps per-shard denominators.
+    """
+    if len(reps) == 1:
+        return reps[0]
+    if not reps:
+        return SegmentReport(steps=0, busy_slot_steps=0,
+                             lane_slots=lane_slots, wall_seconds=0.0,
+                             seated=0, injected=0, consumed=0,
+                             completed=0, in_flight=0)
+    return SegmentReport(
+        steps=sum(r.steps for r in reps),
+        busy_slot_steps=sum(r.busy_slot_steps for r in reps),
+        lane_slots=sum(r.lane_slots for r in reps),
+        wall_seconds=max(r.wall_seconds for r in reps),
+        seated=sum(r.seated for r in reps),
+        injected=sum(r.injected for r in reps),
+        consumed=sum(r.consumed for r in reps),
+        completed=sum(r.completed for r in reps),
+        in_flight=sum(r.in_flight for r in reps),
+        evicted=sum(r.evicted for r in reps),
+        resumed=sum(r.resumed for r in reps),
+        dropped=sum(r.dropped for r in reps),
+    )
+
+
 class StreamingTuner:
     """A long-lived tuning endpoint over a device-resident episode.
 
@@ -249,10 +295,16 @@ class StreamingTuner:
         # single attribute check (the zero-perturbation rule).
         self.recorder = FlightRecorder(capacity=self.config.trace_capacity,
                                        enabled=self.config.trace)
-        self._engine = SegmentEngine(jobs, settings, self.config,
-                                     recorder=self.recorder)
-        self._admission = _AdmissionBuffer()
-        self._metrics = MetricsRecorder(self.config.lane_slots)
+        # One resident engine, admission buffer and metrics recorder per
+        # shard (engine-per-device; service/placement.py routes tickets).
+        # num_shards=1 degenerates to the classic single-engine service.
+        self._engines = ShardedEngine(jobs, settings, self.config,
+                                      recorder=self.recorder)
+        self._admissions = [_AdmissionBuffer()
+                            for _ in range(self.num_shards)]
+        self._shard_metrics = [MetricsRecorder(self.config.lane_slots)
+                               for _ in range(self.num_shards)]
+        self._rr = 0                         # round-robin placement cursor
         self._cond = threading.Condition()
         self._pump_lock = threading.RLock()
         self._outstanding = 0
@@ -261,6 +313,25 @@ class StreamingTuner:
         self._worker: threading.Thread | None = None
         self._stopping = False
         self._failure: BaseException | None = None
+
+    # Shard-0 aliases: the single-shard internals every existing consumer
+    # (tests, benchmarks, scripts) pokes at.  With num_shards=1 these ARE
+    # the service's whole state, exactly as before sharding.
+    @property
+    def num_shards(self) -> int:
+        return self.config.num_shards
+
+    @property
+    def _engine(self) -> SegmentEngine:
+        return self._engines.shards[0]
+
+    @property
+    def _admission(self) -> _AdmissionBuffer:
+        return self._admissions[0]
+
+    @property
+    def _metrics(self) -> MetricsRecorder:
+        return self._shard_metrics[0]
 
     # ------------------------------------------------------------------ #
     # Admission
@@ -297,17 +368,19 @@ class StreamingTuner:
                 raise ValueError("pass a RunRequest, or at least job= and "
                                  "seed=")
             request = RunRequest(job, seed, budget_b, bootstrap)
-        self._engine.job_index(request.job)      # eager registration check
+        self._engines.job_index(request.job)     # eager registration check
         if deadline is not None:
             if deadline <= 0:
                 raise ValueError("deadline must be > 0 seconds from now")
-            floor = self._metrics.latency_floor()
+            floor = self._latency_floor()
             if (self.config.deadline_policy == "reject"
                     and floor is not None and deadline < floor):
-                self._metrics.record_deadline_reject()
+                with self._cond:                 # account on the would-be
+                    d = self._place_shard()      # home shard
+                self._shard_metrics[d].record_deadline_reject()
                 self.recorder.emit("deadline_reject", job=request.job.name,
                                    seed=request.seed, deadline_s=deadline,
-                                   floor_s=floor)
+                                   floor_s=floor, shard=d)
                 raise DeadlineUnmeetable(
                     f"deadline {deadline:.3g}s is below this service's "
                     f"observed resolution floor {floor:.3g}s")
@@ -327,6 +400,11 @@ class StreamingTuner:
                     if deadline_abs is not None:
                         ticket.deadline = (ticket.submitted_at
                                            + deadline_abs)
+                    # Placement happens exactly once, at admission, against
+                    # the loads of that instant; the ticket then sticks to
+                    # its home shard for life (cancel/preempt/resume are
+                    # single-shard operations).
+                    ticket.shard = self._place_shard()
                     self._outstanding += 1
                     break
                 if not block:
@@ -345,11 +423,12 @@ class StreamingTuner:
         # outrun the admit event in the record.
         self.recorder.emit("submit", ticket=ticket.id,
                            job=request.job.name, seed=request.seed,
-                           priority=priority)
+                           priority=priority, shard=ticket.shard)
         self.recorder.emit("admit", ticket=ticket.id,
-                           backlog=len(self._admission))
-        self._admission.push(ticket)
-        self._metrics.record_submit()
+                           backlog=len(self._admissions[ticket.shard]),
+                           shard=ticket.shard)
+        self._admissions[ticket.shard].push(ticket)
+        self._shard_metrics[ticket.shard].record_submit()
         with self._cond:
             if self._failure is not None:
                 # The worker died between our admission-counter increment
@@ -367,6 +446,29 @@ class StreamingTuner:
     def _check_deadline(deadline, what: str) -> None:
         if deadline is not None and time.perf_counter() > deadline:
             raise TimeoutError(f"{what} timed out")
+
+    def _place_shard(self, home: int | None = None) -> int:
+        """Choose a ticket's home shard (``config.placement_policy``) over
+        the instantaneous loads ``backlog + seated`` of each shard.  Called
+        under ``self._cond`` at admission; the choice is sticky for the
+        ticket's life (resume re-queues to the home shard directly)."""
+        n = self.num_shards
+        if n == 1:
+            return 0
+        loads = [len(self._admissions[d])
+                 + self._engines.shards[d].in_flight() for d in range(n)]
+        d = placement.choose_shard(self.config.placement_policy, loads,
+                                   home=home, rr=self._rr)
+        self._rr += 1
+        return d
+
+    def _latency_floor(self) -> float | None:
+        """Fastest resolution any shard has produced (deadline admission
+        uses the service-wide floor: a reject must be provable no matter
+        which shard would serve the ticket)."""
+        floors = [m.latency_floor() for m in self._shard_metrics]
+        floors = [f for f in floors if f is not None]
+        return min(floors) if floors else None
 
     # ------------------------------------------------------------------ #
     # Cancellation
@@ -392,36 +494,40 @@ class StreamingTuner:
         never resolve twice."""
         if ticket._event.is_set():
             return
+        home = self._engines.home(ticket)
         if partial is None:
-            partial = self._engine.partial_outcome(ticket)
+            partial = home.partial_outcome(ticket)
         ticket._partial = partial
         ticket._cancelled = True
         ticket.resolved_at = time.perf_counter()
-        self._metrics.record_cancel()
+        self._shard_metrics[home.shard_id].record_cancel()
         self.recorder.emit("cancel", ticket=ticket.id,
-                           had_partial=partial is not None)
+                           had_partial=partial is not None,
+                           shard=home.shard_id)
         with self._cond:
             self._outstanding -= 1
             ticket._event.set()
             self._cond.notify_all()
 
-    def _preemption_victim(self, evicting: list, staged: list,
-                           depth: int) -> TuningTicket | None:
-        """The seated ticket to preempt this segment, or None.
+    def _preemption_victim(self, engine: SegmentEngine, evicting: list,
+                           staged: list, depth: int) -> TuningTicket | None:
+        """The seated ticket to preempt on ``engine`` this segment, or
+        None.  Per shard: pressure, seats and candidates are all the home
+        shard's own — preemption never reaches across shards.
 
-        Preemption fires only under real pressure: the backlog depth at
-        pump start exceeded ``high_water``, every seat is occupied, and
-        the best pending priority is *strictly* better than the worst
-        seated one (strict, so a re-queued victim can never evict itself
-        — no thrash, no livelock).  The victim is the lowest-priority
-        seated run, latest admission breaking ties.
+        Preemption fires only under real pressure: the shard's backlog
+        depth at pump start exceeded ``high_water``, every seat is
+        occupied, and the best pending priority is *strictly* better than
+        the worst seated one (strict, so a re-queued victim can never
+        evict itself — no thrash, no livelock).  The victim is the
+        lowest-priority seated run, latest admission breaking ties.
         """
         hw = self.config.high_water
         if hw is None or depth <= hw or not staged:
             return None
-        if self._engine.in_flight() < self.config.lane_slots:
+        if engine.in_flight() < self.config.lane_slots:
             return None                       # an idle seat serves instead
-        cands = [t for t in self._engine._slot_tickets
+        cands = [t for t in engine._slot_tickets
                  if t is not None and not t._cancel_requested
                  and not any(t is e for e in evicting)]
         if not cands:
@@ -434,12 +540,15 @@ class StreamingTuner:
     # Pumping
     # ------------------------------------------------------------------ #
     def pump(self) -> SegmentReport:
-        """Run one bounded segment: resolve tombstoned (cancelled)
-        backlog, refill the device queue from the admission buffer, evict
-        cancel-requested or preempted seats at the boundary, advance up to
-        ``step_quota`` steps, harvest and resolve finished runs.  Safe to
-        call concurrently with submits; segment execution itself is
-        serialized."""
+        """Run one bounded segment on every busy shard: resolve tombstoned
+        (cancelled) backlog, refill each shard's device queue from its
+        admission buffer, evict cancel-requested or preempted seats at the
+        boundary, advance up to ``step_quota`` steps, harvest and resolve
+        finished runs.  Busy shards run their segments concurrently — one
+        host thread per shard, each engine's arrays committed to its own
+        device, so the device work overlaps.  Safe to call concurrently
+        with submits; pump itself is serialized.  Returns the per-shard
+        reports merged (``num_shards=1``: the single report, unchanged)."""
         with self._pump_lock:
             if self._failure is not None:
                 # A failed service must not re-fill the device: the worker's
@@ -447,84 +556,140 @@ class StreamingTuner:
                 # has swept must stay failed.
                 raise RuntimeError("tuning service already failed") \
                     from self._failure
-            for t in self._admission.purge_cancelled():
-                self._finish_cancel(t)
-            depth = len(self._admission)      # admitted, not yet staged
-            staged = self._admission.stage(
-                self._engine.c_dim + self.config.lane_slots
-                - self._engine.in_flight(),
-                aging_rate=self.config.aging_rate)
-            for t in staged:
-                self.recorder.emit("stage", ticket=t.id,
-                                   priority=t.priority)
-            # Boundary evictions: tombstoned seats always; plus at most one
-            # preemption when the backlog is past the high-water mark.
-            evict = [t for t in self._engine._slot_tickets
-                     if t is not None and t._cancel_requested]
-            victim = self._preemption_victim(evict, staged, depth)
-            if victim is not None:
-                evict.append(victim)
-            # Early-exit at the low-water mark only pays off if there is
-            # backlog left to inject afterwards; otherwise run the segment
-            # to its quota (or to drained).
-            low = (self.config.resolved_low_water()
-                   if len(self._admission) else 0)
-            try:
-                (resolved, leftover, dropped, evicted,
-                 rep) = self._engine.run_segment(staged, evict, low,
-                                                 self.config.step_quota)
-            except BaseException:
-                # Don't strand staged tickets: whatever was not seated goes
-                # back to the backlog (seated ones live in the engine's
-                # slot bookkeeping, which the failure paths cover).
-                seated = self._engine._slot_tickets
-                self._admission.restage(
-                    [t for t in staged
-                     if not any(t is s for s in seated)])
-                raise
-            self._admission.restage(leftover)
-            for t in leftover:
-                self.recorder.emit("restage", ticket=t.id)
-            now = time.perf_counter()
-            for ticket, outcome in resolved:
-                ticket._outcome = outcome
-                ticket.resolved_at = now
-                missed = (ticket.deadline is not None
-                          and now > ticket.deadline)
-                if missed:
-                    self._metrics.record_slo_miss()
-                self._metrics.record_resolve(now - ticket.submitted_at,
-                                             outcome.nex)
-                self.recorder.emit("resolve", ticket=ticket.id,
-                                   latency_s=now - ticket.submitted_at,
-                                   nex=outcome.nex, slo_missed=missed)
-                ticket._event.set()
-            for t in dropped:                 # tombstoned at seating time
-                self._finish_cancel(t)
-            for t, rows, partial in evicted:
-                if t._cancel_requested:
-                    self._finish_cancel(t, partial)
-                else:
-                    # Preempted: the banked carry rows ARE the resumable
-                    # request — reseating them replays the rest of the run
-                    # bit-identically (prepare() is idempotent on rows).
-                    t.rows = rows
-                    t.preemptions += 1
-                    t._pending_resume = True
-                    self._metrics.record_preempt()
-                    self.recorder.emit("preempt", ticket=t.id,
-                                       preemptions=t.preemptions)
-                    self._admission.push(t)
-            if rep.resumed:
-                self._metrics.record_resume(rep.resumed)
-            if rep.steps:
-                self._metrics.record_segment(rep.steps, rep.busy_slot_steps,
-                                             rep.wall_seconds, depth)
+            plans = []
+            for d in range(self.num_shards):
+                adm = self._admissions[d]
+                eng = self._engines.shards[d]
+                for t in adm.purge_cancelled():
+                    self._finish_cancel(t)
+                depth = len(adm)              # admitted, not yet staged
+                staged = adm.stage(
+                    eng.c_dim + self.config.lane_slots - eng.in_flight(),
+                    aging_rate=self.config.aging_rate)
+                for t in staged:
+                    self.recorder.emit("stage", ticket=t.id,
+                                       priority=t.priority, shard=d)
+                # Boundary evictions: tombstoned seats always; plus at most
+                # one preemption per shard when its own backlog is past the
+                # high-water mark.
+                evict = [t for t in eng._slot_tickets
+                         if t is not None and t._cancel_requested]
+                victim = self._preemption_victim(eng, evict, staged, depth)
+                if victim is not None:
+                    evict.append(victim)
+                # Early-exit at the low-water mark only pays off if there
+                # is backlog left to inject afterwards; otherwise run the
+                # segment to its quota (or to drained).
+                low = (self.config.resolved_low_water()
+                       if len(adm) else 0)
+                plans.append((d, eng, adm, staged, evict, low, depth))
+            results = self._run_segments(plans)
+            reps, resolved_tickets, failure = [], [], None
+            for (d, eng, adm, staged, evict, low, depth), res in \
+                    zip(plans, results):
+                if isinstance(res, BaseException):
+                    # Don't strand staged tickets: whatever was not seated
+                    # goes back to that shard's backlog (seated ones live
+                    # in the engine's slot bookkeeping, which the failure
+                    # paths cover).  Other shards' results still resolve
+                    # below; the first failure re-raises after that.
+                    seated = eng._slot_tickets
+                    adm.restage([t for t in staged
+                                 if not any(t is s for s in seated)])
+                    if failure is None:
+                        failure = res
+                    continue
+                if res is None:               # idle shard: nothing ran
+                    continue
+                resolved, leftover, dropped, evicted, rep = res
+                metrics = self._shard_metrics[d]
+                adm.restage(leftover)
+                for t in leftover:
+                    self.recorder.emit("restage", ticket=t.id, shard=d)
+                now = time.perf_counter()
+                for ticket, outcome in resolved:
+                    ticket._outcome = outcome
+                    ticket.resolved_at = now
+                    missed = (ticket.deadline is not None
+                              and now > ticket.deadline)
+                    if missed:
+                        metrics.record_slo_miss()
+                    metrics.record_resolve(now - ticket.submitted_at,
+                                           outcome.nex)
+                    self.recorder.emit("resolve", ticket=ticket.id,
+                                       latency_s=now - ticket.submitted_at,
+                                       nex=outcome.nex, slo_missed=missed,
+                                       shard=d)
+                    ticket._event.set()
+                for t in dropped:             # tombstoned at seating time
+                    self._finish_cancel(t)
+                for t, rows, partial in evicted:
+                    if t._cancel_requested:
+                        self._finish_cancel(t, partial)
+                    else:
+                        # Preempted: the banked carry rows ARE the
+                        # resumable request — reseating them replays the
+                        # rest of the run bit-identically (prepare() is
+                        # idempotent on rows).  Sticky affinity: straight
+                        # back to the home shard's own backlog.
+                        t.rows = rows
+                        t.preemptions += 1
+                        t._pending_resume = True
+                        metrics.record_preempt()
+                        self.recorder.emit("preempt", ticket=t.id,
+                                           preemptions=t.preemptions,
+                                           shard=d)
+                        adm.push(t)
+                if rep.resumed:
+                    metrics.record_resume(rep.resumed)
+                if rep.steps:
+                    metrics.record_segment(rep.steps, rep.busy_slot_steps,
+                                           rep.wall_seconds, depth)
+                resolved_tickets.extend(t for t, _ in resolved)
+                reps.append(rep)
             with self._cond:
-                self._outstanding -= len(resolved)
-                self._unharvested.extend(t for t, _ in resolved)
+                self._outstanding -= len(resolved_tickets)
+                self._unharvested.extend(resolved_tickets)
                 self._cond.notify_all()
-            return rep
+            if failure is not None:
+                raise failure
+            return _merge_reports(reps, self.config.lane_slots)
+
+    def _run_segments(self, plans) -> list:
+        """Execute the busy shards' segments; returns one slot per plan —
+        the ``run_segment`` 5-tuple, the exception it raised, or None for
+        an idle shard that was skipped.  A single busy shard (always the
+        case at ``num_shards=1``) runs inline on the calling thread —
+        byte-identical to the pre-sharding pump; several busy shards run
+        on one host thread each so their device work overlaps
+        (``block_until_ready`` releases the GIL while a device computes).
+        """
+        busy = [i for i, (d, eng, adm, staged, evict, low, depth)
+                in enumerate(plans)
+                if staged or evict or eng.in_flight()]
+        if not busy:
+            busy = [0]            # keep "pump always runs a segment"
+        results: list = [None] * len(plans)
+
+        def run(i: int) -> None:
+            d, eng, adm, staged, evict, low, depth = plans[i]
+            try:
+                results[i] = eng.run_segment(staged, evict, low,
+                                             self.config.step_quota)
+            except BaseException as e:        # surfaced by the caller
+                results[i] = e
+
+        if len(busy) == 1:
+            run(busy[0])
+        else:
+            threads = [threading.Thread(target=run, args=(i,),
+                                        name=f"shard-segment-{plans[i][0]}")
+                       for i in busy]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+        return results
 
     def drain(self, timeout: float | None = None) -> list[Outcome]:
         """Block until every outstanding request is resolved (pumping
@@ -611,12 +776,18 @@ class StreamingTuner:
                     self._failure = e
                     self._cond.notify_all()
                 # The pump lock serializes this sweep against any inline
-                # pump already mutating the back buffer; _failure being
-                # set keeps later submits/pumps from re-filling it.
+                # pump already mutating the back buffers; _failure being
+                # set keeps later submits/pumps from re-filling them.
+                # Every shard's backlog and seats get swept — a failure
+                # anywhere fails the whole service.
                 with self._pump_lock:
-                    backlog = self._admission.stage(
-                        len(self._admission) + 2 * self.config.lane_slots)
-                    seated = list(self._engine._slot_tickets)
+                    backlog: list = []
+                    seated: list = []
+                    for d in range(self.num_shards):
+                        adm = self._admissions[d]
+                        backlog.extend(adm.stage(
+                            len(adm) + 2 * self.config.lane_slots))
+                        seated.extend(self._engines.shards[d]._slot_tickets)
                 for t in backlog + seated:
                     # Skip tickets an interleaved inline pump already
                     # resolved — their outcomes are valid.
@@ -645,12 +816,19 @@ class StreamingTuner:
         return self.recorder.dump_jsonl(path)
 
     def metrics(self) -> ServiceMetrics:
-        return self._metrics.snapshot()
+        """Service-wide metrics: the per-shard recorders aggregated
+        (``num_shards=1`` is exactly the single recorder's snapshot)."""
+        return MetricsRecorder.aggregate(self._shard_metrics)
+
+    def shard_metrics(self) -> list[ServiceMetrics]:
+        """One :class:`ServiceMetrics` snapshot per shard, by shard id."""
+        return [m.snapshot() for m in self._shard_metrics]
 
     def reset_metrics(self) -> None:
         """Zero the counters (keeps compiled programs and episode state) —
         call after a warmup pass so gates measure steady state."""
-        self._metrics.reset()
+        for m in self._shard_metrics:
+            m.reset()
 
     @property
     def outstanding(self) -> int:

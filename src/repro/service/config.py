@@ -97,6 +97,23 @@ class ServiceConfig:
     scope, so captured device traces show the phases by name.  Requires
     ``trace=True``."""
 
+    num_shards: int = 1
+    """Resident engines the service runs, one per shard — each with its
+    own slot carry, device queue and tables, committed to
+    ``jax.devices()[shard % n_devices]`` (``service/placement.py``).  1 =
+    the classic single-engine service (arrays stay uncommitted on the
+    default device).  Shard count is pure capacity: every run's Outcome is
+    byte-identical to the sequential oracle regardless of ``num_shards``
+    or which shard served it (``tests/test_sharded_service.py``)."""
+
+    placement_policy: str = "least_backlog"
+    """How the broker routes a *new* ticket to a shard:
+    ``"least_backlog"`` picks the shard with the fewest unfinished tickets
+    (lowest id breaking ties), ``"round_robin"`` rotates.  Tickets are
+    sticky: once placed, cancel/preempt/resume all stay on the home shard.
+    Placement reorders work across engines — it can never change an
+    Outcome."""
+
     bucket: tuple[int, int, int] | None = None
     """Geometry bucket ``(m, f, t)`` the registered jobs' spaces are
     right-padded into (see ``repro.core.space.GeometryBucket``).  None =
@@ -131,6 +148,12 @@ class ServiceConfig:
         if self.trace_profiler and not self.trace:
             raise ValueError("trace_profiler requires trace=True (profiler "
                              "scopes annotate the recorded spans)")
+        if self.num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        from repro.service.placement import PLACEMENT_POLICIES
+        if self.placement_policy not in PLACEMENT_POLICIES:
+            raise ValueError(f"placement_policy must be one of "
+                             f"{PLACEMENT_POLICIES}")
         if self.bucket is not None:
             if len(self.bucket) != 3 or any(int(w) < 1 for w in self.bucket):
                 raise ValueError("bucket must be three positive widths "

@@ -44,7 +44,7 @@ if TYPE_CHECKING:  # service <-> jobs import hygiene mirrors core's
     from repro.jobs.tables import JobTable
     from repro.service.config import ServiceConfig
 
-__all__ = ["SegmentEngine", "SegmentReport"]
+__all__ = ["SegmentEngine", "SegmentReport", "ShardedEngine"]
 
 _STATE_FIELDS = ("keys", "y", "mask", "beta", "explored", "n_exp")
 # queue-row field -> slot-carry field (only "keys" differs)
@@ -88,7 +88,8 @@ class SegmentEngine:
     """
 
     def __init__(self, jobs: list[JobTable], settings,
-                 config: ServiceConfig, recorder: FlightRecorder | None = None):
+                 config: ServiceConfig, recorder: FlightRecorder | None = None,
+                 *, shard_id: int = 0, device=None):
         if not jobs:
             raise ValueError("register at least one JobTable")
         if settings.policy == "rnd":
@@ -98,6 +99,12 @@ class SegmentEngine:
         self.jobs = list(jobs)
         self.settings = settings
         self.config = config
+        # Shard identity + placement (service/placement.py): a sharded
+        # service runs one engine per shard, every resident array committed
+        # to the shard's device.  device=None (single-engine service) keeps
+        # arrays uncommitted on the default device, exactly as before.
+        self.shard_id = int(shard_id)
+        self._device = device
         self.bucket = _resolve_bucket(self.jobs, config.bucket)
         job0 = self.jobs[0]
         self.m_dim = (job0.space.n_points if self.bucket is None
@@ -113,11 +120,17 @@ class SegmentEngine:
             pts, left, thr, self._valid = _queue_spaces(self.jobs,
                                                         self.bucket)
             u0 = None
-        self._space = (pts, left, thr)
+        self._space = tuple(self._place(x) for x in (pts, left, thr))
+        self._valid = self._place(self._valid)
         (self._cost, self._runtime, self._u, self._tmax,
          self._single) = _queue_tables(self.jobs, u0, self.bucket)
+        self._cost = self._place(self._cost)
+        self._runtime = self._place(self._runtime)
+        self._u = self._place(self._u)
+        self._tmax = self._place(self._tmax)
 
-        self._carry = _fresh_slot_carry(self.l_dim, self.m_dim, settings)
+        self._carry = _fresh_slot_carry(self.l_dim, self.m_dim, settings,
+                                        device=device)
         self._slot_tickets: list = [None] * self.l_dim
         self._slot_jids = np.zeros(self.l_dim, np.int32)
         # Cumulative wall/steps for the Outcome.select_seconds amortization
@@ -133,6 +146,13 @@ class SegmentEngine:
         self._segment_seq = 0
 
     # ------------------------------------------------------------------ #
+    def _place(self, x):
+        """Commit ``x`` to this shard's device (identity for the
+        single-engine service).  Pure placement — values are untouched."""
+        if self._device is None or x is None:
+            return x
+        return jax.device_put(x, self._device)
+
     def job_index(self, job) -> int:
         for k, j in enumerate(self.jobs):
             if job is j:
@@ -187,10 +207,12 @@ class SegmentEngine:
             self._slot_tickets[i] = t
             self._slot_jids[i] = t.jid
             self._recorder.emit("seat", ticket=t.id, slot=int(i),
-                                segment=self._segment_seq, via="host")
+                                segment=self._segment_seq, via="host",
+                                shard=self.shard_id)
             if t._pending_resume:
                 self._recorder.emit("resume", ticket=t.id, slot=int(i),
-                                    segment=self._segment_seq)
+                                    segment=self._segment_seq,
+                                    shard=self.shard_id)
         return staged[n:], n
 
     def _queue_arrays(self, staged: list) -> dict:
@@ -211,7 +233,7 @@ class SegmentEngine:
             if staged:
                 buf[:len(staged)] = np.concatenate([t.rows[f]
                                                     for t in staged])
-            queue[f] = jnp.asarray(buf)
+            queue[f] = self._place(jnp.asarray(buf))
         return queue
 
     def run_segment(self, staged: list, evict_tickets: list,
@@ -239,7 +261,8 @@ class SegmentEngine:
         self.prepare(staged)
         rec, seg, prof = self._recorder, self._segment_seq, self._profiler
         t0 = time.perf_counter()
-        with phase_span(rec, "seat", segment=seg, profiler=prof):
+        with phase_span(rec, "seat", segment=seg, profiler=prof,
+                        shard=self.shard_id):
             staged_q, seated = self._seat(staged)
         if len(staged_q) > self.c_dim:
             raise ValueError(f"staged {len(staged_q)} queue rows but device "
@@ -268,30 +291,34 @@ class SegmentEngine:
                 ev_rows[int(i)] = {f: host[f][i:i + 1].copy()
                                    for f in fields}
 
-        with phase_span(rec, "inject", segment=seg, profiler=prof):
+        with phase_span(rec, "inject", segment=seg, profiler=prof,
+                        shard=self.shard_id):
             queue = self._queue_arrays(staged_q)
             for j, t in enumerate(staged_q):
-                rec.emit("inject", ticket=t.id, segment=seg, row=j)
+                rec.emit("inject", ticket=t.id, segment=seg, row=j,
+                         shard=self.shard_id)
         if self._single:
             job_ids = None
         else:
-            job_ids = jnp.asarray(np.concatenate(
+            job_ids = self._place(jnp.asarray(np.concatenate(
                 [self._slot_jids,
                  np.array([t.jid for t in staged_q], np.int32),
-                 np.zeros(self.c_dim - len(staged_q), np.int32)]))
+                 np.zeros(self.c_dim - len(staged_q), np.int32)])))
         # dispatch = host-side trace/compile + launch; device_block = the
         # wait for the device to finish.  Splitting them is what lets the
         # report tell compile stalls from slow segments.
         with phase_span(rec, "dispatch", segment=seg, profiler=prof,
-                        compiles=True):
+                        compiles=True, shard=self.shard_id):
             carry, report = _episode_segment(
-                self._carry, queue, np.int32(len(staged_q)), jnp.asarray(ev),
+                self._carry, queue, np.int32(len(staged_q)),
+                self._place(jnp.asarray(ev)),
                 np.int32(low_water), np.int32(step_quota), job_ids,
                 self._cost,
                 self._runtime if self.settings.timeout else None,
                 *self._space, self._valid, self._u, self._tmax,
                 self.settings)
-        with phase_span(rec, "device_block", segment=seg, profiler=prof):
+        with phase_span(rec, "device_block", segment=seg, profiler=prof,
+                        shard=self.shard_id):
             carry, report = jax.block_until_ready((carry, report))
         wall = time.perf_counter() - t0
         report = {k: np.asarray(v) for k, v in report.items()}
@@ -303,7 +330,8 @@ class SegmentEngine:
 
         # Harvest banked runs: out row i < L is the run seated in slot i at
         # segment start, row L + j the run injected as queue row j.
-        with phase_span(rec, "harvest", segment=seg, profiler=prof):
+        with phase_span(rec, "harvest", segment=seg, profiler=prof,
+                        shard=self.shard_id):
             done = np.asarray(report["out_done"])
             rid = np.asarray(carry["rid"])
             active = np.asarray(carry["active"])
@@ -312,9 +340,11 @@ class SegmentEngine:
             # host only learns it here, so the seat (and any resume) event
             # lands at harvest time — still before the row's harvest event.
             for t in staged_q[:consumed]:
-                rec.emit("seat", ticket=t.id, segment=seg, via="queue")
+                rec.emit("seat", ticket=t.id, segment=seg, via="queue",
+                         shard=self.shard_id)
                 if t._pending_resume:
-                    rec.emit("resume", ticket=t.id, segment=seg)
+                    rec.emit("resume", ticket=t.id, segment=seg,
+                             shard=self.shard_id)
             row_ticket = dict(enumerate(self._slot_tickets))
             for j, t in enumerate(staged_q):
                 row_ticket[self.l_dim + j] = t
@@ -324,7 +354,8 @@ class SegmentEngine:
                 resolved.append((t, self._outcome_from_row(t, report, int(r),
                                                            sel_s)))
                 rec.emit("harvest", ticket=t.id, segment=seg, row=int(r),
-                         nex=int(report["out_nexp"][r]))
+                         nex=int(report["out_nexp"][r]),
+                         shard=self.shard_id)
 
             # Evicted seats banked into their own out row (rid == slot at
             # segment start; out_done stays False there, so the loop above
@@ -336,7 +367,8 @@ class SegmentEngine:
                                 self._outcome_from_row(t, report, int(i),
                                                        sel_s)))
                 rec.emit("evict", ticket=t.id, slot=int(i), segment=seg,
-                         cancel=bool(t._cancel_requested))
+                         cancel=bool(t._cancel_requested),
+                         shard=self.shard_id)
 
             # Re-key in-flight runs to their seat and recycle queue rows.
             tickets = [row_ticket[int(rid[i])] if active[i] else None
@@ -344,10 +376,11 @@ class SegmentEngine:
             self._slot_tickets = tickets
             self._slot_jids = np.array([t.jid if t else 0 for t in tickets],
                                        np.int32)
-            carry["rid"] = jnp.where(jnp.asarray(active),
-                                     jnp.arange(self.l_dim, dtype=jnp.int32),
-                                     jnp.int32(-1))
-            carry["qhead"] = jnp.int32(0)
+            carry["rid"] = self._place(
+                jnp.where(jnp.asarray(active),
+                          jnp.arange(self.l_dim, dtype=jnp.int32),
+                          jnp.int32(-1)))
+            carry["qhead"] = self._place(jnp.int32(0))
             self._carry = carry
 
         leftover = staged_q[consumed:]
@@ -367,7 +400,8 @@ class SegmentEngine:
                  busy=int(report["busy"]), seated=seated,
                  injected=len(staged_q), consumed=consumed,
                  completed=len(resolved), evicted=len(evicted),
-                 in_flight=rep.in_flight, wall_s=wall)
+                 in_flight=rep.in_flight, wall_s=wall,
+                 shard=self.shard_id)
         self._segment_seq += 1
         return resolved, leftover, dropped, evicted, rep
 
@@ -407,3 +441,60 @@ class SegmentEngine:
         return _reconstruct_outcome(t.request.job, self.settings, t.budget,
                                     explored, cflags, billed,
                                     report["out_beta"][r], sel_s)
+
+
+class ShardedEngine:
+    """Facade over one :class:`SegmentEngine` per shard (engine-per-device,
+    the JetStream/MaxText serving pattern).
+
+    ``config.num_shards`` engines share one job fleet, one ``settings``
+    policy program and one flight recorder; each owns its *own* resident
+    slot carry, device queue and table copies, committed to
+    ``jax.devices()[shard % n]`` via ``service/placement.py`` shardings.
+    ``num_shards=1`` degenerates to a single engine with uncommitted
+    arrays — byte-identical to the pre-sharding service.
+
+    The broker routes every ticket to exactly one shard (sticky — see
+    ``placement.choose_shard``) and pumps each engine separately; this
+    facade only fans harvest-side queries in: aggregate ``in_flight`` and
+    home-shard ``partial_outcome`` lookups.  Every per-shard event the
+    engines emit carries its ``shard`` id, so one merged trace stays
+    attributable (``repro.obs.validate_lifecycle`` rejects cross-shard
+    ticket streams).
+    """
+
+    def __init__(self, jobs, settings, config: ServiceConfig,
+                 recorder: FlightRecorder | None = None):
+        from repro.service.placement import shard_shardings
+        n = config.num_shards
+        devices = shard_shardings(n) if n > 1 else [None]
+        self.shards = [SegmentEngine(jobs, settings, config,
+                                     recorder=recorder, shard_id=d,
+                                     device=devices[d])
+                       for d in range(n)]
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def bucket(self):
+        return self.shards[0].bucket
+
+    def job_index(self, job) -> int:
+        return self.shards[0].job_index(job)
+
+    def in_flight(self) -> int:
+        """Aggregate seated runs across every shard."""
+        return sum(e.in_flight() for e in self.shards)
+
+    def home(self, ticket) -> SegmentEngine:
+        """The engine holding ``ticket``'s state (shard 0 before any
+        placement — sticky affinity makes this stable for life)."""
+        shard = getattr(ticket, "shard", None)
+        return self.shards[0 if shard is None else shard]
+
+    def partial_outcome(self, ticket):
+        """Home-shard partial-Outcome lookup (harvest fan-in: the banked
+        carry rows of a preempted run live only in its home engine)."""
+        return self.home(ticket).partial_outcome(ticket)

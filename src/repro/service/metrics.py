@@ -161,6 +161,91 @@ class MetricsRecorder:
                 self._latency_min = latency_seconds
             self._latencies.append(latency_seconds)
 
+    @classmethod
+    def aggregate(cls, recorders) -> ServiceMetrics:
+        """Fold per-shard recorders into one service-wide snapshot.
+
+        Counters are summed RAW and only then derived: ``outstanding`` is
+        clamped *once* over the summed counters — summing the per-shard
+        clamped values would double-count whenever any shard sits below
+        its own clamp (a post-reset shard reads 0 outstanding even while
+        another shard's resolves drive the true aggregate down).  The
+        counter-balance invariant therefore holds service-wide:
+        ``submitted == resolved + cancelled + outstanding`` (pre-reset).
+
+        ``lane_occupancy`` keeps per-recorder denominators (each shard
+        only ever held its own slots); ``serve_seconds`` sums to
+        device-seconds of work (shards serve concurrently, so the rates
+        here are per device-second — fleet wall-clock rates belong to the
+        caller's own clock); percentiles pool the recent windows; the
+        latency floor is the min across shards.  Aggregating a single
+        recorder reproduces its :meth:`snapshot` exactly
+        (``tests/test_service_metrics.py`` pins it).
+        """
+        recorders = list(recorders)
+        if not recorders:
+            raise ValueError("aggregate needs at least one recorder")
+        raw = []
+        for r in recorders:
+            with r._lock:
+                raw.append({
+                    "slots": r._lane_slots, "segments": r._segments,
+                    "steps": r._steps, "busy": r._busy,
+                    "submitted": r._submitted, "resolved": r._resolved,
+                    "cancelled": r._cancelled, "preempted": r._preempted,
+                    "resumed": r._resumed, "slo_missed": r._slo_missed,
+                    "deadline_rejected": r._deadline_rejected,
+                    "explorations": r._explorations,
+                    "serve": r._serve_seconds, "depth_sum": r._depth_sum,
+                    "depth_max": r._depth_max,
+                    "latency_sum": r._latency_sum,
+                    "latencies": list(r._latencies),
+                    "floor": r._latency_min})
+
+        def tot(key):
+            return sum(row[key] for row in raw)
+
+        slots, segments, steps, busy = (tot("slots"), tot("segments"),
+                                        tot("steps"), tot("busy"))
+        submitted, resolved, cancelled = (tot("submitted"), tot("resolved"),
+                                          tot("cancelled"))
+        explorations, serve = tot("explorations"), tot("serve")
+        latency_sum, depth_sum = tot("latency_sum"), tot("depth_sum")
+        depth_max = max(row["depth_max"] for row in raw)
+        lat = np.asarray([x for row in raw for x in row["latencies"]],
+                         np.float64)
+        floors = [row["floor"] for row in raw if row["floor"] is not None]
+        occ_denom = sum(row["steps"] * row["slots"] for row in raw)
+        return ServiceMetrics(
+            lane_slots=slots,
+            segments=segments,
+            steps=steps,
+            busy_slot_steps=busy,
+            lane_occupancy=busy / max(occ_denom, 1),
+            submitted=submitted,
+            resolved=resolved,
+            cancelled=cancelled,
+            preempted=tot("preempted"),
+            resumed=tot("resumed"),
+            slo_missed=tot("slo_missed"),
+            deadline_rejected=tot("deadline_rejected"),
+            outstanding=max(submitted - resolved - cancelled, 0),
+            explorations=explorations,
+            serve_seconds=serve,
+            runs_per_second=resolved / serve if serve else 0.0,
+            explorations_per_second=(explorations / serve
+                                     if serve else 0.0),
+            queue_depth_max=depth_max,
+            queue_depth_mean=(depth_sum / segments if segments else 0.0),
+            latency_mean_s=(latency_sum / resolved if resolved else 0.0),
+            latency_p50_s=(float(np.percentile(lat, 50))
+                           if lat.size else 0.0),
+            latency_p95_s=(float(np.percentile(lat, 95))
+                           if lat.size else 0.0),
+            latency_p99_s=(float(np.percentile(lat, 99))
+                           if lat.size else 0.0),
+            latency_floor_s=min(floors) if floors else 0.0)
+
     def snapshot(self) -> ServiceMetrics:
         with self._lock:
             lat = np.asarray(self._latencies, np.float64)

@@ -1,9 +1,20 @@
-"""Shared fixtures. Tests must see exactly 1 CPU device (never set
-xla_force_host_platform_device_count here — that is dryrun.py's job)."""
+"""Shared fixtures.  The suite runs on 4 virtual CPU devices: the flag is
+set here, before anything imports jax, so the sharded-service tests
+(``tests/test_sharded_service.py``, ``tests/test_placement.py``) exercise
+real multi-device placement.  dryrun.py still sets its own (larger) count
+inside its own subprocess."""
 
-import jax
-import numpy as np
-import pytest
+import os
+
+# Appended last so it wins over any inherited device-count flag; must run
+# before the jax import below (the backend reads it at first init).
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4"
+                           ).strip()
+
+import jax  # noqa: E402  (after the flag, on purpose)
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 
 @pytest.fixture(scope="session")
@@ -12,7 +23,8 @@ def rng():
 
 
 @pytest.fixture(scope="session", autouse=True)
-def _single_device_guard():
-    # dry-run env leakage would silently change sharding tests
-    assert len(jax.devices()) == 1, "tests must run with 1 device"
+def _device_count_guard():
+    # The flag above must win: shard placement tests depend on exactly 4
+    # devices, and silent env leakage would change what they test.
+    assert len(jax.devices()) == 4, "tests must run with 4 virtual devices"
     yield

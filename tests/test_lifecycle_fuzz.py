@@ -16,6 +16,12 @@ lifecycle contract —
    after cancel, nothing after a terminal event — and its full-history
    event counts balance with the ``ServiceMetrics`` counters.
 
+The whole property also holds over a 2-shard fleet
+(``test_lifecycle_schedules_sharded``): counters must then balance per
+shard and in aggregate, no shard may leak a slot, and the merged
+shard-tagged trace must validate — which includes the sticky-affinity
+check (a ticket observed on two shards is a contract violation).
+
 Runs under real hypothesis when installed; under the deterministic
 ``_hypothesis_fallback`` shim otherwise, or when REPRO_NO_HYPOTHESIS is
 set.  Each drawn example executes ``REPRO_FUZZ_SCHEDULES`` derived
@@ -70,7 +76,8 @@ def _oracle(timeout: bool) -> list:
     return _ORACLE[timeout]
 
 
-def _run_schedule(rng: np.random.Generator, timeout: bool) -> None:
+def _run_schedule(rng: np.random.Generator, timeout: bool,
+                  num_shards: int = 1) -> None:
     """One random interleaving of lifecycle events, then the full
     contract check."""
     oracle = _oracle(timeout)
@@ -79,7 +86,7 @@ def _run_schedule(rng: np.random.Generator, timeout: bool) -> None:
         step_quota=int(rng.integers(2, 6)),
         high_water=0 if rng.random() < 0.5 else None,
         aging_rate=float(rng.choice([0.0, 1.0])),
-        deadline_policy="admit", trace=True)
+        deadline_policy="admit", trace=True, num_shards=num_shards)
     svc = StreamingTuner(_JOBS, _settings(timeout), cfg)
 
     picks = rng.choice(len(_REQUESTS), size=int(rng.integers(3, 7)),
@@ -130,11 +137,20 @@ def _run_schedule(rng: np.random.Generator, timeout: bool) -> None:
             assert (p.spend_trajectory
                     == full.spend_trajectory[:len(p.spend_trajectory)])
 
-    # 4) no slot leaks, counters balance
-    eng = svc._engine
-    assert eng.in_flight() == 0
-    assert not np.asarray(eng._carry["active"]).any()
+    # 4) no slot leaks on ANY shard; counters balance per shard AND in
+    #    aggregate (the aggregate sums raw counters before the single
+    #    outstanding clamp — no double counting)
+    for eng in svc._engines.shards:
+        assert eng.in_flight() == 0
+        assert not np.asarray(eng._carry["active"]).any()
     m = svc.metrics()
+    per = svc.shard_metrics()
+    for ms in per:
+        assert ms.submitted == ms.resolved + ms.cancelled
+        assert ms.outstanding == 0
+    for f in ("submitted", "resolved", "cancelled", "preempted",
+              "resumed", "slo_missed", "deadline_rejected"):
+        assert getattr(m, f) == sum(getattr(ms, f) for ms in per), f
     assert m.submitted == len(tickets)
     assert m.submitted == m.resolved + m.cancelled
     assert m.outstanding == 0
@@ -165,3 +181,15 @@ def test_lifecycle_schedules(block, timeout):
     for k in range(_SCHEDULES):
         rng = np.random.default_rng((block, k, int(timeout)))
         _run_schedule(rng, timeout)
+
+
+@settings(max_examples=6, deadline=None)
+@given(block=st.integers(0, 9), timeout=st.sampled_from([False, True]))
+def test_lifecycle_schedules_sharded(block, timeout):
+    """The same property over a 2-shard fleet: no interleaving of
+    lifecycle events or shard placement can break the contract — and the
+    merged shard-tagged trace must validate, which adds the sticky-
+    affinity (no cross-shard leakage) check to every schedule."""
+    for k in range(_SCHEDULES):
+        rng = np.random.default_rng((block, k, int(timeout), 2))
+        _run_schedule(rng, timeout, num_shards=2)

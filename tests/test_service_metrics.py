@@ -146,3 +146,123 @@ def test_zero_wall_segments_do_not_divide_by_zero():
 def test_invalid_window_rejected():
     with pytest.raises(ValueError, match="latency_window"):
         MetricsRecorder(lane_slots=1, latency_window=0)
+
+
+# --------------------------------------------------------------------------- #
+# Aggregation across shard recorders (MetricsRecorder.aggregate)
+# --------------------------------------------------------------------------- #
+import os  # noqa: E402
+
+try:
+    if os.environ.get("REPRO_NO_HYPOTHESIS"):
+        raise ImportError("fallback forced by REPRO_NO_HYPOTHESIS")
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # no-network CI: deterministic fallback
+    from _hypothesis_fallback import given, settings, st
+
+
+def _drive(rec: MetricsRecorder, rng: np.random.Generator,
+           events: int) -> None:
+    """Random but well-formed per-shard history."""
+    for _ in range(events):
+        k = int(rng.integers(0, 8))
+        if k == 0:
+            rec.record_submit()
+        elif k == 1:
+            rec.record_resolve(float(rng.uniform(0.01, 2.0)),
+                               int(rng.integers(1, 9)))
+        elif k == 2:
+            rec.record_cancel()
+        elif k == 3:
+            rec.record_segment(int(rng.integers(1, 9)),
+                               int(rng.integers(0, 17)),
+                               float(rng.uniform(0.001, 0.1)),
+                               int(rng.integers(0, 5)))
+        elif k == 4:
+            rec.record_preempt()
+        elif k == 5:
+            rec.record_resume()
+        elif k == 6:
+            rec.record_slo_miss()
+        else:
+            rec.record_deadline_reject()
+
+
+def test_aggregate_of_one_recorder_is_its_snapshot():
+    """Degenerate fleet: aggregating a single shard must reproduce its
+    own snapshot field for field (the num_shards=1 service's metrics()
+    are byte-identical to the pre-sharding broker's)."""
+    rng = np.random.default_rng(7)
+    rec = MetricsRecorder(lane_slots=3)
+    _drive(rec, rng, 200)
+    assert MetricsRecorder.aggregate([rec]) == rec.snapshot()
+
+
+def test_aggregate_outstanding_not_double_counted():
+    """THE aggregation bug this API was designed against: a shard reset
+    mid-flight clamps its own outstanding at 0, so summing per-shard
+    clamped values overcounts the fleet.  The aggregate must clamp once,
+    over raw summed counters."""
+    a, b = MetricsRecorder(lane_slots=2), MetricsRecorder(lane_slots=2)
+    for _ in range(3):
+        a.record_submit()
+    a.reset()                        # 3 in flight, counters zeroed
+    for _ in range(3):
+        a.record_resolve(0.1, 1)     # pre-reset submits resolving now
+    b.record_submit()
+    b.record_submit()
+    assert a.snapshot().outstanding == 0      # per-shard clamp active
+    assert b.snapshot().outstanding == 2
+    agg = MetricsRecorder.aggregate([a, b])
+    # raw sums: submitted 2, resolved 3 -> clamped once -> 0; the naive
+    # sum of clamped per-shard values would report 2 phantom tickets.
+    assert agg.outstanding == 0
+    assert agg.outstanding < (a.snapshot().outstanding
+                              + b.snapshot().outstanding)
+
+
+def test_aggregate_rejects_empty_fleet():
+    with pytest.raises(ValueError, match="at least one"):
+        MetricsRecorder.aggregate([])
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 999), shards=st.integers(1, 4))
+def test_aggregate_properties(seed, shards):
+    """Over random per-shard histories with mid-stream resets: counters
+    sum raw, outstanding clamps once (never above the naive per-shard
+    sum), the latency floor is the fleet min, percentiles pool the
+    windows, and the depth max is the fleet max."""
+    rng = np.random.default_rng(seed)
+    recs = [MetricsRecorder(lane_slots=int(rng.integers(1, 5)))
+            for _ in range(shards)]
+    for rec in recs:
+        _drive(rec, rng, int(rng.integers(0, 80)))
+        if rng.random() < 0.3:       # the clamp-activating wrinkle
+            rec.reset()
+            _drive(rec, rng, int(rng.integers(0, 40)))
+    per = [r.snapshot() for r in recs]
+    agg = MetricsRecorder.aggregate(recs)
+    for f in ("segments", "steps", "busy_slot_steps", "submitted",
+              "resolved", "cancelled", "preempted", "resumed",
+              "slo_missed", "deadline_rejected", "explorations"):
+        assert getattr(agg, f) == sum(getattr(m, f) for m in per), f
+    assert agg.lane_slots == sum(m.lane_slots for m in per)
+    assert agg.serve_seconds == pytest.approx(
+        sum(m.serve_seconds for m in per))
+    assert agg.queue_depth_max == max(m.queue_depth_max for m in per)
+    assert agg.outstanding == max(
+        agg.submitted - agg.resolved - agg.cancelled, 0)
+    assert agg.outstanding <= sum(m.outstanding for m in per)
+    floors = [m.latency_floor_s for m in per if m.latency_floor_s > 0]
+    assert agg.latency_floor_s == (min(floors) if floors else 0.0)
+    pooled = [x for r in recs for x in r._latencies]
+    if pooled:
+        assert agg.latency_p50_s == float(np.percentile(
+            np.asarray(pooled, np.float64), 50))
+        assert agg.latency_p99_s == float(np.percentile(
+            np.asarray(pooled, np.float64), 99))
+    else:
+        assert agg.latency_p50_s == 0.0
+    for f in agg.__dataclass_fields__:
+        assert np.isfinite(getattr(agg, f)), f

@@ -1,0 +1,162 @@
+"""Multi-device sharded serving: shard-count invariance.
+
+The sharded service (``ServiceConfig.num_shards``) runs one resident
+engine per shard, each committed to its own device, with the broker
+routing tickets via ``service/placement.py``.  The determinism contract
+says shard count is pure capacity: every run's Outcome — spend trajectory
+included — is byte-identical to the sequential oracle at ``num_shards``
+in {1, 2, 4} (tests/conftest.py forces 4 virtual CPU devices).  Alongside
+invariance, this file pins the compile economy (one segment executable
+per (geometry, shard device), none for repeat traffic), sticky placement
+(no cross-shard ticket leakage, in the trace and in the engines), and the
+per-device commitment of every shard's resident arrays.
+"""
+
+import jax
+import pytest
+
+from repro.core import RunRequest, Settings, episode_cache_size, run_queue
+from repro.jobs import synthetic_job
+from repro.obs import validate_lifecycle, validate_trace
+from repro.service import ServiceConfig, StreamingTuner
+from tests.test_batched_harness import (_assert_outcomes_equal,
+                                        _distinct_geometry_jobs)
+
+
+def _jobs(n=2):
+    return [synthetic_job(i, name=f"syn{i}") for i in range(n)]
+
+
+def _requests(jobs, n=9, seed0=410):
+    return [RunRequest(jobs[r % len(jobs)], seed=seed0 + r,
+                       budget_b=5.0 if r % 3 == 0 else 1.5)
+            for r in range(n)]
+
+
+def _serve(jobs, settings, reqs, num_shards, arrival=None, **cfg_kw):
+    cfg_kw.setdefault("lane_slots", 2)
+    cfg_kw.setdefault("queue_capacity", 3)
+    cfg_kw.setdefault("step_quota", 8)
+    cfg = ServiceConfig(num_shards=num_shards, trace=True, **cfg_kw)
+    svc = StreamingTuner(jobs, settings, cfg)
+    tickets = {}
+    for batch in arrival or [list(range(len(reqs)))]:
+        for r in batch:
+            tickets[r] = svc.submit(reqs[r])
+        svc.pump()                      # later batches land mid-episode
+    svc.drain()
+    return svc, [tickets[r].result() for r in range(len(reqs))]
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+def test_shard_count_invariance(num_shards):
+    """Outcomes and spend trajectories are bit-identical to the sequential
+    oracle at every shard count, submits landing mid-episode."""
+    jobs = _jobs()
+    s = Settings(policy="lynceus", la=1, k_gh=2, refit="frozen")
+    reqs = _requests(jobs)
+    seq = run_queue(reqs, s)
+    svc, outs = _serve(jobs, s, reqs, num_shards,
+                       arrival=[[3, 0, 6], [2, 5, 8], [1, 4, 7]])
+    _assert_outcomes_equal(seq, outs, recorder=svc.recorder,
+                           tag=f"shards{num_shards}")
+    events = svc.flight_record()
+    assert validate_trace(events) == []
+    assert validate_lifecycle(events, require_terminal=True) == []
+
+
+def test_shard_count_invariance_bucketed():
+    """Mixed-geometry jobs (the padded bucket program) stay oracle-exact
+    across the shard fleet."""
+    jobs = _distinct_geometry_jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = [RunRequest(jobs[r % 3], seed=230 + r, budget_b=1.5)
+            for r in range(6)]
+    seq = run_queue(reqs, s)
+    _, outs = _serve(jobs, s, reqs, 2, arrival=[[5, 0, 3], [1, 4, 2]])
+    _assert_outcomes_equal(seq, outs, tag="sharded-bucketed")
+
+
+def test_more_shards_than_devices():
+    """Modulo device mapping: 6 shards on 4 devices share devices and stay
+    oracle-exact (what keeps 1-device doc fences and CI runnable)."""
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = _requests(jobs, n=6, seed0=560)
+    seq = run_queue(reqs, s)
+    svc, outs = _serve(jobs, s, reqs, 6)
+    _assert_outcomes_equal(seq, outs, tag="shards>devices")
+    devs = jax.devices()
+    for d, eng in enumerate(svc._engines.shards):
+        arr = eng._carry["active"]
+        assert set(arr.devices()) == {devs[d % len(devs)]}
+
+
+def test_one_compile_per_shard_device():
+    """Compile economy of the fleet: the first sharded service compiles
+    exactly one segment executable per shard device (the program is one —
+    placement adds a per-device cache entry, nothing else); repeat traffic
+    of the same geometry, on a fresh service, compiles nothing."""
+    jobs = _jobs()
+    # Unique (lane_slots, queue_capacity, step_quota) so no other test's
+    # cache entries alias this one's.
+    kw = dict(lane_slots=4, queue_capacity=5, step_quota=9)
+    s = Settings(policy="la0", la=0, k_gh=2)
+    base = episode_cache_size()
+    _, _ = _serve(jobs, s, _requests(jobs, n=6, seed0=620), 2, **kw)
+    assert episode_cache_size() - base == 2
+    base = episode_cache_size()
+    _, _ = _serve(jobs, s, _requests(jobs, n=6, seed0=780), 2, **kw)
+    assert episode_cache_size() - base == 0
+
+
+def test_no_cross_shard_leakage():
+    """Sticky placement, observed three ways: every ticket's shard-tagged
+    events name exactly one shard; both shards actually served work; the
+    per-shard metrics balance to the aggregate."""
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    reqs = _requests(jobs, n=10, seed0=640)
+    svc, _ = _serve(jobs, s, reqs, 2, arrival=[[0, 1, 2, 3, 4],
+                                               [5, 6, 7, 8, 9]])
+    events = svc.flight_record()
+    assert validate_trace(events) == []
+    assert validate_lifecycle(events, require_terminal=True) == []
+    shards_of: dict[int, set] = {}
+    for e in events:
+        sh = e.data.get("shard")
+        if e.ticket is not None and sh is not None:
+            shards_of.setdefault(e.ticket, set()).add(sh)
+    assert len(shards_of) == len(reqs)
+    assert all(len(seen) == 1 for seen in shards_of.values())
+    assert {next(iter(seen)) for seen in shards_of.values()} == {0, 1}
+    per = svc.shard_metrics()
+    agg = svc.metrics()
+    assert all(m.submitted > 0 and m.resolved == m.submitted for m in per)
+    assert sum(m.submitted for m in per) == agg.submitted == len(reqs)
+    assert sum(m.resolved for m in per) == agg.resolved == len(reqs)
+    assert agg.outstanding == 0
+
+
+def test_shard_arrays_committed_per_device():
+    """Every shard's resident state — slot carry, device queue buffers,
+    space tables — lives on its own device."""
+    jobs = _jobs()
+    s = Settings(policy="la0", la=0, k_gh=2)
+    svc = StreamingTuner(jobs, s, ServiceConfig(lane_slots=2,
+                                                queue_capacity=2,
+                                                step_quota=6,
+                                                num_shards=4))
+    devs = jax.devices()
+    for d, eng in enumerate(svc._engines.shards):
+        expect = {devs[d]}
+        for k, v in eng._carry.items():
+            assert set(v.devices()) == expect, (d, k)
+        for arr in eng._space:
+            assert set(arr.devices()) == expect, (d, "space")
+    # num_shards=1 keeps arrays uncommitted exactly as before sharding
+    # (placement must not perturb the single-device service).
+    svc1 = StreamingTuner(jobs, s, ServiceConfig(lane_slots=2,
+                                                 queue_capacity=2,
+                                                 step_quota=6))
+    assert svc1._engines.shards[0]._device is None
